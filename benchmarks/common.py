@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: scheduling runs with a JSON result cache."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.costmodel import INF, CostModel
+from repro.core.baselines import ALL_METHODS
+from repro.core.hw import mcm_table_iii
+from repro.core.workloads import get_cnn
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+M_SAMPLES = 16          # inference batch streamed through the pipeline
+
+
+def _cache_path(name: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, name + ".json")
+
+
+def cached(name: str, fn, refresh: bool = False):
+    path = _cache_path(name)
+    if not refresh and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    out = fn()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def run_method(net: str, chips: int, method: str) -> dict:
+    g = get_cnn(net)
+    hw = mcm_table_iii(chips)
+    cost = CostModel(hw, m_samples=M_SAMPLES)
+    t0 = time.time()
+    sched = ALL_METHODS[method](g, cost, chips)
+    dt = time.time() - t0
+    if sched is None or sched.latency == INF:
+        return {"net": net, "chips": chips, "method": method, "valid": False,
+                "search_s": dt}
+    return {
+        "net": net, "chips": chips, "method": method, "valid": True,
+        "latency_s": sched.latency,
+        "throughput": cost.throughput(g, sched.latency),
+        "n_segments": len(sched.segments) or None,
+        "clusters_per_segment": [s.n_clusters for s in sched.segments],
+        "search_s": dt,
+    }

@@ -1,0 +1,81 @@
+"""Fig. 10: ResNet-152 x 256-chiplet case study.
+
+(a) per-cluster computational-load balance: Scope's merged clusters have a
+    lower load variance than the segmented pipeline's per-layer stages;
+(b) energy breakdown (MAC / SRAM / NoP / DRAM): roughly equal totals --
+    the throughput win comes from utilization, not an energy trade.
+Also reports the segment counts (paper: segmented=3 vs Scope=2).
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core.costmodel import CostModel
+from repro.core.baselines import schedule_scope, schedule_segmented
+from repro.core.energy import schedule_energy
+from repro.core.hw import mcm_table_iii
+from repro.core.workloads import get_cnn
+
+from .common import M_SAMPLES, cached
+
+NET, CHIPS = "resnet152", 256
+
+
+def _balance(graph, sched):
+    """Pipeline stage-matching quality: CV of per-cluster *beat times*
+    (the paper's Fig 10a 'balanced distribution with smaller variance')."""
+    times = [t for seg in sched.segments for t in seg.cluster_times]
+    if not times or statistics.mean(times) == 0:
+        return float("nan")
+    return statistics.pstdev(times) / statistics.mean(times)
+
+
+def run(refresh: bool = False):
+    def _go():
+        g = get_cnn(NET)
+        hw = mcm_table_iii(CHIPS)
+        cost = CostModel(hw, m_samples=M_SAMPLES)
+        seg = schedule_segmented(g, cost, CHIPS)
+        sc = schedule_scope(g, cost, CHIPS)
+        e_seg = schedule_energy(cost, g, seg)
+        e_sc = schedule_energy(cost, g, sc)
+        return {
+            "segmented": {
+                "latency_s": seg.latency,
+                "n_segments": len(seg.segments),
+                "clusters": [s.n_clusters for s in seg.segments],
+                "load_cv": _balance(g, seg),
+                "energy": e_seg.normalized(e_sc.total),
+                "energy_total_J": e_seg.total,
+            },
+            "scope": {
+                "latency_s": sc.latency,
+                "n_segments": len(sc.segments),
+                "clusters": [s.n_clusters for s in sc.segments],
+                "load_cv": _balance(g, sc),
+                "energy": e_sc.normalized(e_sc.total),
+                "energy_total_J": e_sc.total,
+            },
+            "speedup": seg.latency / sc.latency,
+            "energy_ratio": e_sc.total / e_seg.total,
+        }
+
+    return cached("fig10_case_study", _go, refresh)
+
+
+def report(r) -> list[str]:
+    lines = ["method,n_segments,load_cv,mac,sram,nop,dram,total_J"]
+    for m in ("segmented", "scope"):
+        d = r[m]
+        e = d["energy"]
+        lines.append(
+            f"{m},{d['n_segments']},{d['load_cv']:.3f},"
+            f"{e['mac']:.3f},{e['sram']:.3f},{e['nop']:.3f},{e['dram']:.3f},"
+            f"{d['energy_total_J']:.4e}"
+        )
+    lines.append(f"# scope speedup {r['speedup']:.2f}x at energy ratio "
+                 f"{r['energy_ratio']:.3f} (paper: ~equal energy)")
+    lines.append(f"# cluster-load CV: scope {r['scope']['load_cv']:.3f} vs "
+                 f"segmented {r['segmented']['load_cv']:.3f} (paper Fig 10a: "
+                 "scope more balanced)")
+    return lines

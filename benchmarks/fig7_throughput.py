@@ -1,0 +1,47 @@
+"""Fig. 7: normalized throughput of the four methods, 8 nets x 3 MCM scales.
+
+Paper claim reproduced: Scope achieves the best throughput everywhere, with
+the largest gain on the deepest network at scale (up to 1.73x over the
+segmented-pipeline SOTA).
+"""
+from __future__ import annotations
+
+from .common import cached, run_method
+
+NETS = ["alexnet", "vgg16", "darknet19", "resnet18", "resnet34", "resnet50",
+        "resnet101", "resnet152"]
+SCALES = [16, 64, 256]
+METHODS = ["sequential", "full_pipeline", "segmented", "scope"]
+
+
+def run(refresh: bool = False, nets=None, scales=None):
+    nets = nets or NETS
+    scales = scales or SCALES
+    rows = []
+    for net in nets:
+        for chips in scales:
+            def _one(net=net, chips=chips):
+                return [run_method(net, chips, m) for m in METHODS]
+            rows.extend(cached(f"fig7_{net}_{chips}", _one, refresh))
+    return rows
+
+
+def report(rows) -> list[str]:
+    lines = ["net,chips,sequential,full_pipeline,segmented,scope,scope_vs_segmented"]
+    by_key = {}
+    for r in rows:
+        by_key.setdefault((r["net"], r["chips"]), {})[r["method"]] = r
+    best_gain, best_key = 0.0, None
+    for (net, chips), d in sorted(by_key.items()):
+        tp = {m: (d[m]["throughput"] if d.get(m, {}).get("valid") else 0.0)
+              for m in METHODS}
+        gain = tp["scope"] / tp["segmented"] if tp.get("segmented") else float("nan")
+        if gain == gain and gain > best_gain:
+            best_gain, best_key = gain, (net, chips)
+        lines.append(
+            f"{net},{chips},{tp['sequential']:.0f},{tp['full_pipeline']:.0f},"
+            f"{tp['segmented']:.0f},{tp['scope']:.0f},{gain:.3f}"
+        )
+    lines.append(f"# max scope/segmented gain: {best_gain:.2f}x at {best_key} "
+                 f"(paper: up to 1.73x, deepest net at scale)")
+    return lines

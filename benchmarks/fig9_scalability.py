@@ -1,0 +1,56 @@
+"""Fig. 9: throughput scalability vs chiplet count at a fixed workload.
+
+Paper claims reproduced: Scope scales best; segmented grows slower; the
+fully-sequential method saturates (NoP-bound) and can even degrade; the
+fully-pipelined method lacks valid solutions at low chip counts.
+"""
+from __future__ import annotations
+
+from .common import cached, run_method
+
+CHIPS = [16, 32, 64, 128, 256]
+METHODS = ["sequential", "full_pipeline", "segmented", "scope"]
+NET = "resnet50"
+
+
+def run(refresh: bool = False, net: str = NET):
+    rows = []
+    for chips in CHIPS:
+        def _one(chips=chips):
+            return [run_method(net, chips, m) for m in METHODS]
+        rows.extend(cached(f"fig9_{net}_{chips}", _one, refresh))
+    return rows
+
+
+def report(rows) -> list[str]:
+    by = {}
+    for r in rows:
+        by.setdefault(r["method"], {})[r["chips"]] = r
+    lines = ["method," + ",".join(f"x{c}" for c in CHIPS) + "  (normalized to 16 chips)"]
+    for m in METHODS:
+        base = by[m].get(CHIPS[0], {})
+        base_tp = base.get("throughput") if base.get("valid") else None
+        cells = []
+        for c in CHIPS:
+            r = by[m].get(c, {})
+            if not r.get("valid"):
+                cells.append("invalid")
+            elif base_tp:
+                cells.append(f"{r['throughput'] / base_tp:.2f}")
+            else:
+                cells.append(f"abs:{r['throughput']:.0f}")
+        lines.append(f"{m}," + ",".join(cells))
+    lines.append("method," + ",".join(f"x{c}" for c in CHIPS) + "  (absolute samples/s)")
+    for m in METHODS:
+        cells = []
+        for c in CHIPS:
+            r = by[m].get(c, {})
+            cells.append(f"{r['throughput']:.0f}" if r.get("valid") else "invalid")
+        lines.append(f"{m}," + ",".join(cells))
+    best = all(
+        by["scope"][c]["throughput"] >= by["segmented"][c]["throughput"]
+        for c in CHIPS if by["scope"].get(c, {}).get("valid")
+    )
+    lines.append(f"# scope >= segmented at every scale: {best} "
+                 "(paper Fig 9: Scope exhibits the best scalability)")
+    return lines

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks (CPU wall time of the *reference* path + the
+interpret-mode kernel run for correctness-parity; real-TPU timing is not
+available in this container, so `derived` reports the model FLOPs of the
+call -- the roofline table covers per-chip performance).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba.ops import mamba_scan
+from repro.kernels.qmatmul.ops import qmatmul
+from repro.kernels.rwkv6.ops import wkv6
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, H, KV, S, hd = 1, 8, 2, 1024, 64
+    q = jax.random.normal(key, (B, H, S, hd))
+    k = jax.random.normal(key, (B, KV, S, hd))
+    v = jax.random.normal(key, (B, KV, S, hd))
+    us = _time(flash_attention, q, k, v, impl="ref")
+    rows.append(("flash_attention_ref_1k", us, 4.0 * B * H * S * S * hd / 2))
+
+    r = jax.random.normal(key, (1, 4, 512, 64))
+    w = jnp.log(jax.random.uniform(key, (1, 4, 512, 64), minval=0.8, maxval=0.99))
+    u = jax.random.normal(key, (4, 64))
+    us = _time(wkv6, r, r, r, w, u, impl="ref")
+    rows.append(("wkv6_ref_512", us, 4.0 * 4 * 512 * 64 * 64))
+
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 512, 256)))
+    x = jax.random.normal(key, (1, 512, 256))
+    A = -jnp.exp(jax.random.normal(key, (256, 16)) * 0.5)
+    Bc = jax.random.normal(key, (1, 512, 16))
+    D = jnp.ones((256,))
+    us = _time(mamba_scan, dt, x, A, Bc, Bc, D, impl="ref")
+    rows.append(("mamba_scan_ref_512", us, 10.0 * 512 * 256 * 16))
+
+    xq = jax.random.randint(key, (256, 512), -127, 128, jnp.int8)
+    wq = jax.random.randint(key, (512, 256), -127, 128, jnp.int8)
+    s1, s2 = jnp.ones((256,)), jnp.ones((256,))
+    us = _time(qmatmul, xq, wq, s1, s2, impl="ref")
+    rows.append(("qmatmul_ref_256x512x256", us, 2.0 * 256 * 512 * 256))
+
+    return rows
+
+
+def report(rows):
+    lines = ["name,us_per_call,derived_flops"]
+    for name, us, fl in rows:
+        lines.append(f"{name},{us:.1f},{fl:.3e}")
+    return lines

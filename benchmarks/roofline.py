@@ -1,0 +1,66 @@
+"""SSRoofline: aggregate the dry-run artifacts into the roofline table.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+reports, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS = 6ND (train) / 2ND (forward-only) with N_active for
+MoE, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = ARCHS[arch]
+    S, B, kind = SHAPES[shape]
+    n = cfg.n_active_params
+    if kind == "train":
+        return 6.0 * n * S * B
+    if kind == "prefill":
+        return 2.0 * n * S * B
+    return 2.0 * n * 1 * B          # decode: one token per sequence
+
+
+def load_rows(mesh_tag: str = "pod16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        chips = r["mesh"]["chips"]
+        corrected = r.get("corrected", {})
+        flops = corrected.get("flops") or r["cost_analysis"].get("flops") or 0.0
+        mf = model_flops(r["arch"], r["shape"])
+        useful = mf / (flops * chips) if flops else float("nan")
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": mesh_tag,
+            "plan": f"{r['plan']['p1']}->{r['plan']['p2']}@{r['plan']['transition_repeat']}",
+            "compute_s": r["roofline"]["compute_s"],
+            "memory_s": r["roofline"]["memory_s"],
+            "collective_s": r["roofline"]["collective_s"],
+            "dominant": r["roofline"]["dominant"],
+            "model_flops": mf,
+            "useful_ratio": useful,
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def report(rows) -> list[str]:
+    lines = [
+        "arch,shape,plan,compute_s,memory_s,collective_s,dominant,useful_ratio"
+    ]
+    for r in rows:
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['plan']},"
+            f"{r['compute_s']:.4e},{r['memory_s']:.4e},{r['collective_s']:.4e},"
+            f"{r['dominant']},{r['useful_ratio']:.3f}"
+        )
+    if not rows:
+        lines.append("# no dry-run artifacts found -- run repro.launch.dryrun --all first")
+    return lines

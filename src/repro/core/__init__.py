@@ -1,0 +1,24 @@
+"""Scope core: the paper's merged-pipeline scheduler and analytical models."""
+from .costmodel import CostModel, LayerTime  # noqa: F401
+from .graph import (  # noqa: F401
+    PARTITION_EP,
+    PARTITION_ISP,
+    PARTITION_WSP,
+    ClusterAssignment,
+    LayerGraph,
+    LayerNode,
+    ScopeSchedule,
+    SegmentSchedule,
+    chain,
+    validate_schedule,
+)
+from .hw import HardwareModel, get_hw, mcm_table_iii, tpu_v5e  # noqa: F401
+from .regions import RegionMode  # noqa: F401
+from .baselines import (  # noqa: F401
+    ALL_METHODS,
+    schedule_full_pipeline,
+    schedule_scope,
+    schedule_segmented,
+    schedule_sequential,
+)
+from .search import search, search_segment  # noqa: F401

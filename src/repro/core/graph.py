@@ -1,0 +1,170 @@
+"""Layer-graph IR consumed by the Scope scheduler.
+
+The paper treats an NN as a sequence of layers (Table I indexes
+``Layer(i,j,k)`` by segment / cluster / position).  We linearize every
+workload (CNN or LM) into a chain of :class:`LayerNode`.  Residual adds,
+norms and other cheap glue are folded into the node they feed.
+
+Each node carries the quantities the cost model (paper Eqs. 4-7, Table II)
+needs:
+
+* ``flops``          total forward FLOPs (2 x MACs) for one sample
+* ``weight_bytes``   parameter bytes (at the deployment precision)
+* ``in_bytes`` / ``out_bytes``  activation volumes for one sample
+* ``halo_bytes``     WSP boundary-exchange volume for one sample: conv kernel
+                     overlap for CNNs, KV/state handoff for attention/SSM
+* ``wsp_parallel``   max useful split degree of the activation dim
+                     (output pixels / tokens) -- WSP's parallelism
+* ``isp_parallel``   max useful split degree of the weight-output dim
+                     (output channels / heads / ffn width) -- ISP's parallelism
+* ``parallel_metric``  scalar used by GenCMT's similarity merge
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Sequence
+
+
+@dataclass(frozen=True)
+class LayerNode:
+    name: str
+    kind: str                      # conv | fc | attention | ffn | moe_ffn | mamba | rwkv | embed
+    flops: float
+    weight_bytes: float
+    in_bytes: float
+    out_bytes: float
+    halo_bytes: float = 0.0
+    wsp_parallel: float = 1.0
+    isp_parallel: float = 1.0
+    parallel_metric: float = 0.0   # defaults to wsp_parallel in __post_init__
+    # Optional extras used by extensions (kept out of the paper-faithful path).
+    n_experts: int = 0             # >0 marks a MoE layer -> EP partition legal
+    active_experts: int = 0
+    meta: dict = field(default_factory=dict, hash=False, compare=False)
+
+    def __post_init__(self):
+        if self.parallel_metric == 0.0:
+            object.__setattr__(self, "parallel_metric", float(self.wsp_parallel))
+
+    def scaled(self, batch: int) -> "LayerNode":
+        """Per-sample -> per-microbatch scaling (weights are batch invariant)."""
+        return replace(
+            self,
+            flops=self.flops * batch,
+            in_bytes=self.in_bytes * batch,
+            out_bytes=self.out_bytes * batch,
+            halo_bytes=self.halo_bytes * batch,
+            wsp_parallel=self.wsp_parallel * batch,
+        )
+
+
+@dataclass(frozen=True)
+class LayerGraph:
+    """A linearized network: an ordered chain of layers."""
+    name: str
+    layers: tuple[LayerNode, ...]
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __iter__(self):
+        return iter(self.layers)
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return LayerGraph(self.name, tuple(self.layers[idx]))
+        return self.layers[idx]
+
+    @property
+    def total_flops(self) -> float:
+        return sum(l.flops for l in self.layers)
+
+    @property
+    def total_weight_bytes(self) -> float:
+        return sum(l.weight_bytes for l in self.layers)
+
+    def slice(self, lo: int, hi: int) -> "LayerGraph":
+        return LayerGraph(f"{self.name}[{lo}:{hi}]", tuple(self.layers[lo:hi]))
+
+
+def chain(name: str, layers: Sequence[LayerNode]) -> LayerGraph:
+    return LayerGraph(name, tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# Cluster / schedule containers (Table I of the paper).
+# ---------------------------------------------------------------------------
+
+PARTITION_WSP = "WSP"
+PARTITION_ISP = "ISP"
+PARTITION_EP = "EP"            # beyond-paper: expert parallelism for MoE FFNs
+
+
+@dataclass(frozen=True)
+class ClusterAssignment:
+    """``Cluster(i, j)`` with its region and per-layer partitions."""
+    layer_lo: int                  # inclusive, global layer index
+    layer_hi: int                  # exclusive
+    region_chips: int              # ||Region(i, j)||
+    partitions: tuple[str, ...]    # P(i, j, k) per layer, len == hi - lo
+
+    @property
+    def n_layers(self) -> int:
+        return self.layer_hi - self.layer_lo
+
+
+@dataclass(frozen=True)
+class SegmentSchedule:
+    """One ``Segment(i)``: pipelined clusters over disjoint regions."""
+    clusters: tuple[ClusterAssignment, ...]
+    latency: float = 0.0           # seconds for the evaluation batch
+    cluster_times: tuple[float, ...] = ()
+
+    @property
+    def n_clusters(self) -> int:
+        return len(self.clusters)
+
+
+@dataclass(frozen=True)
+class ScopeSchedule:
+    """Full system schedule: sequential segments (paper Eq. 1)."""
+    workload: str
+    chips: int
+    segments: tuple[SegmentSchedule, ...]
+    latency: float = 0.0
+    meta: dict = field(default_factory=dict, hash=False, compare=False)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    def layer_partition(self) -> list[tuple[int, str, int]]:
+        """Flat [(layer_idx, partition, region_chips)] over the whole net."""
+        out = []
+        for seg in self.segments:
+            for cl in seg.clusters:
+                for k, p in enumerate(cl.partitions):
+                    out.append((cl.layer_lo + k, p, cl.region_chips))
+        return out
+
+
+def validate_schedule(graph: LayerGraph, sched: ScopeSchedule, chips: int) -> None:
+    """Invariants: contiguous cover of all layers; regions fit the package."""
+    cursor = 0
+    for seg in sched.segments:
+        used = 0
+        for cl in seg.clusters:
+            assert cl.layer_lo == cursor, (cl.layer_lo, cursor)
+            assert cl.layer_hi > cl.layer_lo
+            assert len(cl.partitions) == cl.n_layers
+            assert cl.region_chips >= 1
+            used += cl.region_chips
+            cursor = cl.layer_hi
+        assert used <= chips, f"segment uses {used} > {chips} chips"
+    assert cursor == len(graph), f"schedule covers {cursor}/{len(graph)} layers"
+
+
+def geomean(vals) -> float:
+    vals = [max(v, 1e-30) for v in vals]
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))

@@ -1,0 +1,103 @@
+"""Region allocation: proportional seed + iterative rebalance + ZigZag placement.
+
+Paper SSIV-B: chiplets are first allocated across regions proportionally to
+cluster computational load; the heuristic then repeatedly moves one chiplet
+from the fastest region to the slowest until overall latency stops improving.
+Regions are laid out on the 2D mesh in a ZigZag (boustrophedon) pattern.
+
+``RegionMode.UNIFORM`` is the TPU/SPMD constraint (DESIGN.md SS3): all regions
+must have equal chip counts, so only ``chips % n_regions == 0`` allocations
+are legal and the rebalance loop is disabled -- balance must come from the
+cluster-merge dimension instead.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class RegionMode(enum.Enum):
+    FREE = "free"          # paper: arbitrary per-region chip counts
+    UNIFORM = "uniform"    # TPU SPMD: equal-size regions only
+
+
+def proportional_allocate(loads: list[float], chips: int) -> list[int]:
+    """Seed allocation: >=1 chip each, proportional to load, sum == chips."""
+    n = len(loads)
+    if n > chips:
+        raise ValueError(f"{n} clusters > {chips} chips")
+    total = sum(loads) or 1.0
+    alloc = [max(1, int(chips * l / total)) for l in loads]
+    # repair the sum: remove from the most over-provisioned, add to the most under
+    def pressure(i):  # chips per unit load (higher -> over-provisioned)
+        return alloc[i] / max(loads[i], 1e-30)
+    while sum(alloc) > chips:
+        cand = max((i for i in range(n) if alloc[i] > 1), key=pressure, default=None)
+        if cand is None:
+            raise ValueError("cannot satisfy >=1 chip per region")
+        alloc[cand] -= 1
+    while sum(alloc) < chips:
+        cand = min(range(n), key=pressure)
+        alloc[cand] += 1
+    return alloc
+
+
+def uniform_allocate(n_regions: int, chips: int) -> list[int] | None:
+    if chips % n_regions != 0:
+        return None
+    return [chips // n_regions] * n_regions
+
+
+def zigzag_placement(region_sizes: list[int], mesh_shape: tuple[int, int]) -> list[list[tuple[int, int]]]:
+    """Assign chip coordinates to regions walking the mesh boustrophedon.
+
+    Keeps each region spatially contiguous, as validated by prior work
+    ([17] Tangram) -- consecutive regions share a seam, which is what the
+    cost model's cross-region boundary term assumes.
+    """
+    rows, cols = mesh_shape
+    order = []
+    for r in range(rows):
+        rng = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
+        order.extend((r, c) for c in rng)
+    if sum(region_sizes) > len(order):
+        raise ValueError("regions exceed mesh capacity")
+    out, cursor = [], 0
+    for size in region_sizes:
+        out.append(order[cursor : cursor + size])
+        cursor += size
+    return out
+
+
+def rebalance(
+    alloc: list[int],
+    eval_fn,
+    max_iters: int = 256,
+) -> tuple[list[int], float, list[float]]:
+    """Paper's heuristic: move 1 chip from the fastest to the slowest region.
+
+    ``eval_fn(alloc) -> (latency, per_cluster_times)``.  Continues while the
+    move strictly improves latency (Alg. 1's inner while-loop).
+    """
+    best = list(alloc)
+    best_lat, best_times = eval_fn(best)
+    for _ in range(max_iters):
+        if not best_times or best_lat == float("inf"):
+            # Infeasible seed: still try to feed the bottleneck if we know it.
+            break
+        slow = max(range(len(best_times)), key=lambda j: best_times[j])
+        fast = min(
+            (j for j in range(len(best_times)) if best[j] > 1 and j != slow),
+            key=lambda j: best_times[j],
+            default=None,
+        )
+        if fast is None:
+            break
+        trial = list(best)
+        trial[slow] += 1
+        trial[fast] -= 1
+        lat, times = eval_fn(trial)
+        if lat < best_lat:
+            best, best_lat, best_times = trial, lat, times
+        else:
+            break
+    return best, best_lat, best_times

@@ -1,0 +1,276 @@
+"""Scope DSE: paper Algorithm 1, plus exhaustive/random search for validation.
+
+Per segment, three nested dimensions are explored:
+  * WSP->ISP transition index (linear, L+1 candidates)       [partition.py]
+  * N_cluster via the cluster merge table (linear, L rows)   [cmt.py]
+  * region allocation: proportional seed + chip-rebalance    [regions.py]
+
+The pseudocode's inner ``while tmpLatency < minLatency`` only rebalances while
+beating the global best; we run the (strictly stronger) local-improvement
+rebalance and track the global best across it -- this can only find better
+schedules and keeps the same asymptotics.
+
+System level: sweep segment counts from the minimal feasible value
+(segments.py) and run Algorithm 1 independently per segment (paper SSV-A uses
+an identical segment allocation for Scope and the segmented baseline).
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass
+
+from .cmt import Clustering, gen_cmt
+from .costmodel import INF, CostModel
+from .graph import (
+    ClusterAssignment,
+    LayerGraph,
+    ScopeSchedule,
+    SegmentSchedule,
+)
+from .partition import (
+    apply_ep,
+    enumerate_exhaustive,
+    enumerate_transition_points,
+    transition_partitions,
+)
+from .regions import (
+    RegionMode,
+    proportional_allocate,
+    rebalance,
+    uniform_allocate,
+)
+from .segments import candidate_segment_counts, divide_segments
+
+
+def build_clusters(
+    seg_lo: int,
+    clustering: Clustering,
+    partitions: tuple[str, ...],
+    regions: list[int],
+) -> tuple[ClusterAssignment, ...]:
+    """Assemble ClusterAssignments from segment-relative pieces."""
+    out = []
+    for (lo, hi), chips in zip(clustering, regions):
+        out.append(
+            ClusterAssignment(
+                layer_lo=seg_lo + lo,
+                layer_hi=seg_lo + hi,
+                region_chips=chips,
+                partitions=partitions[lo:hi],
+            )
+        )
+    return tuple(out)
+
+
+def evaluate_segment(
+    cost: CostModel,
+    graph: LayerGraph,
+    seg_lo: int,
+    clustering: Clustering,
+    partitions: tuple[str, ...],
+    regions: list[int],
+) -> tuple[float, list[float]]:
+    clusters = build_clusters(seg_lo, clustering, partitions, regions)
+    lat, times = cost.segment_time(graph, clusters)
+    return lat, times
+
+
+@dataclass
+class SegmentResult:
+    clusters: tuple[ClusterAssignment, ...]
+    latency: float
+    cluster_times: tuple[float, ...]
+
+
+def search_segment(
+    cost: CostModel,
+    graph: LayerGraph,
+    seg_lo: int,
+    seg_hi: int,
+    chips: int,
+    mode: RegionMode = RegionMode.FREE,
+    ep_for_moe: bool = False,
+    max_clusters: int | None = None,
+    fixed_clustering: Clustering | None = None,
+) -> SegmentResult | None:
+    """Algorithm 1 over one segment.
+
+    ``fixed_clustering`` short-circuits the CMT (used by the segmented-pipeline
+    baseline, where every layer is its own cluster).
+    """
+    sub = graph.slice(seg_lo, seg_hi)
+    L = len(sub)
+    cmt = {len(fixed_clustering): fixed_clustering} if fixed_clustering else gen_cmt(sub)
+    best: SegmentResult | None = None
+
+    partition_sets: list[tuple[str, ...]] = []
+    for idx in range(L + 1):
+        p = transition_partitions(L, idx)
+        partition_sets.append(p)
+    if ep_for_moe:
+        extra = []
+        for p in partition_sets:
+            pe = apply_ep(graph, p, lo=seg_lo)
+            if pe != p:
+                extra.append(pe)
+        partition_sets.extend(dict.fromkeys(extra))  # dedupe, keep order
+
+    for partitions in partition_sets:
+        for n_cluster, clustering in cmt.items():
+            if max_clusters is not None and n_cluster > max_clusters:
+                continue
+            if n_cluster > chips:
+                continue
+            if mode is RegionMode.UNIFORM:
+                seed = uniform_allocate(n_cluster, chips)
+                if seed is None:
+                    continue
+            else:
+                seed = proportional_allocate(
+                    [sum(graph.layers[seg_lo + i].flops for i in range(lo, hi))
+                     for lo, hi in clustering],
+                    chips,
+                )
+
+            def eval_fn(alloc, _c=clustering, _p=partitions):
+                return evaluate_segment(cost, graph, seg_lo, _c, _p, alloc)
+
+            if mode is RegionMode.UNIFORM:
+                lat, times = eval_fn(seed)
+                alloc = seed
+            else:
+                alloc, lat, times = rebalance(seed, eval_fn)
+            if lat < (best.latency if best else INF):
+                best = SegmentResult(
+                    clusters=build_clusters(seg_lo, clustering, partitions, alloc),
+                    latency=lat,
+                    cluster_times=tuple(times),
+                )
+    return best
+
+
+def search(
+    graph: LayerGraph,
+    cost: CostModel,
+    chips: int,
+    mode: RegionMode = RegionMode.FREE,
+    ep_for_moe: bool = False,
+    segment_counts: list[int] | None = None,
+    max_clusters: int | None = None,
+) -> ScopeSchedule | None:
+    """Full Scope DSE: segment sweep x Algorithm 1 per segment (Eq. 1)."""
+    hw = cost.hw
+    counts = segment_counts or candidate_segment_counts(graph, hw, chips)
+    best_sched: ScopeSchedule | None = None
+    for n_seg in counts:
+        split = divide_segments(graph, hw, chips, n_seg)
+        if split is None:
+            continue
+        segs: list[SegmentSchedule] = []
+        total = 0.0
+        ok = True
+        for lo, hi in split:
+            res = search_segment(
+                cost, graph, lo, hi, chips, mode=mode,
+                ep_for_moe=ep_for_moe, max_clusters=max_clusters,
+            )
+            if res is None or res.latency == INF:
+                ok = False
+                break
+            segs.append(
+                SegmentSchedule(res.clusters, res.latency, res.cluster_times)
+            )
+            total += res.latency
+        if not ok:
+            continue
+        if best_sched is None or total < best_sched.latency:
+            best_sched = ScopeSchedule(
+                workload=graph.name,
+                chips=chips,
+                segments=tuple(segs),
+                latency=total,
+                meta={"n_segments": n_seg, "mode": mode.value},
+            )
+    return best_sched
+
+
+# ---------------------------------------------------------------------------
+# Validation searches (paper SSV-B(1), Fig. 8)
+# ---------------------------------------------------------------------------
+
+def compositions(total: int, parts: int):
+    """All ways to write ``total`` as ``parts`` positive integers (ordered)."""
+    for cuts in itertools.combinations(range(1, total), parts - 1):
+        prev, out = 0, []
+        for c in cuts:
+            out.append(c - prev)
+            prev = c
+        out.append(total - prev)
+        yield out
+
+
+def enumerate_clusterings(L: int):
+    for n_cluster in range(1, L + 1):
+        for sizes in compositions(L, n_cluster):
+            bounds, cursor = [], 0
+            for s in sizes:
+                bounds.append((cursor, cursor + s))
+                cursor += s
+            yield tuple(bounds)
+
+
+def exhaustive_search(
+    cost: CostModel, graph: LayerGraph, chips: int, yield_all: bool = False
+):
+    """Brute force over (clustering x regions x 2^L partitions) for one segment.
+
+    Only tractable for tiny L/C (the paper uses AlexNet x 16 chiplets).
+    Yields (latency, clustering, regions, partitions) for every valid config
+    when ``yield_all``; otherwise returns the best tuple.
+    """
+    L = len(graph)
+    best = (INF, None, None, None)
+    for clustering in enumerate_clusterings(L):
+        n_cluster = len(clustering)
+        if n_cluster > chips:
+            continue
+        for regions in compositions(chips, n_cluster):
+            for partitions in enumerate_exhaustive(L):
+                lat, _ = evaluate_segment(cost, graph, 0, clustering, partitions, list(regions))
+                if yield_all and lat < INF:
+                    yield lat, clustering, tuple(regions), partitions
+                if lat < best[0]:
+                    best = (lat, clustering, tuple(regions), partitions)
+    if not yield_all:
+        yield best
+
+
+def random_search(
+    cost: CostModel,
+    graph: LayerGraph,
+    chips: int,
+    samples: int,
+    seed: int = 0,
+):
+    """Uniform random samples of the full space -- builds Fig. 8's histogram."""
+    rng = random.Random(seed)
+    L = len(graph)
+    out = []
+    for _ in range(samples):
+        n_cluster = rng.randint(1, min(L, chips))
+        cuts = sorted(rng.sample(range(1, L), n_cluster - 1)) if n_cluster > 1 else []
+        bounds, cursor = [], 0
+        for c in cuts + [L]:
+            bounds.append((cursor, c))
+            cursor = c
+        rcuts = sorted(rng.sample(range(1, chips), n_cluster - 1)) if n_cluster > 1 else []
+        regions, prev = [], 0
+        for c in rcuts + [chips]:
+            regions.append(c - prev)
+            prev = c
+        partitions = tuple(rng.choice(("WSP", "ISP")) for _ in range(L))
+        lat, _ = evaluate_segment(cost, graph, 0, tuple(bounds), partitions, regions)
+        if lat < INF:
+            out.append(lat)
+    return out

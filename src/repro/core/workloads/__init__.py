@@ -1,0 +1,1 @@
+from .cnn import CNN_WORKLOADS, get_cnn  # noqa: F401

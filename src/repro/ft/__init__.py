@@ -1,0 +1,1 @@
+from .runner import ResilientTrainer, StragglerMonitor  # noqa: F401

@@ -1,0 +1,110 @@
+"""Fault-tolerant training driver.
+
+At 1000+ nodes, *something* is always failing; the framework treats failure
+as the normal path:
+
+* **checkpoint/restart** -- atomic checkpoints every ``ckpt_every`` steps;
+  on any step exception the trainer restores the latest checkpoint and
+  replays (the data pipeline is (seed, step)-deterministic, so replays are
+  bit-consistent).
+* **bounded retries** -- repeated failure of the same step aborts rather
+  than loops (poison-step detection).
+* **straggler mitigation** -- per-step wall times feed a rolling median;
+  steps slower than ``k x median`` are flagged; the policy hook decides
+  (log / re-dispatch / drop the slow replica from the next allocation).
+  On a real cluster this drives the scheduler; here the policy is pluggable
+  and unit-tested with injected delays.
+* **elastic rescale** -- restore accepts a different mesh than the one that
+  wrote the checkpoint (ckpt/checkpoint.py stores unsharded leaves), so a
+  restart may proceed with fewer/more pods.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from statistics import median
+
+from ..ckpt import latest_step, restore_checkpoint, save_checkpoint
+from ..ckpt.checkpoint import prune_checkpoints
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0       # k x median => straggler
+    window: int = 32
+    times: list = field(default_factory=list)
+    flagged: list = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5:
+            med = median(self.times)
+            if dt > self.threshold * med:
+                self.flagged.append((step, dt, med))
+                return True
+        return False
+
+
+@dataclass
+class ResilientTrainer:
+    train_step: callable         # (params, opt, batch) -> (params, opt, metrics)
+    batch_fn: callable           # step -> batch  (deterministic)
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_retries_per_step: int = 3
+    straggler: StragglerMonitor = field(default_factory=StragglerMonitor)
+    on_straggler: callable = None
+
+    def run(self, params, opt_state, n_steps: int, start_step: int = 0,
+            shardings=None, failure_injector=None):
+        """Runs to ``n_steps``; returns (params, opt_state, history)."""
+        step = start_step
+        # resume if a checkpoint exists
+        last = latest_step(self.ckpt_dir)
+        if last is not None and last > step:
+            (params, opt_state), manifest = restore_checkpoint(
+                self.ckpt_dir, last, (params, opt_state), shardings
+            )
+            step = manifest["step"]
+            log.info("resumed from checkpoint step %d", step)
+        history = []
+        retries = 0
+        while step < n_steps:
+            batch = self.batch_fn(step)
+            t0 = time.monotonic()
+            try:
+                if failure_injector is not None:
+                    failure_injector(step)
+                params, opt_state, metrics = self.train_step(params, opt_state, batch)
+                loss = float(metrics["loss"])
+            except Exception as exc:  # noqa: BLE001 -- restart-on-anything
+                retries += 1
+                if retries > self.max_retries_per_step:
+                    raise RuntimeError(f"step {step} failed {retries}x") from exc
+                last = latest_step(self.ckpt_dir)
+                if last is not None:
+                    (params, opt_state), manifest = restore_checkpoint(
+                        self.ckpt_dir, last, (params, opt_state), shardings
+                    )
+                    step = manifest["step"]
+                    log.warning("step failed (%s); restored step %d", exc, step)
+                else:
+                    log.warning("step failed (%s); no checkpoint, retrying", exc)
+                continue
+            dt = time.monotonic() - t0
+            if self.straggler.observe(step, dt) and self.on_straggler:
+                self.on_straggler(step, dt)
+            retries = 0
+            step += 1
+            history.append({"step": step, "loss": loss, "time": dt})
+            if step % self.ckpt_every == 0:
+                save_checkpoint(self.ckpt_dir, step, (params, opt_state),
+                                meta={"loss": loss})
+                prune_checkpoints(self.ckpt_dir, self.keep)
+        return params, opt_state, history

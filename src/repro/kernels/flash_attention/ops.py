@@ -1,0 +1,32 @@
+"""Jit'd public wrapper: picks the Pallas kernel or the jnp reference."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k", "impl", "interpret"),
+)
+def flash_attention(
+    q, k, v,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    impl: str = "pallas",
+    interpret: bool = False,
+):
+    """q [B,H,Sq,hd], k/v [B,KV,Skv,hd] -> [B,H,Sq,hd]."""
+    if impl == "ref":
+        return attention_ref(q, k, v, causal, window, softcap)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

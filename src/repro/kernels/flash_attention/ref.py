@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (identical masking semantics)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_ref(
+    q: jax.Array,      # [B, H, Sq, hd]
+    k: jax.Array,      # [B, KV, Skv, hd]
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    g = H // KV
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kf) / math.sqrt(hd)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,105 @@
+"""Pallas TPU chunked selective scan (Mamba-1 SSM core).
+
+Recurrence per channel block (state h [bd, N], fp32):
+    h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t
+    y_t = C_t . h_t + D x_t
+
+TPU mapping: grid = (batch, d_inner/bd, S/chunk) with the chunk axis
+sequential; h persists in VMEM scratch, so the state never round-trips HBM.
+dt/x tiles are [chunk, bd], B/C tiles [chunk, N]; the per-step update is VPU
+elementwise work over [bd, N] -- the kernel's value is state residency +
+fused discretization (exp(dt*A)) rather than MXU throughput.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(dt_ref, x_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_out_ref,
+                  h_scr, *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)      # [T, bd]
+    x = x_ref[0].astype(jnp.float32)        # [T, bd]
+    A = A_ref[...].astype(jnp.float32)      # [bd, N]
+    Bc = B_ref[0].astype(jnp.float32)       # [T, N]
+    Cc = C_ref[0].astype(jnp.float32)       # [T, N]
+    D = D_ref[...].astype(jnp.float32)      # [bd]
+
+    a = jnp.exp(dt[:, :, None] * A[None, :, :])            # [T, bd, N]
+    bx = (dt * x)[:, :, None] * Bc[:, None, :]             # [T, bd, N]
+
+    def step(t, carry):
+        h, ys = carry
+        h = a[t] * h + bx[t]                               # [bd, N]
+        y = jnp.sum(h * Cc[t][None, :], axis=1)            # [bd]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, a.shape[1]), jnp.float32)
+    h_last, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    y_ref[0] = (ys + D[None, :] * x).astype(y_ref.dtype)
+    h_scr[...] = h_last
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        h_out_ref[0] = h_last
+
+
+def mamba_scan_kernel(
+    dt: jax.Array,     # [B, S, di] fp32 (post-softplus)
+    x: jax.Array,      # [B, S, di]
+    A: jax.Array,      # [di, N]  (negative)
+    Bc: jax.Array,     # [B, S, N]
+    Cc: jax.Array,     # [B, S, N]
+    D: jax.Array,      # [di]
+    block_d: int = 128,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (y [B,S,di] fp32, h_last [B,di,N] fp32)."""
+    B, S, di = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, di)
+    chunk = min(chunk, S)
+    assert di % block_d == 0 and S % chunk == 0
+    n_chunks = S // chunk
+    grid = (B, di // block_d, n_chunks)
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, n_chunks=n_chunks)
+    sd = pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d))
+    sn = pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            sd,                                                  # dt
+            sd,                                                  # x
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),  # A
+            sn,                                                  # B
+            sn,                                                  # C
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),      # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(dt, x, A, Bc, Cc, D)

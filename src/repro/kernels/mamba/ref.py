@@ -1,0 +1,23 @@
+"""Sequential jnp oracle for the selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, x, A, Bc, Cc, D):
+    """Same contract as mamba_scan_kernel."""
+    B, S, di = x.shape
+    N = A.shape[1]
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)          # [B,S,di,N]
+    bx = (dt * x).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, t):
+        h = a[:, t] * h + bx[:, t]
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, t].astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1) + D * x.astype(jnp.float32)
+    return y, h_last

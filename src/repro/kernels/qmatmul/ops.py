@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the int8 matmul."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import qmatmul_kernel
+from .ref import qmatmul_ref, quantize_cols, quantize_rows  # noqa: F401
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "impl", "interpret"))
+def qmatmul(x_q, w_q, x_scale, w_scale, block_m=128, block_n=128, block_k=128,
+            impl: str = "pallas", interpret: bool = False):
+    if impl == "ref":
+        return qmatmul_ref(x_q, w_q, x_scale, w_scale)
+    return qmatmul_kernel(x_q, w_q, x_scale, w_scale, block_m=block_m,
+                          block_n=block_n, block_k=block_k, interpret=interpret)

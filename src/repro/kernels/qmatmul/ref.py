@@ -1,0 +1,25 @@
+"""jnp oracle for the int8 matmul + symmetric quantization helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization.  x [M, K] float."""
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_cols(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    q, s = quantize_rows(w.T)
+    return q.T, s
+
+
+def qmatmul_ref(x_q, w_q, x_scale, w_scale, out_dtype=jnp.float32):
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return (acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]).astype(out_dtype)

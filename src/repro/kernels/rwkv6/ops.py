@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the chunked WKV-6 scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import wkv6_kernel
+from .ref import wkv6_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def wkv6(r, k, v, logw, u, chunk: int = 32, impl: str = "pallas", interpret: bool = False):
+    if impl == "ref":
+        return wkv6_ref(r, k, v, logw, u)
+    return wkv6_kernel(r, k, v, logw, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Sequential jnp oracle for the WKV-6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw [B,H,S,hd]; u [H,hd] -> (out [B,H,S,hd], S_last [B,H,hd,hd])."""
+    B, H, S, hd = r.shape
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(S_state, t):
+        rt, kt, vt, wt = (x[:, :, t].astype(jnp.float32) for x in (r, k, v, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S_state + u[None, :, :, None] * kv)
+        S_state = wt[..., :, None] * S_state + kv
+        return S_state, out
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_last, outs = jax.lax.scan(step, S0, jnp.arange(S))
+    return jnp.moveaxis(outs, 0, 2), S_last

@@ -1,0 +1,9 @@
+"""Pure-JAX LM model stack (no flax): params are pytrees of jnp arrays."""
+from .config import ModelConfig, MoEConfig  # noqa: F401
+from .model import (  # noqa: F401
+    init_params,
+    forward,
+    init_kv_cache,
+    decode_step,
+    loss_fn,
+)

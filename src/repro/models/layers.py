@@ -1,0 +1,69 @@
+"""Shared primitive layers (pure JAX, functional)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (cos, sin) of shape [..., head_dim//2], fp32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, n, head_dim]; cos/sin [..., S, head_dim//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., d_in] @ [d_in, d_out] with bf16-safe accumulation."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def ffn(params: dict, x: jax.Array, gated: bool) -> jax.Array:
+    if gated:
+        h = jax.nn.silu(dense(x, params["w1"])) * dense(x, params["w3"])
+    else:
+        h = jax.nn.gelu(dense(x, params["w1"]))
+    return dense(h, params["w2"])
+
+
+def init_ffn(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w1": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (d_model, d_ff)) * scale_in).astype(dtype)
+    return p

@@ -1,0 +1,309 @@
+"""Composable decoder model: embed -> scanned blocks -> norm -> logits.
+
+Layers are scanned over pattern *repeats* with stacked params (keeps HLO
+small and compile times sane at 48+ layers).  To execute a Scope schedule,
+``forward``/``decode_step`` accept:
+
+* ``constrain(x, tag)``   -- sharding-constraint callback (identity default);
+  tags: "embed", "resid", "logits", f"blk{i}:attn" etc.
+* ``transition_repeat``   -- the paper's WSP->ISP transition point mapped to
+  the repeat axis: repeats [0, t) run under ``constrain``, repeats [t, R)
+  under ``constrain2``.  Implemented as two scan segments over sliced
+  stacked params -- per-layer heterogeneous sharding with scanned layers is
+  exactly what the single-transition-point structure makes possible.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_decode, attention_prefill, init_attn
+from .config import ModelConfig
+from .layers import dense, embed, ffn, init_ffn, rmsnorm, softcap
+from .moe import init_moe, moe_ffn
+from .rwkv import init_rwkv, rwkv_channel_mix, rwkv_time_mix
+from .ssm import init_mamba, mamba_decode, mamba_prefill
+
+
+def _identity_constrain(x, tag):
+    return x
+
+
+# --------------------------------------------------------------------- init
+
+def _init_block(key, cfg: ModelConfig, kind: str, layer_idx: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+         "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "local"):
+        p["attn"] = init_attn(ks[0], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = init_mamba(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["rwkv"] = init_rwkv(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv":
+        pass                                  # channel mix lives in p["rwkv"]
+    elif cfg.is_moe_block(layer_idx):
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_gated, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    R = cfg.pattern_repeats
+    P = len(cfg.expanded_pattern)
+    keys = jax.random.split(key, R * P + 2)
+    blocks = []
+    for pi, kind in enumerate(cfg.expanded_pattern):
+        stacked = [
+            _init_block(keys[r * P + pi], cfg, kind, r * P + pi, dtype)
+            for r in range(R)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stacked))
+    params = {
+        "embed": (jax.random.normal(keys[-2], (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "blocks": tuple(blocks),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.padded_vocab)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------------ forward
+
+def _block_prefill(cfg, kind, layer_idx_in_pattern, bp, x, positions, constrain):
+    tag = f"blk{layer_idx_in_pattern}"
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        a, kv = attention_prefill(bp["attn"], h, cfg, positions, window)
+        x = constrain(x + a, f"{tag}:attn")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            f = moe_ffn(bp["moe"], h2, cfg, constrain)
+        else:
+            f = ffn(bp["ffn"], h2, cfg.ffn_gated)
+        x = constrain(x + f, f"{tag}:ffn")
+        cache = {"k": kv[0], "v": kv[1]}
+    elif kind == "mamba":
+        a, st = mamba_prefill(bp["mamba"], h, cfg)
+        x = constrain(x + a, f"{tag}:mamba")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        if "moe" in bp:
+            f = moe_ffn(bp["moe"], h2, cfg, constrain)
+        else:
+            f = ffn(bp["ffn"], h2, cfg.ffn_gated)
+        x = constrain(x + f, f"{tag}:ffn")
+        cache = st
+    elif kind == "rwkv":
+        a, st = rwkv_time_mix(bp["rwkv"], h, cfg)
+        x = constrain(x + a, f"{tag}:rwkv")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        f, st2 = rwkv_channel_mix(bp["rwkv"], h2)
+        x = constrain(x + f, f"{tag}:ffn")
+        cache = {**st, **st2}
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def _scan_blocks(cfg, blocks, x, positions, constrain, collect_cache=False):
+    """One lax.scan over repeats; pattern positions applied inside the body."""
+
+    def body(carry, bps):
+        h = carry
+        caches = []
+        for pi, kind in enumerate(cfg.expanded_pattern):
+            h, c = _block_prefill(cfg, kind, pi, bps[pi], h, positions, constrain)
+            caches.append(c)
+        return h, tuple(caches) if collect_cache else None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    x, caches = jax.lax.scan(
+        body_fn, x, blocks, unroll=max(1, min(cfg.scan_unroll, n))
+    )
+    return x, caches
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None,
+    frontend_embeds: jax.Array | None = None,
+    constrain=_identity_constrain,
+    constrain2=None,
+    transition_repeat: int | None = None,
+    collect_cache: bool = False,
+    positions: jax.Array | None = None,
+):
+    """Returns (logits [B,S,V], caches or None)."""
+    if cfg.frontend == "audio_stub":
+        x = frontend_embeds.astype(jnp.dtype(cfg.param_dtype))
+        B, S = x.shape[:2]
+    elif cfg.frontend == "vision_stub":
+        t_emb = embed(tokens, params["embed"])
+        x = jnp.concatenate(
+            [frontend_embeds.astype(t_emb.dtype), t_emb], axis=1
+        )
+        B, S = x.shape[:2]
+    else:
+        x = embed(tokens, params["embed"])
+        B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = constrain(x, "embed")
+
+    if transition_repeat is None or constrain2 is None:
+        blocks = params["blocks"]
+        x, caches = _scan_blocks(cfg, blocks, x, positions, constrain, collect_cache)
+    else:
+        t = transition_repeat
+        zone1 = jax.tree.map(lambda a: a[:t], params["blocks"])
+        zone2 = jax.tree.map(lambda a: a[t:], params["blocks"])
+        caches = []
+        if t > 0:
+            x, c1 = _scan_blocks(cfg, zone1, x, positions, constrain, collect_cache)
+            caches.append(c1)
+        if t < cfg.pattern_repeats:
+            x = constrain2(x, "transition")
+            x, c2 = _scan_blocks(cfg, zone2, x, positions, constrain2, collect_cache)
+            caches.append(c2)
+        caches = tuple(caches) if collect_cache else None
+
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(logits, "logits"), caches
+
+
+# ----------------------------------------------------------------- KV cache
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    R = cfg.pattern_repeats
+    caches = []
+    for kind in cfg.expanded_pattern:
+        if kind in ("attn", "local"):
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            caches.append({
+                "k": jnp.zeros((R, batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((R, batch, max_len, kv, hd), dtype),
+            })
+        elif kind == "mamba":
+            di = cfg.mamba_expand * cfg.d_model
+            caches.append({
+                "h": jnp.zeros((R, batch, di, cfg.mamba_d_state), jnp.float32),
+                "conv": jnp.zeros((R, batch, cfg.mamba_d_conv - 1, di), dtype),
+            })
+        elif kind == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            caches.append({
+                "S": jnp.zeros((R, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                "shift": jnp.zeros((R, batch, 1, cfg.d_model), dtype),
+                "shift_ffn": jnp.zeros((R, batch, 1, cfg.d_model), dtype),
+            })
+    return tuple(caches)
+
+
+def _block_decode(cfg, kind, pi, bp, x, position, cache, constrain):
+    tag = f"blk{pi}"
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        a, (ck, cv) = attention_decode(
+            bp["attn"], h, cfg, cache["k"], cache["v"], position, window
+        )
+        new_cache = {"k": ck, "v": cv}
+        x = constrain(x + a, f"{tag}:attn")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        f = moe_ffn(bp["moe"], h2, cfg, constrain) if "moe" in bp else ffn(bp["ffn"], h2, cfg.ffn_gated)
+        x = constrain(x + f, f"{tag}:ffn")
+    elif kind == "mamba":
+        a, st = mamba_decode(bp["mamba"], h, cfg, cache)
+        new_cache = st
+        x = constrain(x + a, f"{tag}:mamba")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        f = moe_ffn(bp["moe"], h2, cfg, constrain) if "moe" in bp else ffn(bp["ffn"], h2, cfg.ffn_gated)
+        x = constrain(x + f, f"{tag}:ffn")
+    elif kind == "rwkv":
+        a, st = rwkv_time_mix(bp["rwkv"], h, cfg, state=cache)
+        x = constrain(x + a, f"{tag}:rwkv")
+        h2 = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        f, st2 = rwkv_channel_mix(bp["rwkv"], h2, state=cache)
+        new_cache = {**st, **st2}
+        x = constrain(x + f, f"{tag}:ffn")
+    return x, new_cache
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    token: jax.Array,            # [B, 1] int32
+    position: jax.Array,         # [B] write index
+    caches: tuple,
+    constrain=_identity_constrain,
+):
+    """One autoregressive step.  Returns (logits [B,1,V], new caches)."""
+    x = embed(token, params["embed"])
+    x = constrain(x, "embed")
+
+    def body(carry, scanned):
+        h = carry
+        bps, layer_caches = scanned
+        new_caches = []
+        for pi, kind in enumerate(cfg.expanded_pattern):
+            h, nc = _block_decode(cfg, kind, pi, bps[pi], h, position,
+                                  layer_caches[pi], constrain)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["blocks"], caches),
+        unroll=max(1, min(cfg.scan_unroll, cfg.pattern_repeats)),
+    )
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(x, head)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain(logits, "logits"), new_caches
+
+
+# -------------------------------------------------------------------- loss
+
+def loss_fn(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    labels: jax.Array,
+    frontend_embeds: jax.Array | None = None,
+    constrain=_identity_constrain,
+    constrain2=None,
+    transition_repeat: int | None = None,
+) -> jax.Array:
+    logits, _ = forward(
+        params, cfg, tokens, frontend_embeds,
+        constrain=constrain, constrain2=constrain2,
+        transition_repeat=transition_repeat,
+    )
+    # labels cover the final S_label positions of the sequence (frontend
+    # stub positions are unlabeled)
+    S_lab = labels.shape[1]
+    logits = logits[:, -S_lab:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()

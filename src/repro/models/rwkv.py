@@ -1,0 +1,112 @@
+"""RWKV-6 ("Finch") block: attention-free token mixing with data-dependent
+decay (the v6 contribution), plus the RWKV channel-mix FFN.
+
+Per head, the WKV state S [hd, hd] evolves as
+    out_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(w0 + lora(x~_t))) computed *from the input* (data
+dependence).  Prefill scans over time with ``lax.scan``; decode is one
+update.  Simplification vs the full release (documented): the r/k/v/g
+token-shift mixing coefficients are static learned vectors (mu), while the
+decay keeps its full data-dependent LoRA -- the defining v6 feature.
+
+State cache for serving: {"S": [B, H, hd, hd], "shift": [B, 1, d],
+"shift_ffn": [B, 1, d]}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ff = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d))).astype(dtype),  # r,k,v,g,w mix
+        "wr": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[6], (d, lora)) * s).astype(dtype),
+        "w_lora_b": (jax.random.normal(ks[7], (lora, d)) * lora ** -0.5).astype(dtype),
+        "u": (jax.random.normal(ks[8], (H, hd)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_r": (jax.random.normal(ks[9], (d, d)) * s).astype(dtype),
+        "cm_k": (jax.random.normal(ks[10], (d, ff)) * s).astype(dtype),
+        "cm_v": (jax.random.normal(ks[11], (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} (prev fills t=0).  x [B,S,d], prev [B,1,d]."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_scan(r, k, v, w, u, S0):
+    """r,k,v [B,S,H,hd]; w decay in (0,1) [B,S,H,hd]; S0 [B,H,hd,hd].
+
+    Returns (out [B,S,H,hd], S_last).  fp32 throughout.
+    """
+    def step(S, inp):
+        rt, kt, vt, wt = inp              # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,hd,hd]
+        out = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    rs, ks_, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_last, outs = jax.lax.scan(step, S0, (rs, ks_, vs, ws))
+    return jnp.moveaxis(outs, 0, 1), S_last
+
+
+def rwkv_time_mix(params, x, cfg: ModelConfig, state=None):
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    prev = state["shift"] if state else jnp.zeros((B, 1, d), x.dtype)
+    xs = _shift(x, prev)
+    mu = params["mu"]
+    xr, xk, xv, xg, xw = (_mix(x, xs, mu[i]) for i in range(5))
+    r = dense(xr, params["wr"]).astype(jnp.float32).reshape(B, S, H, hd)
+    k = dense(xk, params["wk"]).astype(jnp.float32).reshape(B, S, H, hd)
+    v = dense(xv, params["wv"]).astype(jnp.float32).reshape(B, S, H, hd)
+    g = dense(xg, params["wg"])
+    # data-dependent decay (the RWKV-6 core)
+    dw = dense(jnp.tanh(dense(xw, params["w_lora_a"])), params["w_lora_b"])
+    w = jnp.exp(-jnp.exp(params["w0"] + dw.astype(jnp.float32)))  # (0,1)
+    w = w.reshape(B, S, H, hd)
+    S0 = state["S"] if state else jnp.zeros((B, H, hd, hd), jnp.float32)
+    out, S_last = wkv_scan(r, k, v, w, params["u"], S0)
+    # group norm per head (approximated by rmsnorm over hd)
+    var = jnp.mean(out * out, axis=-1, keepdims=True)
+    out = out * jax.lax.rsqrt(var + 1e-5) * (1.0 + params["ln_x"].reshape(H, hd))
+    out = out.reshape(B, S, d).astype(x.dtype) * jax.nn.silu(g)
+    new_state = {"S": S_last, "shift": x[:, -1:]}
+    return dense(out, params["wo"]), new_state
+
+
+def rwkv_channel_mix(params, x, state=None):
+    B, S, d = x.shape
+    prev = state["shift_ffn"] if state else jnp.zeros((B, 1, d), x.dtype)
+    xs = _shift(x, prev)
+    xk = _mix(x, xs, 0.5)
+    r = jax.nn.sigmoid(dense(xk, params["cm_r"]))
+    k = jnp.square(jax.nn.relu(dense(xk, params["cm_k"])))
+    out = r * dense(k, params["cm_v"])
+    return out, {"shift_ffn": x[:, -1:]}

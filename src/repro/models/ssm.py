@@ -1,0 +1,151 @@
+"""Mamba-1 selective-state-space block (jamba's SSM layer).
+
+Prefill uses a chunked scan: ``lax.scan`` over sequence chunks carrying the
+state h [B, d_inner, N]; within a chunk the recurrence materializes
+[B, chunk, d_inner, N] and is evaluated by an associative scan.  Decode is a
+single state update.  The Pallas kernel (``repro.kernels.mamba``) implements
+the same chunked schedule with VMEM tiling.
+
+State cache for serving: {"h": [B, d_inner, N], "conv": [B, d_conv-1, d_inner]}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    N = cfg.mamba_d_state
+    R = max(1, d // 16)                      # dt_rank
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.mamba_d_conv, di)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, R + 2 * N)) * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (R, di)) * R ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),     # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, init_state=None):
+    """Depthwise causal conv along S.  x [B,S,di], w [d_conv, di]."""
+    d_conv = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(d_conv))
+    new_state = xp[:, -(d_conv - 1):] if d_conv > 1 else pad
+    return out + b, new_state
+
+
+def _ssm_params(params, x, cfg):
+    """x [B,S,di] -> (decay a [B,S,di,N], bx [B,S,di,N], C [B,S,N], dt)."""
+    N = cfg.mamba_d_state
+    R = params["dt_proj"].shape[0]
+    dbc = dense(x, params["x_proj"])
+    dt_r, Bc, Cc = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        dense(dt_r, params["dt_proj"]).astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                        # [B,S,di]
+    A = -jnp.exp(params["A_log"])                            # [di, N]
+    a = jnp.exp(dt[..., None] * A)                           # [B,S,di,N]
+    bx = (dt * x.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+    return a, bx, Cc.astype(jnp.float32), dt
+
+
+def mamba_scan_chunked(a, bx, h0, chunk: int):
+    """Linear recurrence h_t = a_t h_{t-1} + bx_t, scanned by chunks.
+
+    a, bx: [B, S, di, N]; h0 [B, di, N]; returns (h_all [B,S,di,N], h_last).
+    """
+    B, S, di, N = a.shape
+    n_chunks = S // chunk
+    a_c = a.reshape(B, n_chunks, chunk, di, N).swapaxes(0, 1)
+    b_c = bx.reshape(B, n_chunks, chunk, di, N).swapaxes(0, 1)
+
+    def body(h, inputs):
+        ac, bc = inputs
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        aa, hh = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hh = hh + aa * h[:, None]
+        return hh[:, -1], hh
+
+    h_last, h_all = jax.lax.scan(body, h0, (a_c, b_c))
+    h_all = h_all.swapaxes(0, 1).reshape(B, S, di, N)
+    return h_all, h_last
+
+
+def mamba_prefill(params: dict, x: jax.Array, cfg: ModelConfig, chunk: int = 128):
+    """x [B,S,d] -> (out [B,S,d], state cache)."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    xz = dense(x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(xi)
+    a, bx, Cc, _ = _ssm_params(params, xi, cfg)
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    h_all, h_last = mamba_scan_chunked(a, bx, h0, c)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+    y = y + params["D"] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, params["out_proj"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def mamba_decode(params: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """Single-token step.  x [B,1,d]."""
+    B = x.shape[0]
+    xz = dense(x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi_s, conv_state = _causal_conv(xi, params["conv_w"], params["conv_b"], state["conv"])
+    xi_s = jax.nn.silu(xi_s)
+    a, bx, Cc, _ = _ssm_params(params, xi_s, cfg)
+    h = a[:, 0] * state["h"] + bx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + params["D"] * xi_s.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(y, params["out_proj"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba_ref_sequential(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Step-by-step oracle for tests (slow, exact)."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    xz = dense(x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(xi)
+    a, bx, Cc, _ = _ssm_params(params, xi, cfg)
+    h = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    ys = []
+    for t in range(S):
+        h = a[:, t] * h + bx[:, t]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cc[:, t]))
+    y = jnp.stack(ys, axis=1)
+    y = y + params["D"] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return dense(y, params["out_proj"])

@@ -1,0 +1,152 @@
+"""Optimizers built from scratch (no optax): AdamW and Adafactor.
+
+AdamW keeps fp32 first/second moments per parameter (8 bytes/param) -- the
+default.  Adafactor factors the second moment of matrices into row/col
+statistics (the production choice for the 400B MoE config, where AdamW state
+cannot fit the single-pod HBM budget -- see EXPERIMENTS.md SSPerf).
+
+Both are pure functions over pytrees so GSPMD shards the update math exactly
+like the states are sharded (ZeRO-style placement comes from the sharding
+rules, not from the optimizer).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any          # AdamW: fp32 moments. Adafactor: row stats pytree.
+    v: Any          # AdamW: fp32 moments. Adafactor: col stats pytree.
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# --------------------------------------------------------------------- AdamW
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    params, grads, state: OptState, lr,
+    b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v)
+
+
+# ----------------------------------------------------------------- Adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> OptState:
+    def rows(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(rows, params),
+        v=jax.tree.map(cols, params),
+    )
+
+
+def adafactor_update(
+    params, grads, state: OptState, lr,
+    decay=0.8, eps=1e-30, clip_threshold=1.0, weight_decay=0.0,
+):
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+
+    def upd(p, g, r, c):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p.shape):
+            r = beta * r + (1 - beta) * jnp.mean(g2, axis=-1)
+            c = beta * c + (1 - beta) * jnp.mean(g2, axis=-2)
+            rc = r / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+            vhat = rc[..., None] * c[..., None, :]
+        else:
+            r = beta * r + (1 - beta) * g2
+            vhat = r
+        u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        delta = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), r, c
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_r = treedef.flatten_up_to(state.m)
+    flat_c = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, r, c) for p, g, r, c in zip(flat_p, flat_g, flat_r, flat_c)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        OptState(step=step,
+                 m=treedef.unflatten([o[1] for o in out]),
+                 v=treedef.unflatten([o[2] for o in out])),
+    )
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(kind)

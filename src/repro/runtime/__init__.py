@@ -1,0 +1,1 @@
+from .sharding import ShardPlan, make_constrain, param_pspecs, cache_pspecs  # noqa: F401

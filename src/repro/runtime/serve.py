@@ -1,0 +1,107 @@
+"""Serving runtime: batched prefill + KV-cache decode steps under a plan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import decode_step, forward, init_kv_cache, init_params
+from ..models.config import ModelConfig
+from .sharding import (
+    ShardPlan,
+    cache_pspecs,
+    make_constrain,
+    param_pspecs,
+    sanitize_pspecs,
+    to_shardings,
+)
+
+
+def _sanitized_param_specs(cfg, plan, mesh):
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return sanitize_pspecs(param_pspecs(cfg, plan, mesh), shapes, mesh)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, plan: ShardPlan):
+    """Signature depends on the frontend:
+    none        -> prefill(params, tokens)
+    audio_stub  -> prefill(params, frontend_embeds)
+    vision_stub -> prefill(params, tokens, frontend_embeds)
+    """
+    c1 = make_constrain(mesh, plan, zone=1)
+    c2 = make_constrain(mesh, plan, zone=2)
+
+    def core(params, tokens, frontend_embeds):
+        logits, _ = forward(
+            params, cfg, tokens, frontend_embeds,
+            constrain=c1, constrain2=c2,
+            transition_repeat=plan.transition_repeat,
+            collect_cache=False,
+        )
+        return logits
+
+    p_specs = _sanitized_param_specs(cfg, plan, mesh)
+    dp = plan.dp
+    p_sh = to_shardings(mesh, p_specs)
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    emb_sh = NamedSharding(mesh, P(dp, None, None))
+    out_sh = NamedSharding(mesh, P(dp, None, "model"))
+
+    if cfg.frontend == "audio_stub":
+        fn = lambda params, fe: core(params, None, fe)
+        in_sh = (p_sh, emb_sh)
+    elif cfg.frontend == "vision_stub":
+        fn = core
+        in_sh = (p_sh, tok_sh, emb_sh)
+    else:
+        fn = lambda params, tokens: core(params, tokens, None)
+        in_sh = (p_sh, tok_sh)
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh), p_specs
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, plan: ShardPlan,
+                      batch: int | None = None, max_len: int | None = None):
+    """serve_step: one new token against a resident KV cache (donated).
+
+    ``batch``/``max_len`` (when known) let the cache shardings be checked
+    for divisibility against the actual cache shapes."""
+    c = make_constrain(mesh, plan, zone=2)   # decode is single-token: ISP zone
+
+    def step(params, token, position, caches):
+        return decode_step(params, cfg, token, position, caches, constrain=c)
+
+    p_specs = _sanitized_param_specs(cfg, plan, mesh)
+    k_specs = cache_pspecs(cfg, plan)
+    if batch is not None and max_len is not None:
+        cache_shapes = jax.eval_shape(
+            lambda: init_kv_cache(cfg, batch, max_len)
+        )
+        k_specs = sanitize_pspecs(k_specs, cache_shapes, mesh)
+    dp = plan.dp
+    in_sh = (
+        to_shardings(mesh, p_specs),
+        NamedSharding(mesh, P(dp, None)),          # token [B,1]
+        NamedSharding(mesh, P(dp)),                # position [B]
+        to_shardings(mesh, k_specs),
+    )
+    out_sh = (
+        NamedSharding(mesh, P(dp, None, "model")),  # logits
+        to_shardings(mesh, k_specs),
+    )
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(3,))
+    return jitted, {"params": p_specs, "caches": k_specs}
+
+
+def greedy_generate(cfg, params, decode_fn, caches, prompt_last_token, start_pos, steps):
+    """Simple batched greedy loop driving the jitted decode step."""
+    B = prompt_last_token.shape[0]
+    tok = prompt_last_token
+    pos = jnp.full((B,), start_pos, jnp.int32)
+    out = []
+    for _ in range(steps):
+        logits, caches = decode_fn(params, tok, pos, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1), caches

@@ -1,0 +1,124 @@
+"""Distributed train step builder: loss -> grads -> clip -> optimizer.
+
+Features:
+* two-zone Scope execution (WSP/ISP transition from the schedule),
+* gradient accumulation via ``lax.scan`` over microbatches (memory lever),
+* optimizer selected per config (AdamW / Adafactor for the 400B MoE),
+* donated params/opt-state buffers,
+* optional int8 gradient quantization with error feedback (the compressed
+  DP all-reduce path used by the shard_map pipeline runtime; under plain
+  GSPMD it compresses the accumulation buffers).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import init_params, loss_fn
+from ..models.config import ModelConfig
+from ..optim import clip_by_global_norm, cosine_schedule, make_optimizer
+from .compression import compress_decompress
+from .sharding import (
+    ShardPlan,
+    batch_pspecs,
+    make_constrain,
+    opt_pspecs,
+    param_pspecs,
+    sanitize_pspecs,
+    to_shardings,
+    zero_shard,
+)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    plan: ShardPlan,
+    base_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+    compress: bool = False,
+):
+    """Returns (train_step, shardings dict).  train_step(params, opt, batch)
+    -> (params, opt, metrics)."""
+    init_fn, update_fn = make_optimizer(cfg.optimizer)
+    lr = cosine_schedule(base_lr, warmup, total_steps)
+    c1 = make_constrain(mesh, plan, zone=1)
+    c2 = make_constrain(mesh, plan, zone=2)
+    t_rep = plan.transition_repeat
+
+    def microbatch_loss(params, tokens, labels, femb):
+        return loss_fn(
+            params, cfg, tokens, labels, femb,
+            constrain=c1, constrain2=c2, transition_repeat=t_rep,
+        )
+
+    grad_fn = jax.value_and_grad(microbatch_loss)
+
+    def train_step(params, opt_state, batch):
+        tokens = batch.get("tokens")
+        labels = batch["labels"]
+        femb = batch.get("frontend_embeds")
+        A = cfg.accum_steps
+        if A > 1:
+            B = labels.shape[0]
+            assert B % A == 0, (B, A)
+            mb = {
+                k: v.reshape(A, B // A, *v.shape[1:])
+                for k, v in batch.items()
+            }
+
+            def body(carry, xs):
+                loss_acc, g_acc = carry
+                loss, g = grad_fn(params, xs["tokens"], xs["labels"],
+                                  xs.get("frontend_embeds"))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0), mb
+            )
+            loss = loss_sum / A
+            grads = jax.tree.map(lambda g: g / A, grads)
+        else:
+            loss, grads = grad_fn(params, tokens, labels, femb)
+
+        if compress:
+            grads = jax.tree.map(compress_decompress, grads)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = update_fn(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    params_shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    p_specs = sanitize_pspecs(param_pspecs(cfg, plan, mesh), params_shapes, mesh)
+    opt_shapes = jax.eval_shape(init_fn, params_shapes)
+    o_specs = sanitize_pspecs(
+        opt_pspecs(cfg, plan, mesh, p_specs, cfg.optimizer), opt_shapes, mesh
+    )
+    if plan.zero:
+        # shape-aware ZeRO: shard moments over 'data' on a divisible dim
+        o_specs = zero_shard(o_specs, opt_shapes, mesh)
+    b_specs = batch_pspecs(cfg, plan)
+    shardings = {
+        "params": to_shardings(mesh, p_specs),
+        "opt": to_shardings(mesh, o_specs),
+        "batch": to_shardings(mesh, b_specs),
+    }
+    metric_sharding = {
+        "loss": NamedSharding(mesh, P()),
+        "grad_norm": NamedSharding(mesh, P()),
+    }
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(shardings["params"], shardings["opt"], shardings["batch"]),
+        out_shardings=(shardings["params"], shardings["opt"], metric_sharding),
+        donate_argnums=(0, 1),
+    )
+    return jitted, shardings

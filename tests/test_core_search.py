@@ -1,0 +1,202 @@
+"""Search-algorithm tests: CMT, regions, segments, Algorithm 1, baselines.
+
+Includes hypothesis property tests on the scheduler's invariants.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cmt import gen_cmt, validate_clustering
+from repro.core.costmodel import INF, CostModel
+from repro.core.graph import LayerNode, chain, validate_schedule
+from repro.core.hw import mcm_table_iii
+from repro.core.baselines import (
+    schedule_full_pipeline,
+    schedule_scope,
+    schedule_segmented,
+    schedule_sequential,
+)
+from repro.core.regions import proportional_allocate, rebalance, zigzag_placement
+from repro.core.search import exhaustive_search, random_search, search_segment
+from repro.core.segments import divide_segments, min_segments
+from repro.core.workloads import get_cnn
+
+
+def mk_graph(flops_list, parallel=None):
+    layers = []
+    for i, f in enumerate(flops_list):
+        p = parallel[i] if parallel else 28.0
+        layers.append(
+            LayerNode(
+                name=f"l{i}", kind="conv", flops=float(f), weight_bytes=64e3,
+                in_bytes=32e3, out_bytes=32e3, halo_bytes=512.0,
+                wsp_parallel=p, isp_parallel=128.0,
+            )
+        )
+    return chain("synthetic", layers)
+
+
+# ------------------------------------------------------------------- CMT
+
+class TestCMT:
+    def test_rows_cover_all_counts(self):
+        g = mk_graph([1e9] * 10)
+        cmt = gen_cmt(g)
+        assert set(cmt.keys()) == set(range(1, 11))
+
+    def test_every_row_is_valid_contiguous_cover(self):
+        g = get_cnn("alexnet")
+        cmt = gen_cmt(g)
+        for n, clustering in cmt.items():
+            assert len(clustering) == n
+            assert validate_clustering(clustering, len(g))
+
+    def test_merges_most_similar_parallelism_first(self):
+        # layers: parallel 28, 28, 7 -> first merge must join the two 28s
+        g = mk_graph([1e9] * 3, parallel=[28.0, 28.0, 7.0])
+        cmt = gen_cmt(g)
+        assert cmt[2] == ((0, 2), (2, 3))
+
+    @given(st.lists(st.floats(min_value=1.0, max_value=1e4), min_size=2, max_size=24))
+    @settings(max_examples=50, deadline=None)
+    def test_property_valid_for_any_parallelism(self, parallels):
+        g = mk_graph([1e9] * len(parallels), parallel=parallels)
+        cmt = gen_cmt(g)
+        assert set(cmt.keys()) == set(range(1, len(parallels) + 1))
+        for n, clustering in cmt.items():
+            assert validate_clustering(clustering, len(parallels))
+
+
+# ---------------------------------------------------------------- regions
+
+class TestRegions:
+    def test_proportional_sums_and_minimum(self):
+        alloc = proportional_allocate([1.0, 3.0, 8.0, 4.0], 16)
+        assert sum(alloc) == 16
+        assert all(a >= 1 for a in alloc)
+        assert alloc[2] == max(alloc)
+
+    @given(
+        st.lists(st.floats(min_value=0.01, max_value=100.0), min_size=1, max_size=12),
+        st.integers(min_value=12, max_value=64),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_property_proportional(self, loads, chips):
+        alloc = proportional_allocate(loads, chips)
+        assert sum(alloc) == chips
+        assert all(a >= 1 for a in alloc)
+
+    def test_rebalance_improves_or_keeps(self):
+        # loads 1:3, seed [2,2]: mover should shift a chip to the heavy one.
+        def eval_fn(alloc):
+            times = [1.0 / alloc[0], 3.0 / alloc[1]]
+            return max(times), times
+
+        alloc, lat, _ = rebalance([2, 2], eval_fn)
+        assert lat <= 1.5
+        assert alloc == [1, 3]
+
+    def test_zigzag_contiguous_and_disjoint(self):
+        regions = zigzag_placement([5, 7, 4], (4, 4))
+        flat = [c for r in regions for c in r]
+        assert len(flat) == len(set(flat)) == 16
+        assert [len(r) for r in regions] == [5, 7, 4]
+
+
+# --------------------------------------------------------------- segments
+
+class TestSegments:
+    def test_divide_covers_and_balances(self):
+        g = get_cnn("resnet18")
+        hw = mcm_table_iii(64)
+        split = divide_segments(g, hw, 64, 3)
+        assert split is not None
+        assert split[0][0] == 0 and split[-1][1] == len(g)
+        for (a, b), (c, d) in zip(split, split[1:]):
+            assert b == c
+
+    def test_min_segments_capacity(self):
+        g = get_cnn("resnet152")       # 58 MB of weights
+        hw = mcm_table_iii(16)         # 16 MiB package capacity
+        s = min_segments(g, hw, 16)
+        assert s is not None and s >= 4  # needs >= ceil(58/16.8) segments
+
+
+# ------------------------------------------------------------ Algorithm 1
+
+class TestAlgorithm1:
+    def test_beats_or_matches_exhaustive_within_2pct(self):
+        g = chain("sub", get_cnn("alexnet").layers[:4])
+        hw = mcm_table_iii(6)
+        cost = CostModel(hw, m_samples=16)
+        best = next(exhaustive_search(cost, g, 6))
+        res = search_segment(cost, g, 0, 4, 6)
+        assert res.latency <= best[0] * 1.02
+
+    def test_top_fraction_of_random_space(self):
+        """Paper SSV-B(1): search result ranks in the top 0.05% of the space."""
+        g = get_cnn("alexnet")
+        hw = mcm_table_iii(16)
+        cost = CostModel(hw, m_samples=16)
+        res = search_segment(cost, g, 0, len(g), 16)
+        samples = random_search(cost, g, 16, samples=4000, seed=7)
+        beaten = sum(1 for s in samples if s < res.latency)
+        assert beaten / len(samples) <= 0.0005 * 10  # generous CI at 4k samples
+
+    def test_uniform_mode_regions_equal(self):
+        from repro.core.regions import RegionMode
+
+        g = get_cnn("alexnet")
+        hw = mcm_table_iii(16)
+        cost = CostModel(hw, m_samples=16)
+        res = search_segment(cost, g, 0, len(g), 16, mode=RegionMode.UNIFORM)
+        sizes = {c.region_chips for c in res.clusters}
+        assert len(sizes) == 1
+
+
+# ---------------------------------------------------------------- system
+
+class TestSystemSchedules:
+    @pytest.mark.parametrize("net", ["alexnet", "darknet19", "resnet18"])
+    def test_scope_schedule_valid(self, net):
+        g = get_cnn(net)
+        hw = mcm_table_iii(64)
+        cost = CostModel(hw, m_samples=16)
+        s = schedule_scope(g, cost, 64)
+        assert s is not None and s.latency < INF
+        validate_schedule(g, s, 64)
+
+    def test_scope_never_loses_to_segmented(self):
+        """Merged pipeline generalizes segmented (paper SSI-A) -- given the
+        same segment counts, Scope's space contains segmented's schedules."""
+        g = get_cnn("resnet18")
+        hw = mcm_table_iii(64)
+        cost = CostModel(hw, m_samples=16)
+        seg = schedule_segmented(g, cost, 64)
+        sc = schedule_scope(g, cost, 64)
+        assert sc.latency <= seg.latency * 1.0 + 1e-12
+
+    def test_full_pipeline_invalid_when_layers_exceed_chips(self):
+        g = get_cnn("resnet18")  # 17 layers
+        hw = mcm_table_iii(16)
+        cost = CostModel(hw, m_samples=16)
+        assert schedule_full_pipeline(g, cost, 16) is None
+
+    def test_sequential_degrades_at_scale(self):
+        """Paper Fig. 9: sequential throughput saturates with chip count."""
+        g = get_cnn("alexnet")
+        tps = []
+        for chips in (16, 256):
+            hw = mcm_table_iii(chips)
+            cost = CostModel(hw, m_samples=16)
+            s = schedule_sequential(g, cost, chips)
+            tps.append(cost.throughput(g, s.latency))
+        assert tps[1] < tps[0] * 16 * 0.5  # far from linear scaling
+
+    def test_scope_beats_sequential_at_scale(self):
+        g = get_cnn("resnet50")
+        hw = mcm_table_iii(256)
+        cost = CostModel(hw, m_samples=16)
+        seq = schedule_sequential(g, cost, 256)
+        sc = schedule_scope(g, cost, 256)
+        assert sc.latency < seq.latency

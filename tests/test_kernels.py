@@ -1,0 +1,172 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles.
+
+Shape/dtype sweeps per kernel + hypothesis property tests (assignment SSc).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba.ops import mamba_scan
+from repro.kernels.mamba.ref import mamba_scan_ref
+from repro.kernels.qmatmul.ops import qmatmul
+from repro.kernels.qmatmul.ref import qmatmul_ref, quantize_cols, quantize_rows
+from repro.kernels.rwkv6.ops import wkv6
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ----------------------------------------------------------- flash attention
+
+FA_CASES = [
+    # (B, H, KV, S, hd, causal, window, softcap, dtype)
+    (2, 4, 2, 256, 64, True, 0, 0.0, jnp.float32),
+    (1, 4, 1, 256, 128, True, 0, 50.0, jnp.float32),
+    (2, 2, 2, 384, 64, True, 128, 0.0, jnp.float32),
+    (1, 8, 4, 512, 64, False, 0, 0.0, jnp.float32),
+    (1, 2, 2, 256, 64, True, 0, 0.0, jnp.bfloat16),
+    (1, 16, 2, 128, 128, True, 64, 30.0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, H, KV, S, hd, causal, window, cap, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal, window, cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=tol, atol=tol
+    )
+
+
+@given(
+    bq=st.sampled_from([64, 128]),
+    bk=st.sampled_from([64, 128]),
+    s_mult=st.integers(min_value=2, max_value=4),
+)
+@settings(max_examples=6, deadline=None)
+def test_flash_attention_block_shape_invariance(bq, bk, s_mult):
+    """Output must not depend on the BlockSpec tiling."""
+    S = 128 * s_mult
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, S, 64))
+    k = jax.random.normal(ks[1], (1, 2, S, 64))
+    v = jax.random.normal(ks[2], (1, 2, S, 64))
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- wkv6
+
+WKV_CASES = [(2, 2, 64, 16, 16), (1, 4, 128, 64, 32), (2, 1, 96, 32, 32), (1, 2, 256, 64, 64)]
+
+
+@pytest.mark.parametrize("case", WKV_CASES)
+def test_wkv6_matches_oracle(case):
+    B, H, S, hd, chunk = case
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    w = jax.random.uniform(ks[3], (B, H, S, hd), minval=0.7, maxval=0.999)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    out, s_last = wkv6(r, k, v, jnp.log(w), u, chunk=chunk, interpret=True)
+    ro, rs = wkv6_ref(r, k, v, jnp.log(w), u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ro), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_last), np.asarray(rs), rtol=2e-4, atol=2e-4)
+
+
+@given(chunk=st.sampled_from([8, 16, 32, 64]))
+@settings(max_examples=4, deadline=None)
+def test_wkv6_chunk_invariance(chunk):
+    """State handoff must make the result chunk-size independent."""
+    ks = jax.random.split(KEY, 5)
+    B, H, S, hd = 1, 2, 64, 16
+    r = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    w = jax.random.uniform(ks[3], (B, H, S, hd), minval=0.75, maxval=0.995)
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    out, _ = wkv6(r, k, v, jnp.log(w), u, chunk=chunk, interpret=True)
+    ref, _ = wkv6_ref(r, k, v, jnp.log(w), u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------------- mamba
+
+MAMBA_CASES = [(2, 64, 128, 8, 64, 32), (1, 128, 256, 16, 128, 64), (1, 96, 64, 4, 64, 32)]
+
+
+@pytest.mark.parametrize("case", MAMBA_CASES)
+def test_mamba_scan_matches_oracle(case):
+    B, S, di, N, bd, chunk = case
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    x = jax.random.normal(ks[1], (B, S, di))
+    A = -jnp.exp(jax.random.normal(ks[2], (di, N)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    D = jnp.ones((di,))
+    y, h = mamba_scan(dt, x, A, Bc, Cc, D, block_d=bd, chunk=chunk, interpret=True)
+    yr, hr = mamba_scan_ref(dt, x, A, Bc, Cc, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ qmatmul
+
+@pytest.mark.parametrize("mnk", [(128, 128, 128), (256, 128, 384), (128, 256, 256)])
+def test_qmatmul_exact_int_arithmetic(mnk):
+    """int8 x int8 -> int32 must be bit-exact vs the oracle."""
+    M, N, K = mnk
+    ks = jax.random.split(KEY, 2)
+    xq = jax.random.randint(ks[0], (M, K), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (K, N), -127, 128, jnp.int8)
+    xs = jnp.ones((M,), jnp.float32)
+    ws = jnp.ones((N,), jnp.float32)
+    out = qmatmul(xq, wq, xs, ws, interpret=True)
+    ref = qmatmul_ref(xq, wq, xs, ws)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_qmatmul_quantized_close_to_fp():
+    """End-to-end: quantize fp32 operands, int8 matmul ~ fp32 matmul."""
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (128, 256))
+    w = jax.random.normal(ks[1], (256, 128)) * 0.1
+    xq, xs = quantize_rows(x)
+    wq, ws = quantize_cols(w)
+    out = qmatmul(xq, wq, xs, ws, interpret=True)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, rel
+
+
+@given(
+    m=st.sampled_from([128, 256]),
+    k_steps=st.integers(min_value=1, max_value=3),
+)
+@settings(max_examples=4, deadline=None)
+def test_qmatmul_k_accumulation_property(m, k_steps):
+    """Accumulating over K blocks must equal the single-block result."""
+    K = 128 * k_steps
+    ks = jax.random.split(KEY, 2)
+    xq = jax.random.randint(ks[0], (m, K), -5, 6, jnp.int8)
+    wq = jax.random.randint(ks[1], (K, 128), -5, 6, jnp.int8)
+    s1 = jnp.ones((m,), jnp.float32)
+    s2 = jnp.ones((128,), jnp.float32)
+    out = qmatmul(xq, wq, s1, s2, block_k=128, interpret=True)
+    ref = qmatmul_ref(xq, wq, s1, s2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests: DSE -> plan -> train/serve on a real (1-device)
+mesh, with checkpointed fault-tolerant training over the data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.workloads.lm import lm_graph
+from repro.data import make_batch_iterator
+from repro.ft import ResilientTrainer
+from repro.launch.mesh import single_device_mesh
+from repro.models import init_kv_cache, init_params
+from repro.optim import make_optimizer
+from repro.runtime.planner import plan_for_cell
+from repro.runtime.serve import build_decode_step, build_prefill_step, greedy_generate
+from repro.runtime.train import build_train_step
+
+
+class TestPlanner:
+    def test_plan_decode_is_isp(self):
+        cfg = get_smoke_config("granite-3-8b")
+        plan = plan_for_cell(cfg, 1024, 8, ("data", "model"), 16, kind="decode")
+        assert plan.p1 == plan.p2 == "ISP"
+
+    def test_plan_train_runs_dse(self):
+        cfg = get_smoke_config("granite-3-8b")
+        plan = plan_for_cell(cfg, 4096, 32, ("data", "model"), 16, kind="train")
+        assert plan.meta.get("dse")
+        assert plan.p1 in ("WSP", "ISP")
+
+    @pytest.mark.parametrize("arch", ["granite-3-8b", "jamba-v0.1-52b", "rwkv6-3b"])
+    def test_lm_graph_flops_match_param_count(self, arch):
+        """Graph-export sanity: forward FLOPs ~ 2 * N_active * tokens."""
+        from repro.configs import ARCHS
+
+        cfg = ARCHS[arch]
+        S = 2048
+        g = lm_graph(cfg, S)
+        expected = 2.0 * cfg.n_active_params * S
+        # attention quadratic term and capacity overhead allow slack
+        assert 0.7 * expected < g.total_flops < 2.0 * expected
+
+    def test_lm_graph_weight_bytes_match(self):
+        from repro.configs import ARCHS
+
+        cfg = ARCHS["granite-3-8b"]
+        g = lm_graph(cfg, 1024)
+        expected = 2.0 * cfg.n_params           # bf16
+        assert abs(g.total_weight_bytes - expected) / expected < 0.1
+
+
+class TestEndToEnd:
+    def test_train_ckpt_restart_serve(self, tmp_path):
+        """The full story: plan -> jitted train steps -> injected failure ->
+        restart from checkpoint -> greedy decoding from the trained params."""
+        cfg = get_smoke_config("granite-3-8b")
+        mesh = single_device_mesh()
+        plan = plan_for_cell(cfg, 32, 8, ("data", "model"), 1, kind="train",
+                             use_dse=False)
+        step, _ = build_train_step(cfg, mesh, plan, base_lr=5e-3, warmup=5)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        init_fn, _u = make_optimizer(cfg.optimizer)
+        opt = init_fn(params)
+
+        it = make_batch_iterator(cfg, batch=8, seq=32, seed=0)
+        batches = {}
+
+        def batch_fn(s):
+            while s not in batches:
+                i, b = next(it)
+                batches[i] = {k: jnp.asarray(v) for k, v in b.items()}
+            return batches[s]
+
+        def injector(s):
+            if s == 12 and not getattr(injector, "fired", False):
+                injector.fired = True
+                raise RuntimeError("injected failure")
+
+        trainer = ResilientTrainer(
+            train_step=step, batch_fn=batch_fn, ckpt_dir=str(tmp_path),
+            ckpt_every=5,
+        )
+        params, opt, hist = trainer.run(params, opt, n_steps=20,
+                                        failure_injector=injector)
+        losses = [h["loss"] for h in hist]
+        assert losses[-1] < losses[0], losses   # learning the Markov chain
+        assert getattr(injector, "fired", False)
+
+        # serve from the trained params
+        dstep, _ = build_decode_step(cfg, mesh, plan, batch=4, max_len=16)
+        caches = init_kv_cache(cfg, 4, 16, jnp.float32)
+        toks, _ = greedy_generate(
+            cfg, params, dstep, caches,
+            prompt_last_token=jnp.ones((4, 1), jnp.int32), start_pos=0, steps=4,
+        )
+        assert toks.shape == (4, 4)
+        assert int(toks.max()) < cfg.padded_vocab
+
+    def test_prefill_matches_forward(self):
+        cfg = get_smoke_config("paligemma-3b")
+        mesh = single_device_mesh()
+        plan = plan_for_cell(cfg, 32, 4, ("data", "model"), 1, kind="prefill",
+                             use_dse=False)
+        pf, _ = build_prefill_step(cfg, mesh, plan)
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+        emb = jax.random.normal(jax.random.PRNGKey(3), (2, cfg.frontend_tokens, cfg.d_model))
+        logits = pf(params, toks, emb)
+        assert logits.shape == (2, 12 + cfg.frontend_tokens, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
