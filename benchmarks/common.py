@@ -5,7 +5,8 @@ import json
 import os
 import time
 
-from repro.core.costmodel import INF, CostModel
+from repro.core.costmodel import INF
+from repro.core.fastcost import FastCostModel
 from repro.core.baselines import ALL_METHODS
 from repro.core.hw import mcm_table_iii
 from repro.core.workloads import get_cnn
@@ -33,7 +34,8 @@ def cached(name: str, fn, refresh: bool = False):
 def run_method(net: str, chips: int, method: str) -> dict:
     g = get_cnn(net)
     hw = mcm_table_iii(chips)
-    cost = CostModel(hw, m_samples=M_SAMPLES)
+    # The vectorized + memoized engine (exact parity with CostModel).
+    cost = FastCostModel(hw, m_samples=M_SAMPLES)
     t0 = time.time()
     sched = ALL_METHODS[method](g, cost, chips)
     dt = time.time() - t0

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import statistics
 
-from repro.core.costmodel import CostModel
+from repro.core.fastcost import FastCostModel
 from repro.core.baselines import schedule_scope, schedule_segmented
 from repro.core.energy import schedule_energy
 from repro.core.hw import mcm_table_iii
@@ -34,7 +34,7 @@ def run(refresh: bool = False):
     def _go():
         g = get_cnn(NET)
         hw = mcm_table_iii(CHIPS)
-        cost = CostModel(hw, m_samples=M_SAMPLES)
+        cost = FastCostModel(hw, m_samples=M_SAMPLES)
         seg = schedule_segmented(g, cost, CHIPS)
         sc = schedule_scope(g, cost, CHIPS)
         e_seg = schedule_energy(cost, g, seg)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.costmodel import CostModel
+from repro.core.fastcost import FastCostModel
 from repro.core.graph import chain
 from repro.core.hw import mcm_table_iii
 from repro.core.search import exhaustive_search, random_search, search_segment
@@ -23,7 +23,7 @@ def run(refresh: bool = False, samples: int = 50_000):
     def _go():
         g = get_cnn("alexnet")
         hw = mcm_table_iii(16)
-        cost = CostModel(hw, m_samples=M_SAMPLES)
+        cost = FastCostModel(hw, m_samples=M_SAMPLES)
         t0 = time.time()
         res = search_segment(cost, g, 0, len(g), 16)
         alg1_s = time.time() - t0

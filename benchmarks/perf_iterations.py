@@ -48,10 +48,16 @@ def run_variant(arch, shape, label, hypothesis, plan=None, cfg_patch=None,
             res["roofline"][k] *= accum
     r = res["roofline"]
     mem = res["memory_analysis"]
+    dse_meta = res["plan"].get("dse_meta", {})
     row = {
         "label": label,
         "hypothesis": hypothesis,
         "plan": res["plan"],
+        # DSE cost of producing this plan (FastCostModel; the memoized
+        # engine from fastcost.py -- see BENCH_search_time.json for the
+        # before/after sweep comparison).
+        "dse_s": dse_meta.get("dse_s"),
+        "dse_engine": dse_meta.get("dse_engine"),
         "compute_s": r["compute_s"],
         "memory_s": r["memory_s"],
         "collective_s": r["collective_s"],

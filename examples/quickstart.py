@@ -6,7 +6,7 @@ segments / clusters / regions / partitions -- the paper's Table I variables.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import CostModel, mcm_table_iii
+from repro.core import FastCostModel, mcm_table_iii
 from repro.core.baselines import ALL_METHODS
 from repro.core.workloads import get_cnn
 
@@ -14,7 +14,7 @@ NET, CHIPS = "resnet50", 64
 
 graph = get_cnn(NET)
 hw = mcm_table_iii(CHIPS)
-cost = CostModel(hw, m_samples=16)
+cost = FastCostModel(hw, m_samples=16)
 
 print(f"{NET}: {len(graph)} layers, {graph.total_flops / 1e9:.1f} GFLOPs, "
       f"{graph.total_weight_bytes / 1e6:.1f} MB weights on {CHIPS} chiplets\n")

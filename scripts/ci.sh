@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests (minus slow markers) + DSE perf smoke budget.
+#
+#   ./scripts/ci.sh            # full run
+#   CI_SKIP_PERF=1 ./scripts/ci.sh   # tests only
+#
+# The perf smoke asserts a full Scope DSE on resnet50 x 64 finishes under
+# CI_DSE_BUDGET_S seconds (default 10; the fast engine needs ~0.5s, the
+# pre-PR seed needed ~1.7s and the reference engine ~7s) so an evaluation-
+# engine regression fails loudly instead of silently re-inflating every
+# benchmark.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests (-m 'not slow') =="
+python -m pytest -q -m "not slow"
+
+if [ "${CI_SKIP_PERF:-0}" != "1" ]; then
+  echo "== DSE search-time smoke budget =="
+  python - <<'PY'
+import os
+import time
+
+from repro.core.fastcost import FastCostModel
+from repro.core.baselines import schedule_scope
+from repro.core.hw import mcm_table_iii
+from repro.core.workloads import get_cnn
+
+budget = float(os.environ.get("CI_DSE_BUDGET_S", "10"))
+g = get_cnn("resnet50")
+cost = FastCostModel(mcm_table_iii(64), m_samples=16)
+t0 = time.time()
+sched = schedule_scope(g, cost, 64)
+dt = time.time() - t0
+print(f"resnet50 x 64 full DSE: {dt:.2f}s (budget {budget:.0f}s), "
+      f"latency {sched.latency:.6g}, stats {cost.stats}")
+assert sched is not None and sched.latency < float("inf"), "DSE found no schedule"
+assert dt <= budget, f"DSE perf regression: {dt:.2f}s > {budget:.0f}s budget"
+PY
+fi
+
+echo "CI OK"

@@ -1,0 +1,1 @@
+"""Version/dependency compatibility shims (see hypothesis_fallback)."""

@@ -1,0 +1,9 @@
+"""Pallas-TPU version shims shared by the kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells this TPUCompilerParams; keep one name for both.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

@@ -1,5 +1,6 @@
 """Scope core: the paper's merged-pipeline scheduler and analytical models."""
 from .costmodel import CostModel, LayerTime  # noqa: F401
+from .fastcost import FastCostModel  # noqa: F401
 from .graph import (  # noqa: F401
     PARTITION_EP,
     PARTITION_ISP,

@@ -290,6 +290,45 @@ class CostModel:
         n_cl = len(clusters)
         return load + (self.m + n_cl - 1) * bottleneck, times
 
+    # --------------------------------------------------------- DSE interface
+    def segment_evaluator(self, graph, seg_lo, clustering, partitions,
+                          transition=None):
+        """Return ``eval_fn(alloc) -> (latency, per_cluster_times)``.
+
+        ``transition`` is an optional Algorithm 1 sweep hint (ignored here;
+        see :meth:`repro.core.fastcost.FastCostModel.segment_evaluator`).
+
+        The DSE (search.py) funnels every candidate region allocation of a
+        fixed (clustering, partitions) choice through this closure.  The
+        reference implementation rebuilds ClusterAssignments and re-derives
+        every cluster from scratch; :class:`repro.core.fastcost.FastCostModel`
+        overrides it with a vectorized, memoized evaluator.
+        """
+        def eval_fn(alloc):
+            clusters = tuple(
+                ClusterAssignment(
+                    layer_lo=seg_lo + lo,
+                    layer_hi=seg_lo + hi,
+                    region_chips=chips,
+                    partitions=partitions[lo:hi],
+                )
+                for (lo, hi), chips in zip(clustering, alloc)
+            )
+            return self.segment_time(graph, clusters)
+
+        return eval_fn
+
+    def segment_sweeper(self, graph, seg_lo, clustering):
+        """Factory used by Algorithm 1: ``sweeper(partitions, transition) ->
+        eval_fn`` for one clustering.  FastCostModel overrides this with a
+        reusable evaluator that updates incrementally along the sweep."""
+        def configure(partitions, transition=None):
+            return self.segment_evaluator(
+                graph, seg_lo, clustering, partitions, transition
+            )
+
+        return configure
+
     # ---------------------------------------------------------------- system
     def system_time(self, graph: LayerGraph, segments) -> float:
         """Eq. 1."""

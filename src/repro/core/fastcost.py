@@ -1,0 +1,722 @@
+"""Batched + memoized DSE evaluation engine (drop-in for :class:`CostModel`).
+
+The reference :class:`~repro.core.costmodel.CostModel` walks Python objects
+layer by layer for every candidate the DSE proposes.  Algorithm 1 proposes
+millions of candidates for the paper's larger cases (resnet152 x 256), and
+nearly all of them share cluster sub-problems with candidates evaluated
+moments earlier: the transition-point sweep changes a few layers' partitions,
+the CMT sweep re-splits the same layer ranges, and ``rebalance`` moves one
+chip between two regions while every other region is untouched.
+
+:class:`FastCostModel` exploits this twice over:
+
+1. **Vectorized cluster evaluation.**  Per graph it precomputes NumPy arrays
+   of ``flops``, ``weight_bytes``, ``in/out_bytes``, ``halo_bytes``,
+   ``wsp/isp_parallel`` and expert counts (plus a weight-bytes prefix sum for
+   segment load terms).  A cluster's computation time (Eq. 5), intra-region
+   communication (Table II Case 1), and the greedy weight-placement plan
+   (paper SSIII-B) are then array expressions over ``layers[lo:hi]`` instead
+   of per-layer Python loops.  The array expressions replicate the reference
+   model's arithmetic *operation by operation* so results agree to the last
+   few ulps (the parity suite in ``tests/test_fastcost.py`` asserts 1e-9
+   rtol; in practice values are almost always bit-identical).
+
+2. **Cross-candidate memoization.**  The steady-state beat time of a cluster
+   (Eq. 3 body) depends only on
+
+   ``(graph, layer_lo, layer_hi, partitions, region_chips,
+      next_first_partition, next_chips)``
+
+   which is exactly the memo key.  Why this is sound: every term of the
+   reference ``cluster_time`` reads only (a) the layer records in
+   ``[layer_lo, layer_hi)`` -- fixed by the graph and the bounds, (b) the
+   per-layer partition choices and the region size ``n`` -- in the key, and
+   (c) for the *last* layer's Table II Case 2 hand-off, the next cluster's
+   first-layer partition and region size -- also in the key.  Nothing else
+   (segment membership, position within the segment, the allocation of other
+   regions) enters the formula, so two candidates that agree on the key have
+   equal cluster cost by construction.  The memo is shared across the
+   transition-point sweep, the CMT sweep, the rebalance walk, the
+   segment-count sweep, and the baselines, because they all funnel through
+   :meth:`FastCostModel.cluster_time` / :meth:`segment_evaluator`.
+
+The memo is also what makes ``rebalance`` *incremental*: moving one chip
+from region ``f`` to region ``s`` changes the keys of clusters ``f`` and
+``s`` (their ``region_chips``) and of their left boundary neighbors
+``f-1`` / ``s-1`` (their ``next_chips``); ``_SegmentSweep.move`` re-probes
+exactly those slots and every other cluster of the segment keeps its cached
+time, so a rebalance step costs O(changed clusters), not O(all clusters).
+``FastCostModel.stats`` (segment_evals / cluster_computes / memo sizes)
+exposes this in benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from .costmodel import INF, CostModel
+from .graph import ClusterAssignment, LayerGraph
+from .hw import eff
+
+_WSP, _ISP, _EP = 0, 1, 2
+_CODE = {"WSP": _WSP, "ISP": _ISP, "EP": _EP}
+_PSTR = {_WSP: "WSP", _ISP: "ISP", _EP: "EP"}
+
+
+@dataclass(frozen=True)
+class _GraphData:
+    """Per-graph NumPy precomputation (held alive for id() stability)."""
+    graph: LayerGraph
+    flops: np.ndarray
+    weight_bytes: np.ndarray
+    in_bytes: np.ndarray
+    out_bytes: np.ndarray
+    halo_bytes: np.ndarray
+    wsp: np.ndarray
+    isp: np.ndarray
+    n_experts: np.ndarray
+    active_experts: np.ndarray
+    is_expert: np.ndarray          # n_experts > 1 (apply_ep's flip condition)
+    expert_prefix: np.ndarray      # prefix sum of is_expert, len L+1
+    wprefix: np.ndarray            # prefix sum of weight_bytes, len L+1
+
+
+def _graph_data(graph: LayerGraph) -> _GraphData:
+    ls = graph.layers
+    arr = lambda f: np.array([f(l) for l in ls], dtype=np.float64)
+    w = arr(lambda l: l.weight_bytes)
+    nexp = arr(lambda l: float(l.n_experts))
+    is_expert = nexp > 1
+    return _GraphData(
+        graph=graph,
+        flops=arr(lambda l: l.flops),
+        weight_bytes=w,
+        in_bytes=arr(lambda l: l.in_bytes),
+        out_bytes=arr(lambda l: l.out_bytes),
+        halo_bytes=arr(lambda l: l.halo_bytes),
+        wsp=arr(lambda l: l.wsp_parallel),
+        isp=arr(lambda l: l.isp_parallel),
+        n_experts=nexp,
+        active_experts=arr(lambda l: float(l.active_experts)),
+        is_expert=is_expert,
+        expert_prefix=np.concatenate(([0], np.cumsum(is_expert))),
+        wprefix=np.concatenate(([0.0], np.cumsum(w))),
+    )
+
+
+def _veff(dim: np.ndarray, granule: int) -> np.ndarray:
+    """Vectorized :func:`repro.core.hw.eff` (same expression order).
+
+    ``np.maximum(tiles, 1.0)`` only guards the ``dim <= 0`` lanes (whose
+    result is overwritten with 1e-9 anyway); for dim > 0, tiles >= 1 and the
+    quotient is bit-identical to the scalar ``eff``.
+    """
+    tiles = np.ceil(dim / granule)
+    e = dim / (granule * np.maximum(tiles, 1.0))
+    return np.where(dim <= 0, 1e-9, e)
+
+
+def _seqsum(a) -> float:
+    """Left-to-right Python summation, matching the reference model's ``sum``/
+    ``+=`` accumulation bit-for-bit (NumPy's pairwise sum would not)."""
+    return sum(a.tolist(), 0.0)
+
+
+_STATIC = None      # sentinel key holding a cell's _ClusterStatic
+_BODY = "body"      # sentinel key holding a cell's per-n body cache
+_INF_BODY = (INF,)  # marker: placement infeasible at this n
+# Below this cluster size a tight scalar loop beats NumPy dispatch overhead;
+# the scalar path reuses the reference model's exact scalar arithmetic.
+_SCALAR_MAX_LAYERS = 32
+
+
+class _ClusterStatic:
+    """Allocation-independent precomputation for one (lo, hi, partitions).
+
+    Everything here depends only on the memo cell's identity, so it is built
+    once and reused for every region size ``n`` the DSE probes against this
+    cluster -- the per-``n`` cost below is a handful of array expressions.
+    """
+
+    __slots__ = (
+        "lo", "hi", "last_layer", "last_p", "fl", "w", "wsp",
+        "isp", "is_wsp", "is_isp", "is_ep", "any_ep", "m_base", "men",
+        "flip_order", "flip_w", "out_i", "halo_i", "ep_edge", "ww_edge",
+        "iw_edge", "rows", "codes_l", "flip_l", "w_l",
+    )
+
+    def __init__(self, gd: _GraphData, lo: int, hi: int, codes: np.ndarray):
+        self.lo, self.hi = lo, hi
+        self.last_layer = gd.graph.layers[hi - 1]
+        self.last_p = _PSTR[int(codes[-1])]
+        self.fl = gd.flops[lo:hi]
+        self.w = gd.weight_bytes[lo:hi]
+        self.wsp = gd.wsp[lo:hi]
+        self.isp = gd.isp[lo:hi]
+        is_wsp, is_isp, is_ep = codes == _WSP, codes == _ISP, codes == _EP
+        self.is_wsp, self.is_isp, self.is_ep = is_wsp, is_isp, is_ep
+        self.any_ep = bool(is_ep.any())
+        # EP activation dim is n-independent (Eq. 5 EP branch); others get
+        # the plain wsp dim here and are divided by n per allocation.
+        self.m_base = np.where(
+            is_ep,
+            self.wsp * (gd.active_experts[lo:hi] / np.maximum(1.0, gd.n_experts[lo:hi])),
+            self.wsp,
+        )
+        self.men = np.maximum(1.0, gd.n_experts[lo:hi])
+        # Distributed-weight flip order: replicated WSP layers, largest
+        # first; stable sort matches the reference ``sorted(key=-w)``.
+        wsp_idx = np.nonzero(is_wsp)[0]
+        self.flip_order = wsp_idx[np.argsort(-self.w[wsp_idx], kind="stable")]
+        self.flip_w = self.w[self.flip_order]
+        # Table II Case 1 edge classification for intra-cluster hand-offs.
+        if hi - lo > 1:
+            p, q = codes[:-1], codes[1:]
+            self.out_i = gd.out_bytes[lo : hi - 1]
+            self.halo_i = gd.halo_bytes[lo : hi - 1]
+            self.ep_edge = (p == _EP) | (q == _EP)
+            self.ww_edge = (p == _WSP) & (q == _WSP)
+            self.iw_edge = (p == _ISP) & (q == _WSP)
+        else:
+            self.out_i = self.halo_i = self.ep_edge = self.ww_edge = self.iw_edge = None
+        # Scalar fast path (small clusters): per-layer tuples in plain
+        # Python floats, so a body evaluation is one tight loop with the
+        # reference model's exact arithmetic and no NumPy dispatch overhead.
+        if hi - lo <= _SCALAR_MAX_LAYERS:
+            self.codes_l = codes.tolist()
+            self.w_l = self.w.tolist()
+            self.rows = list(zip(
+                self.fl.tolist(), self.w_l, self.wsp.tolist(),
+                self.isp.tolist(), self.codes_l, gd.out_bytes[lo:hi].tolist(),
+                gd.halo_bytes[lo:hi].tolist(), self.m_base.tolist(),
+                self.men.tolist(),
+            ))
+            self.flip_l = self.flip_order.tolist()
+        else:
+            self.rows = None
+            self.codes_l = self.flip_l = self.w_l = None
+
+
+class FastCostModel(CostModel):
+    """CostModel-compatible engine with vectorized + memoized evaluation.
+
+    Exact-parity contract: for any (graph, schedule) the reference model can
+    evaluate, ``cluster_time`` / ``segment_time`` / ``system_time`` return
+    the same values within 1e-9 rtol, and the DSE driven through
+    :meth:`segment_evaluator` picks the same argmin schedules.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._graphs: dict[int, _GraphData] = {}
+        # Two-level memo: (graph, lo, hi, partitions) -> {(n, next_p0,
+        # next_n) -> time}.  The outer lookup (hashing the partition tuple)
+        # happens once per candidate; the per-allocation probes in the
+        # rebalance inner loop only hash small int tuples.
+        self._memo: dict[tuple, dict] = {}
+        self._codes_cache: dict[tuple[str, ...], np.ndarray] = {}
+        self._evals = 0
+        self._misses = 0
+
+    # ------------------------------------------------------------- plumbing
+    def graph_data(self, graph: LayerGraph) -> _GraphData:
+        gd = self._graphs.get(id(graph))
+        if gd is None or gd.graph is not graph:
+            gd = _graph_data(graph)
+            self._graphs[id(graph)] = gd
+        return gd
+
+    def clear_memo(self) -> None:
+        self._graphs.clear()
+        self._memo.clear()
+        self._evals = self._misses = 0
+
+    @property
+    def stats(self) -> dict:
+        """Counters proving the memo/incrementality claims in benchmarks."""
+        return {
+            "segment_evals": self._evals,
+            "cluster_computes": self._misses,
+            "memo_cells": len(self._memo),
+            "memo_entries": sum(len(c) - 2 for c in self._memo.values()),
+        }
+
+    def _cluster_cell(
+        self, gd: _GraphData, lo: int, hi: int, partitions: tuple[str, ...]
+    ) -> dict:
+        """Memo cell for an explicit partition tuple (generic API path)."""
+        key = (id(gd.graph), lo, hi, partitions)
+        cell = self._memo.get(key)
+        if cell is None:
+            cell = self._memo[key] = {
+                _STATIC: _ClusterStatic(gd, lo, hi, self._codes(partitions)),
+                _BODY: {},
+            }
+        return cell
+
+    def _cluster_cell_hint(
+        self, gd: _GraphData, lo: int, hi: int, k: int, ep: bool
+    ) -> dict:
+        """Memo cell for a WSP^k ISP^(len-k) transition slice (DSE path).
+
+        Algorithm 1's partition dimension only ever produces transition
+        slices (optionally with MoE layers flipped to EP), so the DSE keys
+        cells by the small ``(lo, hi, k, ep)`` tuple instead of hashing a
+        partition tuple per probe -- and slices that coincide across
+        different segment-level transition points share one cell.
+        """
+        key = (id(gd.graph), lo, hi, k, ep)
+        cell = self._memo.get(key)
+        if cell is None:
+            codes = np.full(hi - lo, _ISP, dtype=np.int8)
+            codes[:k] = _WSP
+            if ep:
+                codes[gd.is_expert[lo:hi]] = _EP
+            cell = self._memo[key] = {
+                _STATIC: _ClusterStatic(gd, lo, hi, codes),
+                _BODY: {},
+            }
+        return cell
+
+    def _codes(self, partitions: tuple[str, ...]) -> np.ndarray:
+        c = self._codes_cache.get(partitions)
+        if c is None:
+            c = np.array([_CODE[p] for p in partitions], dtype=np.int8)
+            self._codes_cache[partitions] = c
+        return c
+
+    # ------------------------------------------------- vectorized evaluation
+    def _cluster_cost(self, st: _ClusterStatic, n: int,
+                      next_p0: str | None, next_n: int | None,
+                      body_cache: dict | None = None) -> float:
+        """Vectorized reference ``cluster_time`` for one memoized static.
+
+        The last layer's Table II Case 2 boundary term is the only part that
+        depends on the *next* cluster, so the expensive array work -- the
+        ``body`` -- is keyed by ``n`` alone in ``body_cache`` and the final
+        assembly is three scalar operations.  During rebalance, a donor's
+        left neighbor changes only ``next_n``: its re-evaluation is a body
+        cache hit plus scalar math, no NumPy at all.
+        """
+        body = body_cache.get(n) if body_cache is not None else None
+        if body is None:
+            body = self._cluster_body(st, n)
+            if body_cache is not None:
+                body_cache[n] = body
+        if body is _INF_BODY:
+            return INF
+        head, pre_last, comp_last = body
+        comm_last = self.comm_time(st.last_layer, st.last_p, n, next_p0, next_n, False)
+        if self.overlap:
+            t_last = pre_last + (comm_last if comm_last >= comp_last else comp_last)
+        else:
+            t_last = (pre_last + comm_last) + comp_last
+        return head + t_last
+
+    def _cluster_body(self, st: _ClusterStatic, n: int):
+        """Per-(cluster, n) array work: placement + Eq. 5/7 for all layers,
+        minus the last layer's next-dependent comm.  Returns ``(head_sum,
+        pre_last, comp_last)`` or ``_INF_BODY`` when weights don't fit."""
+        if st.rows is not None:
+            return self._cluster_body_scalar(st, n)
+        hw = self.hw
+        w = st.w
+        # --- greedy weight placement (reference place_weights, SSIII-B)
+        if st.any_ep:
+            div = np.where(st.is_ep, np.minimum(float(n), st.men), float(n))
+            resident = np.where(st.is_wsp, w, w / div)
+        else:
+            resident = np.where(st.is_wsp, w, w / n)
+        cap = hw.weight_capacity_per_chip
+        s = _seqsum(resident)
+        gather = None
+        transient = 0.0
+        if self.distributed_weights and s > cap and len(st.flip_order):
+            # Reference semantics: flip the largest replicated WSP layers to
+            # distributed storage one at a time while the (sequentially
+            # re-summed) residency exceeds capacity.  Guess the flip count
+            # from a running delta, then verify with the reference's exact
+            # left-to-right sums so the boundary decision is bit-identical.
+            def exact_after(t: int) -> float:
+                r = resident.copy()
+                idx = st.flip_order[:t]
+                r[idx] = w[idx] / n
+                return _seqsum(r)
+
+            deltas = st.flip_w - st.flip_w / n      # residency drop per flip
+            run = s - np.cumsum(deltas)
+            t = int(np.searchsorted(-run, -cap))    # first t with run[t-1] <= cap
+            t = min(t + 1, len(st.flip_order))
+            while t > 0 and exact_after(t - 1) <= cap:
+                t -= 1
+            while t < len(st.flip_order) and exact_after(t) > cap:
+                t += 1
+            flips = st.flip_order[:t]
+            resident[flips] = w[flips] / n
+            gather = np.zeros_like(w)
+            gather[flips] = w[flips] * (n - 1) / n
+            s = _seqsum(resident)
+            transient = max(
+                ((2.0 * w[k]) / n for k in np.nonzero(gather > 0)[0]),
+                default=0.0,
+            )
+        if (s + transient) > cap:
+            return _INF_BODY
+
+        # --- Eq. 5 computation (vectorized CostModel._util / comp_time)
+        m_local = np.where(st.is_wsp, st.wsp / n, st.m_base)
+        n_local = np.where(st.is_isp, st.isp / n, st.isp)
+        util = _veff(m_local, hw.m_granule) * _veff(n_local, hw.n_granule)
+        comp = st.fl / ((n * hw.flops_per_chip) * util)
+
+        # --- Table II Case 1 comm for intra-cluster hand-offs (vectorized)
+        pre = None
+        if gather is not None:
+            pre = gather / hw.nop_bw_per_chip
+        if self.literal_pre:
+            lit = w / hw.dram_bw_total
+            pre = lit if pre is None else pre + lit
+        if st.out_i is not None:
+            vo = (n - 1) * st.out_i
+            ha = st.halo_i * max(0, n - 1)
+            vol = np.where(
+                st.ep_edge, 2.0 * st.out_i,
+                np.where(st.ww_edge, ha, np.where(st.iw_edge, vo + ha, vo)),
+            )
+            comm_i = np.where(vol <= 0, 0.0, vol / (n * hw.nop_bw_per_chip))
+            # Eq. 7 per layer for layers [0, L-1), summed in reference order
+            if self.overlap:
+                head_arr = np.maximum(comm_i, comp[:-1])
+            else:
+                head_arr = comm_i + comp[:-1]
+            if pre is not None:
+                head_arr = (
+                    pre[:-1] + head_arr if self.overlap
+                    else (pre[:-1] + comm_i) + comp[:-1]
+                )
+            head = _seqsum(head_arr)
+        else:
+            head = 0.0
+        pre_last = float(pre[-1]) if pre is not None else 0.0
+        comp_last = float(comp[-1])
+        return (head, pre_last, comp_last)
+
+    def _cluster_body_scalar(self, st: _ClusterStatic, n: int):
+        """Small-cluster body: one tight loop of the reference model's exact
+        scalar arithmetic (no NumPy dispatch), bit-identical by construction."""
+        hw = self.hw
+        cap = hw.weight_capacity_per_chip
+        rows = st.rows
+        L = len(rows)
+        # --- greedy weight placement (reference place_weights, SSIII-B)
+        resident = []
+        append = resident.append
+        for fl, w, wsp, isp, code, out, halo, m_base, men in rows:
+            if code == _WSP:
+                append(w)
+            elif code == _EP:
+                append(w / min(n, men))
+            else:
+                append(w / n)
+        s = sum(resident)
+        gather = None
+        transient = 0.0
+        if self.distributed_weights and s > cap and st.flip_l:
+            gather = [0.0] * L
+            w_l = st.w_l
+            for k in st.flip_l:
+                if s <= cap:
+                    break
+                wk = w_l[k]
+                resident[k] = wk / n
+                gather[k] = wk * (n - 1) / n
+                s = sum(resident)
+            transient = max(
+                (2.0 * w_l[k] / n for k in range(L) if gather[k] > 0),
+                default=0.0,
+            )
+        if (s + transient) > cap:
+            return _INF_BODY
+        # --- Eq. 5 / Table II Case 1 / Eq. 7 per layer (reference order)
+        mg, ng = hw.m_granule, hw.n_granule
+        peak, nop = hw.flops_per_chip, hw.nop_bw_per_chip
+        dram = hw.dram_bw_total
+        literal, overlap = self.literal_pre, self.overlap
+        head = 0.0
+        pre_last = comp_last = 0.0
+        nm1 = n - 1
+        last = L - 1
+        for i, (fl, w, wsp, isp, code, out, halo, m_base, men) in enumerate(rows):
+            if code == _WSP:
+                m_l, n_l = wsp / n, isp
+            elif code == _ISP:
+                m_l, n_l = wsp, isp / n
+            else:
+                m_l, n_l = m_base, isp
+            util = eff(m_l, mg) * eff(n_l, ng)
+            comp = fl / (n * peak * util)
+            pre = 0.0
+            if literal:
+                pre += w / dram
+            if gather is not None and gather[i] > 0:
+                pre += gather[i] / nop
+            if i == last:
+                pre_last, comp_last = pre, comp
+                break
+            ncode = rows[i + 1][4]
+            if code == _EP or ncode == _EP:
+                vol = 2.0 * out
+            elif code == _WSP:
+                vol = halo * nm1 if ncode == _WSP else nm1 * out
+            elif ncode == _WSP:
+                vol = nm1 * out + halo * nm1
+            else:
+                vol = nm1 * out
+            comm = 0.0 if vol <= 0 else vol / (n * nop)
+            if overlap:
+                head += pre + (comm if comm >= comp else comp)
+            else:
+                head += pre + comm + comp
+        return (head, pre_last, comp_last)
+
+    # -------------------------------------------------------------- memoized
+    def _cluster_time_fast(
+        self,
+        gd: _GraphData,
+        lo: int,
+        hi: int,
+        partitions: tuple[str, ...],
+        n: int,
+        next_p0: str | None,
+        next_n: int | None,
+    ) -> float:
+        cell = self._cluster_cell(gd, lo, hi, partitions)
+        k = (n, next_p0, next_n)
+        t = cell.get(k)
+        if t is None:
+            self._misses += 1
+            t = cell[k] = self._cluster_cost(
+                cell[_STATIC], n, next_p0, next_n, cell[_BODY]
+            )
+        return t
+
+    # --------------------------------------------- CostModel-compatible API
+    def cluster_time(
+        self,
+        graph: LayerGraph,
+        cluster: ClusterAssignment,
+        next_cluster: ClusterAssignment | None,
+        first_in_segment: bool,
+        last_in_segment: bool,
+    ) -> float:
+        next_p0 = next_cluster.partitions[0] if next_cluster is not None else None
+        next_n = next_cluster.region_chips if next_cluster is not None else None
+        return self._cluster_time_fast(
+            self.graph_data(graph),
+            cluster.layer_lo,
+            cluster.layer_hi,
+            cluster.partitions,
+            cluster.region_chips,
+            next_p0,
+            next_n,
+        )
+
+    def segment_time(
+        self, graph: LayerGraph, clusters: tuple[ClusterAssignment, ...]
+    ) -> tuple[float, list[float]]:
+        gd = self.graph_data(graph)
+        times = []
+        for j, cl in enumerate(clusters):
+            nxt = clusters[j + 1] if j + 1 < len(clusters) else None
+            next_p0 = nxt.partitions[0] if nxt is not None else None
+            next_n = nxt.region_chips if nxt is not None else None
+            times.append(
+                self._cluster_time_fast(
+                    gd, cl.layer_lo, cl.layer_hi, cl.partitions,
+                    cl.region_chips, next_p0, next_n,
+                )
+            )
+        bottleneck = max(times)
+        if bottleneck == INF:
+            return INF, times
+        load = 0.0
+        if not self.literal_pre:
+            seg_weights = sum(
+                float(gd.wprefix[cl.layer_hi] - gd.wprefix[cl.layer_lo])
+                for cl in clusters
+            )
+            load += seg_weights / self.hw.dram_bw_total
+        first = graph.layers[clusters[0].layer_lo]
+        load += self.m * first.in_bytes / self.hw.dram_bw_total
+        n_cl = len(clusters)
+        return load + (self.m + n_cl - 1) * bottleneck, times
+
+    # --------------------------------------------------------- DSE hot path
+    def segment_sweeper(self, graph, seg_lo, clustering):
+        """Per-clustering factory for Algorithm 1's partition sweep.
+
+        Returns ``sweeper(partitions, transition=None) -> eval_fn`` where
+        ``eval_fn(alloc) -> (latency, times)`` and ``eval_fn.move`` is the
+        incremental rebalance path.  The allocation-independent precomputation
+        (layer spans, Eq. 2 load terms, per-slot memo cells) lives in one
+        reusable :class:`_SegmentSweep`; advancing the transition index by one
+        only touches the single cluster whose partition slice changed.
+        """
+        sweep = _SegmentSweep(self, graph, seg_lo, clustering)
+
+        def configure(partitions, transition=None):
+            sweep.set_partitions(partitions, transition)
+            return sweep
+
+        return configure
+
+    def segment_evaluator(self, graph, seg_lo, clustering, partitions,
+                          transition=None):
+        """One-shot evaluator (CostModel-compatible); see segment_sweeper."""
+        return self.segment_sweeper(graph, seg_lo, clustering)(
+            partitions, transition
+        )
+
+
+class _SegmentSweep:
+    """Reusable segment evaluator: one clustering, many partition sets.
+
+    ``set_partitions`` swaps in the memo cells for the given partition
+    choice; Algorithm 1's linear transition sweep changes the slice of only
+    one cluster per step, so consecutive calls re-probe a single slot.
+    Calling the object evaluates a region allocation; :meth:`move`
+    re-evaluates a one-chip transfer by recomputing only the donor/receiver
+    clusters and their boundary-comm neighbors (the clusters whose memo keys
+    contain the changed region sizes).
+    """
+
+    __slots__ = (
+        "model", "gd", "spans", "rel", "n_cl", "load_const", "m",
+        "fill_factor", "has_expert", "first_expert", "cells", "statics",
+        "next_p0s", "cur_k", "cur_ep",
+    )
+
+    def __init__(self, model: FastCostModel, graph: LayerGraph, seg_lo: int,
+                 clustering) -> None:
+        self.model = model
+        gd = model.graph_data(graph)
+        self.gd = gd
+        self.rel = tuple(clustering)
+        self.spans = [(seg_lo + lo, seg_lo + hi) for lo, hi in clustering]
+        n_cl = len(self.spans)
+        self.n_cl = n_cl
+        epre = gd.expert_prefix
+        self.has_expert = [bool(epre[hi] > epre[lo]) for lo, hi in self.spans]
+        self.first_expert = [bool(gd.is_expert[lo]) for lo, _ in self.spans]
+        load_const = 0.0
+        if not model.literal_pre:
+            seg_weights = sum(
+                float(gd.wprefix[hi] - gd.wprefix[lo]) for lo, hi in self.spans
+            )
+            load_const += seg_weights / model.hw.dram_bw_total
+        load_const += (
+            model.m * graph.layers[self.spans[0][0]].in_bytes
+            / model.hw.dram_bw_total
+        )
+        self.load_const = load_const
+        self.m = model.m
+        self.fill_factor = model.m + n_cl - 1
+        self.cells = [None] * n_cl
+        self.statics = [None] * n_cl
+        self.next_p0s = [None] * n_cl          # next_p0s[j] = slot j+1's first p
+        self.cur_k = [None] * n_cl
+        self.cur_ep = [None] * n_cl
+
+    def set_partitions(self, partitions, transition=None) -> None:
+        model, gd = self.model, self.gd
+        if transition is None:
+            # Generic path (arbitrary partition tuples): tuple-keyed cells.
+            for j, (lo, hi) in enumerate(self.rel):
+                p = partitions[lo:hi]
+                cell = model._cluster_cell(gd, *self.spans[j], p)
+                self.cells[j] = cell
+                self.statics[j] = cell[_STATIC]
+                self.cur_k[j] = self.cur_ep[j] = None
+                if j > 0:
+                    self.next_p0s[j - 1] = p[0]
+            return
+        idx, ep_variant = transition
+        for j, (lo, hi) in enumerate(self.rel):
+            k = idx - lo
+            if k < 0:
+                k = 0
+            elif k > hi - lo:
+                k = hi - lo
+            ep_j = ep_variant and self.has_expert[j]
+            if k == self.cur_k[j] and ep_j == self.cur_ep[j]:
+                continue
+            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j)
+            self.cells[j] = cell
+            self.statics[j] = cell[_STATIC]
+            self.cur_k[j] = k
+            self.cur_ep[j] = ep_j
+            if j > 0:
+                self.next_p0s[j - 1] = (
+                    "EP" if (ep_j and self.first_expert[j])
+                    else ("WSP" if k > 0 else "ISP")
+                )
+
+    def _probe(self, j: int, n: int, next_n: int | None) -> float:
+        next_p0 = self.next_p0s[j]
+        k = (n, next_p0, next_n)
+        cell = self.cells[j]
+        t = cell.get(k)
+        if t is None:
+            self.model._misses += 1
+            t = cell[k] = self.model._cluster_cost(
+                self.statics[j], n, next_p0, next_n, cell[_BODY]
+            )
+        return t
+
+    def __call__(self, alloc):
+        model = self.model
+        model._evals += 1
+        n_cl = self.n_cl
+        cells = self.cells
+        statics = self.statics
+        next_p0s = self.next_p0s
+        cost = model._cluster_cost
+        times = []
+        append = times.append
+        bottleneck = 0.0
+        for j in range(n_cl):
+            next_n = alloc[j + 1] if j + 1 < n_cl else None
+            k = (alloc[j], next_p0s[j], next_n)
+            cell = cells[j]
+            t = cell.get(k)
+            if t is None:
+                model._misses += 1
+                t = cell[k] = cost(
+                    statics[j], alloc[j], next_p0s[j], next_n, cell[_BODY]
+                )
+            if t > bottleneck:
+                bottleneck = t
+            append(t)
+        if bottleneck == INF:
+            return INF, times
+        return self.load_const + self.fill_factor * bottleneck, times
+
+    def move(self, base_alloc, base_times, dst, src, k=1):
+        """Incremental re-eval after moving ``k`` chips src -> dst."""
+        self.model._evals += 1
+        n_cl = self.n_cl
+        alloc = list(base_alloc)
+        alloc[dst] += k
+        alloc[src] -= k
+        times = list(base_times)
+        for j in {dst, src, dst - 1, src - 1}:
+            if 0 <= j < n_cl:
+                times[j] = self._probe(
+                    j, alloc[j], alloc[j + 1] if j + 1 < n_cl else None
+                )
+        bottleneck = max(times)
+        if bottleneck == INF:
+            return INF, alloc, times
+        return self.load_const + self.fill_factor * bottleneck, alloc, times

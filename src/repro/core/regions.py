@@ -72,32 +72,92 @@ def rebalance(
     alloc: list[int],
     eval_fn,
     max_iters: int = 256,
+    donor_tries: int = 2,
 ) -> tuple[list[int], float, list[float]]:
     """Paper's heuristic: move 1 chip from the fastest to the slowest region.
 
-    ``eval_fn(alloc) -> (latency, per_cluster_times)``.  Continues while the
-    move strictly improves latency (Alg. 1's inner while-loop).
+    ``eval_fn(alloc) -> (latency, per_cluster_times)``.  Continues while a
+    move strictly improves latency (Alg. 1's inner while-loop), with two
+    repairs over the literal pseudocode:
+
+    * an INF seed (some cluster's weights overflow its region) is repaired by
+      feeding the first infeasible region one chip at a time from the fastest
+      feasible donor, instead of giving up immediately;
+    * when the fastest donor's move ties or regresses, the next-fastest
+      donor is tried (``donor_tries`` donors in total) before terminating --
+      a tie through one donor does not prove no donor can improve.
     """
+    INF = float("inf")
     best = list(alloc)
     best_lat, best_times = eval_fn(best)
+    # Incremental protocol (fastcost.py): ``move(alloc, times, dst, src, k)``
+    # re-evaluates only the clusters a chip transfer actually changes.
+    mv = getattr(eval_fn, "move", None)
+    if mv is None:
+        def mv(base_alloc, base_times, dst, src, k=1):
+            trial = list(base_alloc)
+            trial[dst] += k
+            trial[src] -= k
+            lat, times = eval_fn(trial)
+            return lat, trial, times
+
+    step = 1        # repair transfer size (doubles while the target stays INF)
     for _ in range(max_iters):
-        if not best_times or best_lat == float("inf"):
-            # Infeasible seed: still try to feed the bottleneck if we know it.
+        if not best_times:
             break
-        slow = max(range(len(best_times)), key=lambda j: best_times[j])
-        fast = min(
-            (j for j in range(len(best_times)) if best[j] > 1 and j != slow),
-            key=lambda j: best_times[j],
-            default=None,
-        )
-        if fast is None:
-            break
-        trial = list(best)
-        trial[slow] += 1
-        trial[fast] -= 1
-        lat, times = eval_fn(trial)
-        if lat < best_lat:
-            best, best_lat, best_times = trial, lat, times
-        else:
+        n = len(best_times)
+        if best_lat == INF:
+            # Repair phase: grow the first infeasible region.  A region goes
+            # INF only when weights overflow capacity, and more chips shard
+            # weights further, so feeding it is the only move that can help.
+            # Transfers grow geometrically so a region that is hundreds of
+            # chips short is repaired in O(log) evaluations.
+            bad = [j for j, t in enumerate(best_times) if t == INF]
+            if not bad:
+                break
+            target = bad[0]
+            donors = _fastest_donors(best_times, best, bad, donor_tries)
+            moved = False
+            for donor in donors:
+                # donors all have > 1 chip, so k >= 1
+                k = min(step, best[donor] - 1)
+                lat, trial, times = mv(best, best_times, target, donor, k)
+                # The donor must stay feasible (otherwise chips ping-pong
+                # between regions); the target's allocation then grows
+                # monotonically while it stays infeasible, so this terminates.
+                if times[donor] != INF and sum(1 for t in times if t == INF) <= len(bad):
+                    best, best_lat, best_times = trial, lat, times
+                    moved = True
+                    step = step * 2 if times[target] == INF else 1
+                    break
+            if not moved:
+                if step > 1:    # retry the conservative single-chip transfer
+                    step = 1
+                    continue
+                break
+            continue
+        slow = 0
+        for j in range(1, n):
+            if best_times[j] > best_times[slow]:
+                slow = j
+        donors = _fastest_donors(best_times, best, (slow,), donor_tries)
+        improved = False
+        for fast in donors:
+            lat, trial, times = mv(best, best_times, slow, fast, 1)
+            if lat < best_lat:
+                best, best_lat, best_times = trial, lat, times
+                improved = True
+                break
+        if not improved:
             break
     return best, best_lat, best_times
+
+
+def _fastest_donors(times, alloc, exclude, k):
+    """Indices of the ``k`` fastest regions that can give up a chip."""
+    out = []
+    for j, t in enumerate(times):
+        if alloc[j] > 1 and j not in exclude:
+            out.append((t, j))
+    out.sort()
+    return [j for _, j in out[:k]]

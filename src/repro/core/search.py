@@ -104,37 +104,49 @@ def search_segment(
     cmt = {len(fixed_clustering): fixed_clustering} if fixed_clustering else gen_cmt(sub)
     best: SegmentResult | None = None
 
-    partition_sets: list[tuple[str, ...]] = []
+    # Candidate partition sets, each with a (transition_idx, ep) hint that
+    # lets FastCostModel key its memo by small int tuples (see fastcost.py).
+    partition_sets: dict[tuple[str, ...], tuple[int, bool]] = {}
     for idx in range(L + 1):
-        p = transition_partitions(L, idx)
-        partition_sets.append(p)
+        partition_sets[transition_partitions(L, idx)] = (idx, False)
     if ep_for_moe:
-        extra = []
-        for p in partition_sets:
+        for idx in range(L + 1):
+            p = transition_partitions(L, idx)
             pe = apply_ep(graph, p, lo=seg_lo)
-            if pe != p:
-                extra.append(pe)
-        partition_sets.extend(dict.fromkeys(extra))  # dedupe, keep order
+            if pe != p and pe not in partition_sets:  # dedupe, keep order
+                partition_sets[pe] = (idx, True)
 
-    for partitions in partition_sets:
-        for n_cluster, clustering in cmt.items():
-            if max_clusters is not None and n_cluster > max_clusters:
-                continue
-            if n_cluster > chips:
-                continue
-            if mode is RegionMode.UNIFORM:
-                seed = uniform_allocate(n_cluster, chips)
-                if seed is None:
-                    continue
-            else:
-                seed = proportional_allocate(
-                    [sum(graph.layers[seg_lo + i].flops for i in range(lo, hi))
-                     for lo, hi in clustering],
-                    chips,
-                )
+    # Seed allocations depend only on the clustering (not on partitions), so
+    # compute them once per CMT row instead of once per (partitions x row).
+    seeds: dict[int, list[int] | None] = {}
+    for n_cluster, clustering in cmt.items():
+        if max_clusters is not None and n_cluster > max_clusters:
+            continue
+        if n_cluster > chips:
+            continue
+        if mode is RegionMode.UNIFORM:
+            seeds[n_cluster] = uniform_allocate(n_cluster, chips)
+        else:
+            seeds[n_cluster] = proportional_allocate(
+                [sum(graph.layers[seg_lo + i].flops for i in range(lo, hi))
+                 for lo, hi in clustering],
+                chips,
+            )
 
-            def eval_fn(alloc, _c=clustering, _p=partitions):
-                return evaluate_segment(cost, graph, seg_lo, _c, _p, alloc)
+    # Clustering-outer, partitions-inner: one sweeper per CMT row carries the
+    # allocation-independent precomputation through the whole transition
+    # sweep (FastCostModel updates it incrementally per transition step).
+    for n_cluster, clustering in cmt.items():
+        seed = seeds.get(n_cluster)
+        if seed is None:
+            continue
+        sweeper = cost.segment_sweeper(graph, seg_lo, clustering)
+        for partitions, hint in partition_sets.items():
+
+            # One evaluator per (clustering, partitions): FastCostModel
+            # memoizes cluster costs, so the rebalance walk below only ever
+            # computes the clusters a chip move actually changed.
+            eval_fn = sweeper(partitions, transition=hint)
 
             if mode is RegionMode.UNIFORM:
                 lat, times = eval_fn(seed)

@@ -17,8 +17,10 @@ Split = tuple[tuple[int, int], ...]
 
 
 def segment_feasible(graph: LayerGraph, lo: int, hi: int, hw: HardwareModel, chips: int) -> bool:
+    """Best-case (fully sharded) weight fit.  Must stay consistent with the
+    inlined prefix-sum check in :func:`divide_segments`."""
     w = sum(graph.layers[i].weight_bytes for i in range(lo, hi))
-    return w / chips <= hw.weight_capacity_per_chip
+    return w <= hw.weight_capacity_per_chip * chips
 
 
 def divide_segments(
@@ -32,6 +34,10 @@ def divide_segments(
     prefix = [0.0]
     for f in flops:
         prefix.append(prefix[-1] + f)
+    wpre = [0.0]
+    for l in graph.layers:
+        wpre.append(wpre[-1] + l.weight_bytes)
+    w_cap = hw.weight_capacity_per_chip * chips
 
     def load(lo, hi):
         return prefix[hi] - prefix[lo]
@@ -46,7 +52,7 @@ def divide_segments(
             for j in range(s - 1, i):
                 if dp[s - 1][j] == INF:
                     continue
-                if not segment_feasible(graph, j, i, hw, chips):
+                if wpre[i] - wpre[j] > w_cap:   # segment_feasible via prefix
                     continue
                 cand = max(dp[s - 1][j], load(j, i))
                 if cand < dp[s][i]:

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..._compat.pallas import CompilerParams as _CompilerParams
+
 
 def _mamba_kernel(dt_ref, x_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_out_ref,
                   h_scr, *, chunk: int, n_chunks: int):
@@ -98,7 +100,7 @@ def mamba_scan_kernel(
             jax.ShapeDtypeStruct((B, di, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

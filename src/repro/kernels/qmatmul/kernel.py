@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..._compat.pallas import CompilerParams as _CompilerParams
+
 
 def _qmm_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_scr, *, k_steps: int):
     kk = pl.program_id(2)
@@ -67,7 +69,7 @@ def qmatmul_kernel(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -8,17 +8,30 @@ touches jax device state (device count is locked at first use).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto
+    AxisType = None
+
+
+def _make_mesh_compat(shape: tuple[int, ...], axes: tuple[str, ...]):
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh_compat(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh_compat(shape, axes)
 
 
 def make_pipeline_mesh(n_stages: int, n_data: int):

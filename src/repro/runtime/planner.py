@@ -8,10 +8,12 @@ TPU v5e constants over the arch's exported layer graph.
 """
 from __future__ import annotations
 
-from ..core.costmodel import INF, CostModel
+import time
+
+from ..core.costmodel import INF
+from ..core.fastcost import FastCostModel
 from ..core.graph import PARTITION_ISP, PARTITION_WSP
 from ..core.hw import tpu_v5e
-from ..core.search import evaluate_segment
 from ..core.workloads.lm import lm_graph
 from ..models.config import ModelConfig
 from .sharding import ShardPlan
@@ -38,17 +40,24 @@ def plan_for_cell(
     graph = lm_graph(cfg, seq_len, decode=False)
     L = len(graph)
     hw = tpu_v5e(model_axis, (1, model_axis))
-    cost = CostModel(hw, m_samples=max(2, global_batch), distributed_weights=True)
+    cost = FastCostModel(hw, m_samples=max(2, global_batch), distributed_weights=True)
     clustering = ((0, L),)          # the model axis is one region
     best = (INF, L)                 # default: all ISP
+    t0 = time.time()
+    sweeper = cost.segment_sweeper(graph, 0, clustering)
     for idx in range(L + 1):
         partitions = tuple(
             [PARTITION_WSP] * idx + [PARTITION_ISP] * (L - idx)
         )
-        lat, _ = evaluate_segment(cost, graph, 0, clustering, partitions, [model_axis])
+        eval_fn = sweeper(partitions, transition=(idx, False))
+        lat, _ = eval_fn([model_axis])
         if lat < best[0]:
             best = (lat, idx)
+    dse_s = time.time() - t0
     t_layers = best[1]
+    meta = {"kind": kind, "dse": True, "t_layers": t_layers,
+            "latency": best[0], "dse_s": dse_s,
+            "dse_engine": cost.stats}
     # graph layout: [embed] + per-block nodes + [lm_head]; map the layer
     # transition onto the repeat axis of the scanned stack.
     per_block = (L - 2) / max(1, cfg.n_layers)
@@ -57,15 +66,11 @@ def plan_for_cell(
     t_rep = min(max(t_rep, 0), cfg.pattern_repeats)
     if t_rep == 0:
         return ShardPlan(mesh_axes=mesh_axes, p1="ISP", p2="ISP",
-                         transition_repeat=None,
-                         meta={"kind": kind, "dse": True, "t_layers": t_layers,
-                               "latency": best[0]})
+                         transition_repeat=None, meta=meta)
     if t_rep == cfg.pattern_repeats:
         return ShardPlan(mesh_axes=mesh_axes, p1="WSP", p2="WSP",
-                         transition_repeat=None,
-                         meta={"kind": kind, "dse": True, "t_layers": t_layers,
-                               "latency": best[0]})
+                         transition_repeat=None, meta=meta)
     return ShardPlan(
         mesh_axes=mesh_axes, p1="WSP", p2="ISP", transition_repeat=t_rep,
-        meta={"kind": kind, "dse": True, "t_layers": t_layers, "latency": best[0]},
+        meta=meta,
     )
