@@ -9,30 +9,45 @@ from __future__ import annotations
 from .common import cached, run_method
 
 CHIPS = [16, 32, 64, 128, 256]
+# 512/1024-chip rows, affordable since the fast engine (ROADMAP open item);
+# run on the flagship net so the big-package regime is actually exercised.
+LARGE_CHIPS = [512, 1024]
+LARGE_NET = "resnet152"
 METHODS = ["sequential", "full_pipeline", "segmented", "scope"]
 NET = "resnet50"
 
 
-def run(refresh: bool = False, net: str = NET):
+def run(refresh: bool = False, net: str = NET, chips_list=None):
     rows = []
-    for chips in CHIPS:
+    for chips in chips_list or CHIPS:
         def _one(chips=chips):
             return [run_method(net, chips, m) for m in METHODS]
         rows.extend(cached(f"fig9_{net}_{chips}", _one, refresh))
     return rows
 
 
+def run_large(refresh: bool = False, net: str = LARGE_NET):
+    """The beyond-256 scalability study (512 and 1024 chips)."""
+    return run(refresh, net=net, chips_list=LARGE_CHIPS)
+
+
 def report(rows) -> list[str]:
     by = {}
+    chips_seen = []
     for r in rows:
         by.setdefault(r["method"], {})[r["chips"]] = r
-    lines = ["method," + ",".join(f"x{c}" for c in CHIPS) + "  (normalized to 16 chips)"]
+        if r["chips"] not in chips_seen:
+            chips_seen.append(r["chips"])
+    chips = sorted(chips_seen)
+    base_c = chips[0]
+    lines = ["method," + ",".join(f"x{c}" for c in chips)
+             + f"  (normalized to {base_c} chips)"]
     for m in METHODS:
-        base = by[m].get(CHIPS[0], {})
+        base = by.get(m, {}).get(base_c, {})
         base_tp = base.get("throughput") if base.get("valid") else None
         cells = []
-        for c in CHIPS:
-            r = by[m].get(c, {})
+        for c in chips:
+            r = by.get(m, {}).get(c, {})
             if not r.get("valid"):
                 cells.append("invalid")
             elif base_tp:
@@ -40,16 +55,19 @@ def report(rows) -> list[str]:
             else:
                 cells.append(f"abs:{r['throughput']:.0f}")
         lines.append(f"{m}," + ",".join(cells))
-    lines.append("method," + ",".join(f"x{c}" for c in CHIPS) + "  (absolute samples/s)")
+    lines.append("method," + ",".join(f"x{c}" for c in chips)
+                 + "  (absolute samples/s)")
     for m in METHODS:
         cells = []
-        for c in CHIPS:
-            r = by[m].get(c, {})
+        for c in chips:
+            r = by.get(m, {}).get(c, {})
             cells.append(f"{r['throughput']:.0f}" if r.get("valid") else "invalid")
         lines.append(f"{m}," + ",".join(cells))
     best = all(
         by["scope"][c]["throughput"] >= by["segmented"][c]["throughput"]
-        for c in CHIPS if by["scope"].get(c, {}).get("valid")
+        for c in chips
+        if by["scope"].get(c, {}).get("valid")
+        and by["segmented"].get(c, {}).get("valid")
     )
     lines.append(f"# scope >= segmented at every scale: {best} "
                  "(paper Fig 9: Scope exhibits the best scalability)")

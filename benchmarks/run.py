@@ -6,7 +6,9 @@ Sections:
   fig8   search quality vs exhaustive/random space   (paper SSV-B(1))
   fig7   throughput, 8 nets x 3 scales x 4 methods   (paper Fig. 7)
   fig9   scalability 16..256 chiplets                (paper Fig. 9)
+         + resnet152 at 512/1024 (fast-engine sweep)
   fig10  ResNet-152 x 256 case study + energy        (paper Fig. 10)
+  fig11  multi-model co-scheduling vs baselines      (beyond-paper)
   search DSE wall-time table                         (paper SSV-B(1))
   kernels micro-bench CSV
   roofline LM-arch dry-run aggregation               (SSRoofline)
@@ -26,7 +28,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig7_throughput, fig8_search_quality, fig9_scalability,
-                   fig10_case_study, kernel_bench, roofline, search_time)
+                   fig10_case_study, fig11_multimodel, kernel_bench, roofline,
+                   search_time)
 
     def section(title, lines):
         print(f"\n## {title}")
@@ -49,7 +52,17 @@ def main() -> None:
     r9 = fig9_scalability.run(refresh=args.refresh)
     section("fig9_scalability", fig9_scalability.report(r9))
 
+    if args.quick:
+        r11 = fig11_multimodel.run(refresh=args.refresh,
+                                   mixes=fig11_multimodel.MIXES[:1])
+    else:
+        r11 = fig11_multimodel.run(refresh=args.refresh)
+    section("fig11_multimodel", fig11_multimodel.report(r11))
+
     if not args.quick:
+        r9l = fig9_scalability.run_large(refresh=args.refresh)
+        section("fig9_scalability_large", fig9_scalability.report(r9l))
+
         r10 = fig10_case_study.run(refresh=args.refresh)
         section("fig10_case_study", fig10_case_study.report(r10))
 

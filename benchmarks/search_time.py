@@ -56,9 +56,11 @@ def q_total(L: int, C: int) -> float:
     return L * math.log10(2) + math.log10(total)
 
 
-def _sweep(net: str, chips: int, engine_cls):
+def _sweep(net: str, chips: int, engine_cls, batched_seed_fill: bool = True):
     g = get_cnn(net)
     cost = engine_cls(mcm_table_iii(chips), m_samples=M_SAMPLES)
+    if hasattr(cost, "batched_seed_fill"):
+        cost.batched_seed_fill = batched_seed_fill
     t0 = time.time()
     sched = schedule_scope(g, cost, chips)
     dt = time.time() - t0
@@ -70,9 +72,16 @@ def run(refresh: bool = False):
         rows = []
         for net, chips in CASES:
             fast_s, sched, fast = _sweep(net, chips, FastCostModel)
+            # Same engine without the 2D (k x layer) seed-phase batch fill:
+            # isolates that satellite's constant-factor effect.
+            nobatch_s, nb_sched, _ = _sweep(
+                net, chips, FastCostModel, batched_seed_fill=False
+            )
+            assert nb_sched.latency == sched.latency, (net, chips)
             row = {
                 "net": net, "chips": chips, "layers": len(get_cnn(net)),
                 "fast_search_s": fast_s,
+                "no_batched_fill_search_s": nobatch_s,
                 "latency_s": sched.latency,
                 "log10_Q_total": q_total(len(get_cnn(net)), chips),
                 "engine_stats": fast.stats,
@@ -98,9 +107,14 @@ def run(refresh: bool = False):
             rows.append(row)
         for net, chips in LARGE_CASES:
             fast_s, sched, fast = _sweep(net, chips, FastCostModel)
+            nobatch_s, nb_sched, _ = _sweep(
+                net, chips, FastCostModel, batched_seed_fill=False
+            )
+            assert nb_sched.latency == sched.latency, (net, chips)
             rows.append({
                 "net": net, "chips": chips, "layers": len(get_cnn(net)),
                 "fast_search_s": fast_s,
+                "no_batched_fill_search_s": nobatch_s,
                 "latency_s": sched.latency,
                 "log10_Q_total": q_total(len(get_cnn(net)), chips),
                 "engine_stats": fast.stats,
@@ -110,8 +124,9 @@ def run(refresh: bool = False):
         return rows
 
     rows = cached("search_time", _go, refresh)
-    if rows and "fast_search_s" not in rows[0]:
-        # Stale pre-fastcost cache (old rows only had "search_s"): redo.
+    if rows and "no_batched_fill_search_s" not in rows[0]:
+        # Stale cache from an older schema (pre-fastcost "search_s"-only
+        # rows, or pre-batched-fill rows): redo.
         rows = cached("search_time", _go, refresh=True)
     with open(ROOT_BENCH, "w") as f:
         json.dump(rows, f, indent=1)

@@ -18,6 +18,55 @@ echo "== tier-1 tests (-m 'not slow') =="
 python -m pytest -q -m "not slow"
 
 if [ "${CI_SKIP_PERF:-0}" != "1" ]; then
+  echo "== multi-model co-scheduling smoke budget =="
+  python - <<'PY'
+import os
+import time
+
+from repro.core.fastcost import FastCostModel
+from repro.core.hw import mcm_table_iii
+from repro.multimodel import co_schedule, equal_split, parse_mix, time_multiplexed
+
+budget = float(os.environ.get("CI_MULTIMODEL_BUDGET_S", "20"))
+specs = parse_mix("alexnet:1,resnet18:1")
+hw = mcm_table_iii(16)
+cost = FastCostModel(hw, m_samples=16)
+t0 = time.time()
+co = co_schedule(specs, hw, m_samples=16, cost=cost)
+dt = time.time() - t0
+eq = equal_split(specs, cost)
+tm = time_multiplexed(specs, cost)
+stats = cost.stats
+assert None not in (co, eq, tm), "co-schedule/baseline infeasible"
+print(f"2-model x 16 co-schedule: {dt:.2f}s (budget {budget:.0f}s), "
+      f"mode={co.mode}, weighted tp {co.weighted_throughput:.0f}/s "
+      f"(equal-split {eq.weighted_throughput:.0f}, "
+      f"time-mux {tm.weighted_throughput:.0f}), engine {stats}")
+assert co.weighted_throughput > 0, "co-schedule infeasible"
+assert co.weighted_throughput >= eq.weighted_throughput - 1e-9, "below equal-split"
+assert co.weighted_throughput >= tm.weighted_throughput - 1e-9, "below time-mux"
+# memo reuse across quota candidates: the joint sweep must answer far more
+# segment evaluations than it computes cluster costs for
+assert stats["segment_evals"] > 3 * stats["cluster_computes"], stats
+assert dt <= budget, f"multi-model DSE regression: {dt:.2f}s > {budget:.0f}s"
+
+# full 2-model x 64 mix (the acceptance-scale sweep; exhaustive quota grid)
+budget64 = float(os.environ.get("CI_MULTIMODEL64_BUDGET_S", "60"))
+specs64 = parse_mix("resnet50:1,resnet18:1")
+hw64 = mcm_table_iii(64)
+cost64 = FastCostModel(hw64, m_samples=16)
+t0 = time.time()
+co64 = co_schedule(specs64, hw64, m_samples=16, cost=cost64)
+dt64 = time.time() - t0
+s64 = cost64.stats
+print(f"2-model x 64 co-schedule: {dt64:.2f}s (budget {budget64:.0f}s), "
+      f"mode={co64.mode}, weighted tp {co64.weighted_throughput:.0f}/s, "
+      f"engine {s64}")
+assert co64.weighted_throughput > 0
+assert s64["segment_evals"] > 3 * s64["cluster_computes"], s64
+assert dt64 <= budget64, f"x64 multi-model DSE: {dt64:.2f}s > {budget64:.0f}s"
+PY
+
   echo "== DSE search-time smoke budget =="
   python - <<'PY'
 import os

@@ -8,12 +8,22 @@ from .graph import (  # noqa: F401
     ClusterAssignment,
     LayerGraph,
     LayerNode,
+    ModelAssignment,
+    MultiModelSchedule,
     ScopeSchedule,
     SegmentSchedule,
     chain,
+    validate_multimodel,
     validate_schedule,
 )
-from .hw import HardwareModel, get_hw, mcm_table_iii, tpu_v5e  # noqa: F401
+from .hw import (  # noqa: F401
+    ChipType,
+    HardwareModel,
+    get_hw,
+    mcm_hetero,
+    mcm_table_iii,
+    tpu_v5e,
+)
 from .regions import RegionMode  # noqa: F401
 from .baselines import (  # noqa: F401
     ALL_METHODS,

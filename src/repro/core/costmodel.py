@@ -80,10 +80,22 @@ class CostModel:
         self.overlap = overlap
         self.distributed_weights = distributed_weights
         self.literal_pre = literal_pre
+        self._typed_hw: dict[str | None, HardwareModel] = {}
+
+    def hw_for(self, chip_type: str | None) -> HardwareModel:
+        """The hardware a region of ``chip_type`` chips sees (hetero packages;
+        ``None``/base type returns ``self.hw`` unchanged)."""
+        if not chip_type:
+            return self.hw
+        hw = self._typed_hw.get(chip_type)
+        if hw is None:
+            hw = self._typed_hw[chip_type] = self.hw.typed(chip_type)
+        return hw
 
     # ------------------------------------------------------------------ utils
-    def _util(self, layer: LayerNode, p: str, n: int) -> float:
-        hw = self.hw
+    def _util(self, layer: LayerNode, p: str, n: int,
+              hw: HardwareModel | None = None) -> float:
+        hw = hw or self.hw
         if p == PARTITION_WSP:
             m_local = layer.wsp_parallel / n
             n_local = layer.isp_parallel
@@ -95,10 +107,12 @@ class CostModel:
             n_local = layer.isp_parallel
         return eff(m_local, hw.m_granule) * eff(n_local, hw.n_granule)
 
-    def comp_time(self, layer: LayerNode, p: str, n: int) -> float:
+    def comp_time(self, layer: LayerNode, p: str, n: int,
+                  chip_type: str | None = None) -> float:
         """Eq. 5 (Timeloop regression replaced by peak x tiling-efficiency)."""
-        util = self._util(layer, p, n)
-        return layer.flops / (n * self.hw.flops_per_chip * util)
+        hw = self.hw_for(chip_type)
+        util = self._util(layer, p, n, hw)
+        return layer.flops / (n * hw.flops_per_chip * util)
 
     # -------------------------------------------------------------- Table II
     def comm_volume(
@@ -141,11 +155,14 @@ class CostModel:
         next_p: str | None,
         next_n: int | None,
         same_region: bool,
+        chip_type: str | None = None,
     ) -> float:
         vol = self.comm_volume(layer, p, n, next_p, next_n, same_region)
         if vol <= 0:
             return 0.0
-        hw = self.hw
+        # The producing region's flavor bounds both its injection bandwidth
+        # and the boundary links it drives.
+        hw = self.hw_for(chip_type)
         if same_region:
             # Collectives inside the region: aggregate injection bandwidth.
             return vol / (n * hw.nop_bw_per_chip)
@@ -211,12 +228,13 @@ class CostModel:
         same_region: bool,
         gather_bytes: float = 0.0,
         extra_pre: float = 0.0,
+        chip_type: str | None = None,
     ) -> LayerTime:
         pre = extra_pre
         if gather_bytes > 0:
-            pre += gather_bytes / self.hw.nop_bw_per_chip
-        comp = self.comp_time(layer, p, n)
-        comm = self.comm_time(layer, p, n, next_p, next_n, same_region)
+            pre += gather_bytes / self.hw_for(chip_type).nop_bw_per_chip
+        comp = self.comp_time(layer, p, n, chip_type)
+        comm = self.comm_time(layer, p, n, next_p, next_n, same_region, chip_type)
         return LayerTime(pre=pre, comp=comp, comm=comm)
 
     # -------------------------------------------------------------- clusters
@@ -250,6 +268,7 @@ class CostModel:
                 layer, p, n, nxt_p, nxt_n, same,
                 gather_bytes=placement.gather_bytes[k],
                 extra_pre=extra_pre,
+                chip_type=cluster.chip_type,
             )
             total += t.total if self.overlap else t.unoverlapped
         return total
@@ -285,18 +304,27 @@ class CostModel:
                 for i in range(cl.layer_lo, cl.layer_hi)
             )
             load += seg_weights / self.hw.dram_bw_total
-        first = graph.layers[clusters[0].layer_lo]
-        load += self.m * first.in_bytes / self.hw.dram_bw_total
+        first_lo = clusters[0].layer_lo
+        load += self.m * graph.layers[first_lo].in_bytes / self.hw.dram_bw_total
+        # Mid-segment DRAM-staged entry layers (merged multi-model graphs
+        # mark model boundaries with meta["dram_input"]): their inputs are
+        # staged like a segment start's, wherever the boundary lands.
+        for cl in clusters:
+            for i in range(cl.layer_lo, cl.layer_hi):
+                if i != first_lo and graph.layers[i].meta.get("dram_input"):
+                    load += self.m * graph.layers[i].in_bytes / self.hw.dram_bw_total
         n_cl = len(clusters)
         return load + (self.m + n_cl - 1) * bottleneck, times
 
     # --------------------------------------------------------- DSE interface
     def segment_evaluator(self, graph, seg_lo, clustering, partitions,
-                          transition=None):
+                          transition=None, chip_type=None):
         """Return ``eval_fn(alloc) -> (latency, per_cluster_times)``.
 
         ``transition`` is an optional Algorithm 1 sweep hint (ignored here;
         see :meth:`repro.core.fastcost.FastCostModel.segment_evaluator`).
+        ``chip_type`` evaluates the segment on that flavor of a heterogeneous
+        package.
 
         The DSE (search.py) funnels every candidate region allocation of a
         fixed (clustering, partitions) choice through this closure.  The
@@ -311,6 +339,7 @@ class CostModel:
                     layer_hi=seg_lo + hi,
                     region_chips=chips,
                     partitions=partitions[lo:hi],
+                    chip_type=chip_type,
                 )
                 for (lo, hi), chips in zip(clustering, alloc)
             )
@@ -318,13 +347,13 @@ class CostModel:
 
         return eval_fn
 
-    def segment_sweeper(self, graph, seg_lo, clustering):
+    def segment_sweeper(self, graph, seg_lo, clustering, chip_type=None):
         """Factory used by Algorithm 1: ``sweeper(partitions, transition) ->
         eval_fn`` for one clustering.  FastCostModel overrides this with a
         reusable evaluator that updates incrementally along the sweep."""
         def configure(partitions, transition=None):
             return self.segment_evaluator(
-                graph, seg_lo, clustering, partitions, transition
+                graph, seg_lo, clustering, partitions, transition, chip_type
             )
 
         return configure

@@ -81,6 +81,7 @@ class _GraphData:
     is_expert: np.ndarray          # n_experts > 1 (apply_ep's flip condition)
     expert_prefix: np.ndarray      # prefix sum of is_expert, len L+1
     wprefix: np.ndarray            # prefix sum of weight_bytes, len L+1
+    dram_idx: tuple[int, ...]      # meta["dram_input"] layers (merged graphs)
 
 
 def _graph_data(graph: LayerGraph) -> _GraphData:
@@ -103,6 +104,9 @@ def _graph_data(graph: LayerGraph) -> _GraphData:
         is_expert=is_expert,
         expert_prefix=np.concatenate(([0], np.cumsum(is_expert))),
         wprefix=np.concatenate(([0.0], np.cumsum(w))),
+        dram_idx=tuple(
+            i for i, l in enumerate(ls) if l.meta.get("dram_input")
+        ),
     )
 
 
@@ -130,6 +134,9 @@ _INF_BODY = (INF,)  # marker: placement infeasible at this n
 # Below this cluster size a tight scalar loop beats NumPy dispatch overhead;
 # the scalar path reuses the reference model's exact scalar arithmetic.
 _SCALAR_MAX_LAYERS = 32
+# Below this cluster size the 2D (k x layer) seed-phase batch fill is not
+# worth its NumPy dispatch either; the lazy per-k paths handle it.
+_BATCH_MIN_LAYERS = 8
 
 
 class _ClusterStatic:
@@ -219,6 +226,8 @@ class FastCostModel(CostModel):
         self._codes_cache: dict[tuple[str, ...], np.ndarray] = {}
         self._evals = 0
         self._misses = 0
+        self._batched_bodies = 0
+        self.batched_seed_fill = True   # 2D (k x layer) seed-phase fill
 
     # ------------------------------------------------------------- plumbing
     def graph_data(self, graph: LayerGraph) -> _GraphData:
@@ -231,7 +240,7 @@ class FastCostModel(CostModel):
     def clear_memo(self) -> None:
         self._graphs.clear()
         self._memo.clear()
-        self._evals = self._misses = 0
+        self._evals = self._misses = self._batched_bodies = 0
 
     @property
     def stats(self) -> dict:
@@ -241,13 +250,15 @@ class FastCostModel(CostModel):
             "cluster_computes": self._misses,
             "memo_cells": len(self._memo),
             "memo_entries": sum(len(c) - 2 for c in self._memo.values()),
+            "batched_bodies": self._batched_bodies,
         }
 
     def _cluster_cell(
-        self, gd: _GraphData, lo: int, hi: int, partitions: tuple[str, ...]
+        self, gd: _GraphData, lo: int, hi: int, partitions: tuple[str, ...],
+        ctype: str | None = None,
     ) -> dict:
         """Memo cell for an explicit partition tuple (generic API path)."""
-        key = (id(gd.graph), lo, hi, partitions)
+        key = (id(gd.graph), lo, hi, partitions, ctype)
         cell = self._memo.get(key)
         if cell is None:
             cell = self._memo[key] = {
@@ -257,7 +268,8 @@ class FastCostModel(CostModel):
         return cell
 
     def _cluster_cell_hint(
-        self, gd: _GraphData, lo: int, hi: int, k: int, ep: bool
+        self, gd: _GraphData, lo: int, hi: int, k: int, ep: bool,
+        ctype: str | None = None,
     ) -> dict:
         """Memo cell for a WSP^k ISP^(len-k) transition slice (DSE path).
 
@@ -265,9 +277,12 @@ class FastCostModel(CostModel):
         slices (optionally with MoE layers flipped to EP), so the DSE keys
         cells by the small ``(lo, hi, k, ep)`` tuple instead of hashing a
         partition tuple per probe -- and slices that coincide across
-        different segment-level transition points share one cell.
+        different segment-level transition points share one cell.  ``ctype``
+        (the hetero chip flavor) completes the key: cached times are only
+        valid for the flavor whose scaled hardware computed them, so flavors
+        never share cells (asserted in tests/test_multimodel.py).
         """
-        key = (id(gd.graph), lo, hi, k, ep)
+        key = (id(gd.graph), lo, hi, k, ep, ctype)
         cell = self._memo.get(key)
         if cell is None:
             codes = np.full(hi - lo, _ISP, dtype=np.int8)
@@ -290,7 +305,8 @@ class FastCostModel(CostModel):
     # ------------------------------------------------- vectorized evaluation
     def _cluster_cost(self, st: _ClusterStatic, n: int,
                       next_p0: str | None, next_n: int | None,
-                      body_cache: dict | None = None) -> float:
+                      body_cache: dict | None = None,
+                      ctype: str | None = None) -> float:
         """Vectorized reference ``cluster_time`` for one memoized static.
 
         The last layer's Table II Case 2 boundary term is the only part that
@@ -302,26 +318,30 @@ class FastCostModel(CostModel):
         """
         body = body_cache.get(n) if body_cache is not None else None
         if body is None:
-            body = self._cluster_body(st, n)
+            body = self._cluster_body(st, n, self.hw_for(ctype))
             if body_cache is not None:
                 body_cache[n] = body
         if body is _INF_BODY:
             return INF
         head, pre_last, comp_last = body
-        comm_last = self.comm_time(st.last_layer, st.last_p, n, next_p0, next_n, False)
+        comm_last = self.comm_time(
+            st.last_layer, st.last_p, n, next_p0, next_n, False, ctype
+        )
         if self.overlap:
             t_last = pre_last + (comm_last if comm_last >= comp_last else comp_last)
         else:
             t_last = (pre_last + comm_last) + comp_last
         return head + t_last
 
-    def _cluster_body(self, st: _ClusterStatic, n: int):
+    def _cluster_body(self, st: _ClusterStatic, n: int, hw=None):
         """Per-(cluster, n) array work: placement + Eq. 5/7 for all layers,
         minus the last layer's next-dependent comm.  Returns ``(head_sum,
-        pre_last, comp_last)`` or ``_INF_BODY`` when weights don't fit."""
+        pre_last, comp_last)`` or ``_INF_BODY`` when weights don't fit.
+        ``hw`` is the (possibly chip-type-scaled) hardware of the region."""
+        if hw is None:
+            hw = self.hw
         if st.rows is not None:
-            return self._cluster_body_scalar(st, n)
-        hw = self.hw
+            return self._cluster_body_scalar(st, n, hw)
         w = st.w
         # --- greedy weight placement (reference place_weights, SSIII-B)
         if st.any_ep:
@@ -403,10 +423,11 @@ class FastCostModel(CostModel):
         comp_last = float(comp[-1])
         return (head, pre_last, comp_last)
 
-    def _cluster_body_scalar(self, st: _ClusterStatic, n: int):
+    def _cluster_body_scalar(self, st: _ClusterStatic, n: int, hw=None):
         """Small-cluster body: one tight loop of the reference model's exact
         scalar arithmetic (no NumPy dispatch), bit-identical by construction."""
-        hw = self.hw
+        if hw is None:
+            hw = self.hw
         cap = hw.weight_capacity_per_chip
         rows = st.rows
         L = len(rows)
@@ -481,6 +502,99 @@ class FastCostModel(CostModel):
                 head += pre + comm + comp
         return (head, pre_last, comp_last)
 
+    # ------------------------------------------------- 2D seed-phase fill
+    def _batch_seed_fill(self, gd: _GraphData, lo: int, hi: int, n: int,
+                         ctype: str | None = None) -> None:
+        """Batched (k x layer) bodies for every transition slice of one span.
+
+        Algorithm 1's seed phase probes the same cluster span at the same
+        region size ``n`` under every transition index ``k`` (WSP for the
+        first ``k`` layers, ISP for the rest).  Filling those ``L + 1``
+        bodies one row at a time repeats the identical array setup per row;
+        this computes them as one ``(k x layer)`` matrix pass and writes the
+        results into the per-k memo cells the sweep will probe.
+
+        Exactness: every elementwise expression mirrors ``_cluster_body``
+        operation by operation, and row reductions use ``np.cumsum`` (a
+        strictly left-to-right accumulation, like ``_seqsum`` and the scalar
+        path's ``+=``), so the stored bodies are bit-identical to what the
+        lazy per-k evaluation would produce.  Rows whose weight placement
+        overflows capacity (they need the greedy distributed-weight flip
+        walk, or are infeasible) fall back to the per-k path, as do EP
+        variants (never batched).
+        """
+        L = hi - lo
+        hw = self.hw_for(ctype)
+        cells = [
+            self._cluster_cell_hint(gd, lo, hi, k, False, ctype)
+            for k in range(L + 1)
+        ]
+        need = [k for k in range(L + 1) if n not in cells[k][_BODY]]
+        if not need:
+            return
+        w = gd.weight_bytes[lo:hi]
+        fl = gd.flops[lo:hi]
+        wsp = gd.wsp[lo:hi]
+        isp = gd.isp[lo:hi]
+        ks = np.array(need, dtype=np.int64)
+        lidx = np.arange(L)
+        is_wsp = lidx[None, :] < ks[:, None]                    # K x L
+
+        # --- residency (replicated WSP / sharded ISP), row-wise exact sums
+        resident = np.where(is_wsp, w, w / n)
+        s = np.cumsum(resident, axis=1)[:, -1]
+        cap = hw.weight_capacity_per_chip
+        over = s > cap
+        if over.any():
+            # These rows need the greedy flip walk (or are INF): per-k path.
+            for row in np.nonzero(over)[0]:
+                cell = cells[need[row]]
+                cell[_BODY][n] = self._cluster_body(cell[_STATIC], n, hw)
+        good = np.nonzero(~over)[0]
+        if not len(good):
+            return
+        ks_g = ks[good]
+        is_wsp = is_wsp[good]
+
+        # --- Eq. 5 computation (rows of _cluster_body's vectorized path)
+        m_local = np.where(is_wsp, wsp / n, wsp)
+        n_local = np.where(is_wsp, isp, isp / n)
+        util = _veff(m_local, hw.m_granule) * _veff(n_local, hw.n_granule)
+        comp = fl / ((n * hw.flops_per_chip) * util)
+
+        lit = (w / hw.dram_bw_total) if self.literal_pre else None
+        if L > 1:
+            # Transition-slice edge (l, l+1): WSP->WSP iff l <= k-2,
+            # WSP->ISP iff l == k-1, ISP->ISP otherwise (ISP->WSP and EP
+            # edges cannot occur in a WSP^k ISP^(L-k) row).
+            out_i = gd.out_bytes[lo : hi - 1]
+            halo_i = gd.halo_bytes[lo : hi - 1]
+            vo = (n - 1) * out_i
+            ha = halo_i * max(0, n - 1)
+            ww = lidx[None, : L - 1] <= (ks_g[:, None] - 2)
+            vol = np.where(ww, ha, vo)
+            comm_i = np.where(vol <= 0, 0.0, vol / (n * hw.nop_bw_per_chip))
+            comph = comp[:, :-1]
+            if self.overlap:
+                head_arr = np.maximum(comm_i, comph)
+            else:
+                head_arr = comm_i + comph
+            if lit is not None:
+                head_arr = (
+                    lit[None, :-1] + head_arr if self.overlap
+                    else (lit[None, :-1] + comm_i) + comph
+                )
+            head = np.cumsum(head_arr, axis=1)[:, -1]
+        else:
+            head = np.zeros(len(good))
+        pre_last = float(lit[-1]) if lit is not None else 0.0
+        comp_last = comp[:, -1]
+        for row, krow in enumerate(ks_g.tolist()):
+            cells[krow][_BODY][n] = (
+                float(head[row]), pre_last, float(comp_last[row])
+            )
+        self._batched_bodies += len(good)
+
     # -------------------------------------------------------------- memoized
     def _cluster_time_fast(
         self,
@@ -491,14 +605,15 @@ class FastCostModel(CostModel):
         n: int,
         next_p0: str | None,
         next_n: int | None,
+        ctype: str | None = None,
     ) -> float:
-        cell = self._cluster_cell(gd, lo, hi, partitions)
+        cell = self._cluster_cell(gd, lo, hi, partitions, ctype)
         k = (n, next_p0, next_n)
         t = cell.get(k)
         if t is None:
             self._misses += 1
             t = cell[k] = self._cluster_cost(
-                cell[_STATIC], n, next_p0, next_n, cell[_BODY]
+                cell[_STATIC], n, next_p0, next_n, cell[_BODY], ctype
             )
         return t
 
@@ -521,6 +636,7 @@ class FastCostModel(CostModel):
             cluster.region_chips,
             next_p0,
             next_n,
+            cluster.chip_type,
         )
 
     def segment_time(
@@ -535,7 +651,7 @@ class FastCostModel(CostModel):
             times.append(
                 self._cluster_time_fast(
                     gd, cl.layer_lo, cl.layer_hi, cl.partitions,
-                    cl.region_chips, next_p0, next_n,
+                    cl.region_chips, next_p0, next_n, cl.chip_type,
                 )
             )
         bottleneck = max(times)
@@ -548,13 +664,21 @@ class FastCostModel(CostModel):
                 for cl in clusters
             )
             load += seg_weights / self.hw.dram_bw_total
-        first = graph.layers[clusters[0].layer_lo]
-        load += self.m * first.in_bytes / self.hw.dram_bw_total
+        first_lo = clusters[0].layer_lo
+        load += self.m * graph.layers[first_lo].in_bytes / self.hw.dram_bw_total
+        if gd.dram_idx:
+            # Mid-segment DRAM-staged entry layers (merged model boundaries);
+            # mirrors the reference segment_time loop in index order.
+            for i in gd.dram_idx:
+                if i != first_lo and any(
+                    cl.layer_lo <= i < cl.layer_hi for cl in clusters
+                ):
+                    load += self.m * graph.layers[i].in_bytes / self.hw.dram_bw_total
         n_cl = len(clusters)
         return load + (self.m + n_cl - 1) * bottleneck, times
 
     # --------------------------------------------------------- DSE hot path
-    def segment_sweeper(self, graph, seg_lo, clustering):
+    def segment_sweeper(self, graph, seg_lo, clustering, chip_type=None):
         """Per-clustering factory for Algorithm 1's partition sweep.
 
         Returns ``sweeper(partitions, transition=None) -> eval_fn`` where
@@ -563,19 +687,22 @@ class FastCostModel(CostModel):
         (layer spans, Eq. 2 load terms, per-slot memo cells) lives in one
         reusable :class:`_SegmentSweep`; advancing the transition index by one
         only touches the single cluster whose partition slice changed.
+        ``sweeper.prefill(seed)`` batch-fills the seed-phase bodies (2D
+        ``k x layer`` vectorization) for every transition slice at once.
         """
-        sweep = _SegmentSweep(self, graph, seg_lo, clustering)
+        sweep = _SegmentSweep(self, graph, seg_lo, clustering, chip_type)
 
         def configure(partitions, transition=None):
             sweep.set_partitions(partitions, transition)
             return sweep
 
+        configure.prefill = sweep.prefill_seed
         return configure
 
     def segment_evaluator(self, graph, seg_lo, clustering, partitions,
-                          transition=None):
+                          transition=None, chip_type=None):
         """One-shot evaluator (CostModel-compatible); see segment_sweeper."""
-        return self.segment_sweeper(graph, seg_lo, clustering)(
+        return self.segment_sweeper(graph, seg_lo, clustering, chip_type)(
             partitions, transition
         )
 
@@ -595,12 +722,13 @@ class _SegmentSweep:
     __slots__ = (
         "model", "gd", "spans", "rel", "n_cl", "load_const", "m",
         "fill_factor", "has_expert", "first_expert", "cells", "statics",
-        "next_p0s", "cur_k", "cur_ep",
+        "next_p0s", "cur_k", "cur_ep", "ctype",
     )
 
     def __init__(self, model: FastCostModel, graph: LayerGraph, seg_lo: int,
-                 clustering) -> None:
+                 clustering, chip_type: str | None = None) -> None:
         self.model = model
+        self.ctype = chip_type
         gd = model.graph_data(graph)
         self.gd = gd
         self.rel = tuple(clustering)
@@ -616,10 +744,16 @@ class _SegmentSweep:
                 float(gd.wprefix[hi] - gd.wprefix[lo]) for lo, hi in self.spans
             )
             load_const += seg_weights / model.hw.dram_bw_total
+        first_lo = self.spans[0][0]
         load_const += (
-            model.m * graph.layers[self.spans[0][0]].in_bytes
-            / model.hw.dram_bw_total
+            model.m * graph.layers[first_lo].in_bytes / model.hw.dram_bw_total
         )
+        for i in gd.dram_idx:
+            # mid-segment DRAM-staged entry layers (merged model boundaries)
+            if i != first_lo and any(lo <= i < hi for lo, hi in self.spans):
+                load_const += (
+                    model.m * graph.layers[i].in_bytes / model.hw.dram_bw_total
+                )
         self.load_const = load_const
         self.m = model.m
         self.fill_factor = model.m + n_cl - 1
@@ -635,7 +769,7 @@ class _SegmentSweep:
             # Generic path (arbitrary partition tuples): tuple-keyed cells.
             for j, (lo, hi) in enumerate(self.rel):
                 p = partitions[lo:hi]
-                cell = model._cluster_cell(gd, *self.spans[j], p)
+                cell = model._cluster_cell(gd, *self.spans[j], p, self.ctype)
                 self.cells[j] = cell
                 self.statics[j] = cell[_STATIC]
                 self.cur_k[j] = self.cur_ep[j] = None
@@ -652,7 +786,7 @@ class _SegmentSweep:
             ep_j = ep_variant and self.has_expert[j]
             if k == self.cur_k[j] and ep_j == self.cur_ep[j]:
                 continue
-            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j)
+            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j, self.ctype)
             self.cells[j] = cell
             self.statics[j] = cell[_STATIC]
             self.cur_k[j] = k
@@ -671,7 +805,7 @@ class _SegmentSweep:
         if t is None:
             self.model._misses += 1
             t = cell[k] = self.model._cluster_cost(
-                self.statics[j], n, next_p0, next_n, cell[_BODY]
+                self.statics[j], n, next_p0, next_n, cell[_BODY], self.ctype
             )
         return t
 
@@ -683,6 +817,7 @@ class _SegmentSweep:
         statics = self.statics
         next_p0s = self.next_p0s
         cost = model._cluster_cost
+        ctype = self.ctype
         times = []
         append = times.append
         bottleneck = 0.0
@@ -694,7 +829,7 @@ class _SegmentSweep:
             if t is None:
                 model._misses += 1
                 t = cell[k] = cost(
-                    statics[j], alloc[j], next_p0s[j], next_n, cell[_BODY]
+                    statics[j], alloc[j], next_p0s[j], next_n, cell[_BODY], ctype
                 )
             if t > bottleneck:
                 bottleneck = t
@@ -702,6 +837,20 @@ class _SegmentSweep:
         if bottleneck == INF:
             return INF, times
         return self.load_const + self.fill_factor * bottleneck, times
+
+    def prefill_seed(self, alloc) -> None:
+        """Batch-fill the seed-phase bodies of every transition slice.
+
+        Called once per (clustering, seed allocation) by search_segment
+        before the transition sweep; spans below _BATCH_MIN_LAYERS stay on
+        the lazy per-k paths (scalar loops beat NumPy dispatch there).
+        """
+        model = self.model
+        if not model.batched_seed_fill:
+            return
+        for j, (lo, hi) in enumerate(self.spans):
+            if hi - lo >= _BATCH_MIN_LAYERS:
+                model._batch_seed_fill(self.gd, lo, hi, alloc[j], self.ctype)
 
     def move(self, base_alloc, base_times, dst, src, k=1):
         """Incremental re-eval after moving ``k`` chips src -> dst."""

@@ -108,6 +108,7 @@ class ClusterAssignment:
     layer_hi: int                  # exclusive
     region_chips: int              # ||Region(i, j)||
     partitions: tuple[str, ...]    # P(i, j, k) per layer, len == hi - lo
+    chip_type: str | None = None   # hetero package flavor (None = base type)
 
     @property
     def n_layers(self) -> int:
@@ -147,6 +148,123 @@ class ScopeSchedule:
                 for k, p in enumerate(cl.partitions):
                     out.append((cl.layer_lo + k, p, cl.region_chips))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-model co-scheduling containers (multimodel/ subsystem).
+# ---------------------------------------------------------------------------
+
+MM_PARTITIONED = "partitioned"     # per-model chip quotas, concurrent pipelines
+MM_MERGED = "merged"               # one merged pipeline over concatenated graphs
+MM_TIME_MUX = "time_mux"           # whole package time-multiplexed across models
+MM_MODES = (MM_PARTITIONED, MM_MERGED, MM_TIME_MUX)
+
+
+@dataclass(frozen=True)
+class ModelAssignment:
+    """One model's share of a co-scheduled package.
+
+    ``samples_per_beat`` is this model's batch weighting inside a merged
+    pipeline (1.0 elsewhere); ``time_share`` is its slice of a
+    time-multiplexed package (1.0 elsewhere).
+    """
+    model: str                     # LayerGraph name
+    weight: float                  # traffic weight (relative request rate)
+    chips: int                     # chips dedicated (partitioned) or total (else)
+    schedule: ScopeSchedule
+    chip_type: str | None = None   # hetero flavor the quota is drawn from
+    samples_per_beat: float = 1.0
+    time_share: float = 1.0
+
+    @property
+    def throughput(self) -> float:
+        """Samples/s this assignment serves for its model."""
+        lat = self.schedule.latency
+        if lat <= 0 or lat == float("inf"):
+            return 0.0
+        m = self.schedule.meta.get("m_samples", 1)
+        return self.time_share * m * self.samples_per_beat / lat
+
+
+@dataclass(frozen=True)
+class MultiModelSchedule:
+    """A co-schedule of N models onto one (optionally heterogeneous) package.
+
+    ``mix_rate`` is the sustainable rate of the *weighted mix unit*: the
+    largest lambda such that every model i can serve ``lambda * weight_i``
+    samples/s.  ``weighted_throughput = mix_rate * sum(weights)`` is the
+    total samples/s at the traffic mix, the figure of merit reported by
+    ``benchmarks/fig11_multimodel.py``.
+    """
+    package: str
+    chips: int
+    mode: str                      # one of MM_MODES
+    assignments: tuple[ModelAssignment, ...]
+    mix_rate: float = 0.0
+    weighted_throughput: float = 0.0
+    meta: dict = field(default_factory=dict, hash=False, compare=False)
+
+    @property
+    def n_models(self) -> int:
+        return len(self.assignments)
+
+    def assignment(self, model: str) -> ModelAssignment:
+        for a in self.assignments:
+            if a.model == model:
+                return a
+        raise KeyError(model)
+
+
+def mix_rate(assignments) -> float:
+    """lambda = min_i throughput_i / weight_i over a set of assignments."""
+    return min(
+        (a.throughput / a.weight if a.weight > 0 else float("inf"))
+        for a in assignments
+    )
+
+
+def validate_multimodel(
+    sched: MultiModelSchedule,
+    graphs: dict[str, LayerGraph],
+    type_capacity: dict[str | None, int],
+) -> None:
+    """Invariants of a co-schedule.
+
+    * every assignment's underlying ScopeSchedule is itself valid for its
+      (merged-mode: shared) graph and chip budget;
+    * partitioned quotas are disjoint: per chip type, dedicated chips sum to
+      at most the flavor's capacity;
+    * time-multiplexed shares sum to at most 1;
+    * mix_rate / weighted_throughput are consistent with the assignments.
+    """
+    assert sched.mode in MM_MODES, sched.mode
+    assert sched.assignments, "empty co-schedule"
+    for a in sched.assignments:
+        assert a.weight > 0, f"{a.model}: non-positive traffic weight"
+        assert a.chips >= 1
+        # Keyed by the schedule's workload so merged-mode assignments (which
+        # share one schedule over the concatenated graph) validate against
+        # the merged graph, not the per-model one.
+        graph = graphs[a.schedule.workload]
+        validate_schedule(graph, a.schedule, a.chips)
+    if sched.mode == MM_PARTITIONED:
+        used: dict[str | None, int] = {}
+        for a in sched.assignments:
+            used[a.chip_type] = used.get(a.chip_type, 0) + a.chips
+        for ctype, n in used.items():
+            cap = type_capacity.get(ctype)
+            assert cap is not None, f"unknown chip type {ctype!r}"
+            assert n <= cap, f"type {ctype!r}: {n} chips used > {cap}"
+    if sched.mode == MM_TIME_MUX:
+        shares = sum(a.time_share for a in sched.assignments)
+        assert shares <= 1.0 + 1e-9, f"time shares sum to {shares}"
+    lam = mix_rate(sched.assignments)
+    assert abs(lam - sched.mix_rate) <= 1e-9 * max(1.0, abs(lam)), (
+        "mix_rate inconsistent", lam, sched.mix_rate,
+    )
+    total_w = sum(a.weight for a in sched.assignments)
+    expect = lam * total_w
+    assert abs(expect - sched.weighted_throughput) <= 1e-9 * max(1.0, expect)
 
 
 def validate_schedule(graph: LayerGraph, sched: ScopeSchedule, chips: int) -> None:

@@ -36,6 +36,23 @@ def eff(dim: float, granule: int) -> float:
 
 
 @dataclass(frozen=True)
+class ChipType:
+    """One chiplet flavor of a heterogeneous package (Odema et al. / SCAR).
+
+    ``flops_scale`` / ``nop_bw_scale`` multiply the package's base
+    ``flops_per_chip`` / ``nop_bw_per_chip`` (and ``link_bw``); ``chips`` is
+    how many chiplets of this flavor the package carries.  The cost model
+    evaluates a cluster placed on chips of a single type; the type name is
+    folded into the FastCostModel memo key so cached cluster costs never
+    leak across flavors.
+    """
+    name: str
+    chips: int
+    flops_scale: float = 1.0
+    nop_bw_scale: float = 1.0
+
+
+@dataclass(frozen=True)
 class HardwareModel:
     name: str
     chips: int
@@ -53,6 +70,9 @@ class HardwareModel:
     e_nop_byte: float = 0.0
     e_dram_byte: float = 0.0
     e_sram_byte: float = 0.0
+    # Heterogeneous package: per-region chip flavors.  Empty = homogeneous
+    # (every chip is the base flavor described by the fields above).
+    region_types: tuple[ChipType, ...] = ()
 
     def with_chips(self, chips: int) -> "HardwareModel":
         side = int(math.sqrt(chips))
@@ -61,6 +81,49 @@ class HardwareModel:
         else:
             shape = (max(1, chips // max(1, side)), side)
         return replace(self, chips=chips, mesh_shape=shape)
+
+    # ------------------------------------------------------- chip flavors
+    @property
+    def is_heterogeneous(self) -> bool:
+        return len(self.region_types) > 0
+
+    def chip_type(self, name: str) -> ChipType:
+        for t in self.region_types:
+            if t.name == name:
+                return t
+        raise KeyError(f"{self.name}: unknown chip type {name!r}")
+
+    def typed(self, name: str | None) -> "HardwareModel":
+        """The hardware seen by a region of ``name``-flavored chips.
+
+        Scales compute and NoP injection/link bandwidth by the flavor's
+        factors; DRAM and buffer capacities stay package-level properties.
+        ``None`` (or empty) is the base flavor: returns ``self`` unchanged,
+        so homogeneous callers never pay for the indirection.
+        """
+        if not name:
+            return self
+        t = self.chip_type(name)
+        return replace(
+            self,
+            name=f"{self.name}:{name}",
+            flops_per_chip=self.flops_per_chip * t.flops_scale,
+            nop_bw_per_chip=self.nop_bw_per_chip * t.nop_bw_scale,
+            link_bw=self.link_bw * t.nop_bw_scale,
+            region_types=(),
+        )
+
+
+def validate_region_types(hw: HardwareModel) -> None:
+    if not hw.region_types:
+        return
+    names = [t.name for t in hw.region_types]
+    assert len(set(names)) == len(names), f"duplicate chip types: {names}"
+    assert all(n for n in names), "chip types need non-empty names"
+    total = sum(t.chips for t in hw.region_types)
+    assert total == hw.chips, (
+        f"{hw.name}: region_types cover {total} != {hw.chips} chips"
+    )
 
 
 def mcm_table_iii(chips: int = 256) -> HardwareModel:
@@ -107,6 +170,35 @@ def tpu_v5e(chips: int = 256, mesh_shape: tuple[int, int] = (16, 16)) -> Hardwar
     )
 
 
+def mcm_hetero(
+    chips: int = 64,
+    big_fraction: float = 0.5,
+    big_flops_scale: float = 1.0,
+    little_flops_scale: float = 0.5,
+    little_nop_scale: float = 0.75,
+) -> HardwareModel:
+    """Table III package with a big/little chiplet split (hetero extension).
+
+    ``big`` chips are the base Table III chiplet; ``little`` chips trade
+    compute (and some NoP bandwidth) for area/power, the setting of the
+    multi-model co-scheduling papers (Odema et al., SCAR).
+    """
+    big = int(round(chips * big_fraction))
+    big = min(max(big, 1), chips - 1)
+    hw = replace(
+        mcm_table_iii(chips),
+        name=f"mcm{chips}_hetero",
+        region_types=(
+            ChipType("big", big, flops_scale=big_flops_scale),
+            ChipType("little", chips - big,
+                     flops_scale=little_flops_scale,
+                     nop_bw_scale=little_nop_scale),
+        ),
+    )
+    validate_region_types(hw)
+    return hw
+
+
 # Convenience preset registry used by benchmarks / CLI.
 PRESETS = {
     "mcm16": lambda: mcm_table_iii(16),
@@ -114,6 +206,8 @@ PRESETS = {
     "mcm256": lambda: mcm_table_iii(256),
     "tpu_v5e_256": lambda: tpu_v5e(256, (16, 16)),
     "tpu_v5e_512": lambda: tpu_v5e(512, (16, 32)),
+    "mcm64_hetero": lambda: mcm_hetero(64),
+    "mcm16_hetero": lambda: mcm_hetero(16),
 }
 
 

@@ -73,6 +73,7 @@ def rebalance(
     eval_fn,
     max_iters: int = 256,
     donor_tries: int = 2,
+    paper_strict: bool = False,
 ) -> tuple[list[int], float, list[float]]:
     """Paper's heuristic: move 1 chip from the fastest to the slowest region.
 
@@ -86,10 +87,19 @@ def rebalance(
     * when the fastest donor's move ties or regresses, the next-fastest
       donor is tried (``donor_tries`` donors in total) before terminating --
       a tie through one donor does not prove no donor can improve.
+
+    ``paper_strict=True`` disables both repairs and replicates Algorithm 1's
+    pseudocode exactly: an infeasible seed terminates immediately, and only
+    the single fastest region is ever tried as donor.  Use it for
+    literal-pseudocode comparison tables; the default explores strictly more.
     """
     INF = float("inf")
+    if paper_strict:
+        donor_tries = 1
     best = list(alloc)
     best_lat, best_times = eval_fn(best)
+    if paper_strict and best_lat == INF:
+        return best, best_lat, best_times
     # Incremental protocol (fastcost.py): ``move(alloc, times, dst, src, k)``
     # re-evaluates only the clusters a chip transfer actually changes.
     mv = getattr(eval_fn, "move", None)

@@ -48,6 +48,7 @@ def build_clusters(
     clustering: Clustering,
     partitions: tuple[str, ...],
     regions: list[int],
+    chip_type: str | None = None,
 ) -> tuple[ClusterAssignment, ...]:
     """Assemble ClusterAssignments from segment-relative pieces."""
     out = []
@@ -58,6 +59,7 @@ def build_clusters(
                 layer_hi=seg_lo + hi,
                 region_chips=chips,
                 partitions=partitions[lo:hi],
+                chip_type=chip_type,
             )
         )
     return tuple(out)
@@ -70,8 +72,9 @@ def evaluate_segment(
     clustering: Clustering,
     partitions: tuple[str, ...],
     regions: list[int],
+    chip_type: str | None = None,
 ) -> tuple[float, list[float]]:
-    clusters = build_clusters(seg_lo, clustering, partitions, regions)
+    clusters = build_clusters(seg_lo, clustering, partitions, regions, chip_type)
     lat, times = cost.segment_time(graph, clusters)
     return lat, times
 
@@ -93,11 +96,15 @@ def search_segment(
     ep_for_moe: bool = False,
     max_clusters: int | None = None,
     fixed_clustering: Clustering | None = None,
+    chip_type: str | None = None,
+    paper_strict: bool = False,
 ) -> SegmentResult | None:
     """Algorithm 1 over one segment.
 
     ``fixed_clustering`` short-circuits the CMT (used by the segmented-pipeline
-    baseline, where every layer is its own cluster).
+    baseline, where every layer is its own cluster).  ``chip_type`` runs the
+    whole segment on one flavor of a heterogeneous package; ``paper_strict``
+    replicates the pseudocode's rebalance exactly (regions.rebalance).
     """
     sub = graph.slice(seg_lo, seg_hi)
     L = len(sub)
@@ -140,7 +147,12 @@ def search_segment(
         seed = seeds.get(n_cluster)
         if seed is None:
             continue
-        sweeper = cost.segment_sweeper(graph, seg_lo, clustering)
+        sweeper = cost.segment_sweeper(graph, seg_lo, clustering, chip_type)
+        # Seed-phase batch fill (fastcost 2D (k x layer) vectorization): every
+        # transition slice's body at the seed allocation in one array pass.
+        prefill = getattr(sweeper, "prefill", None)
+        if prefill is not None:
+            prefill(seed)
         for partitions, hint in partition_sets.items():
 
             # One evaluator per (clustering, partitions): FastCostModel
@@ -152,10 +164,13 @@ def search_segment(
                 lat, times = eval_fn(seed)
                 alloc = seed
             else:
-                alloc, lat, times = rebalance(seed, eval_fn)
+                alloc, lat, times = rebalance(seed, eval_fn,
+                                              paper_strict=paper_strict)
             if lat < (best.latency if best else INF):
                 best = SegmentResult(
-                    clusters=build_clusters(seg_lo, clustering, partitions, alloc),
+                    clusters=build_clusters(
+                        seg_lo, clustering, partitions, alloc, chip_type
+                    ),
                     latency=lat,
                     cluster_times=tuple(times),
                 )
@@ -170,8 +185,15 @@ def search(
     ep_for_moe: bool = False,
     segment_counts: list[int] | None = None,
     max_clusters: int | None = None,
+    chip_type: str | None = None,
+    paper_strict: bool = False,
 ) -> ScopeSchedule | None:
-    """Full Scope DSE: segment sweep x Algorithm 1 per segment (Eq. 1)."""
+    """Full Scope DSE: segment sweep x Algorithm 1 per segment (Eq. 1).
+
+    ``chip_type`` schedules onto ``chips`` chips of that flavor of a
+    heterogeneous package (multimodel quota search); segment feasibility
+    uses package-level weight capacity, which is flavor-independent.
+    """
     hw = cost.hw
     counts = segment_counts or candidate_segment_counts(graph, hw, chips)
     best_sched: ScopeSchedule | None = None
@@ -186,6 +208,7 @@ def search(
             res = search_segment(
                 cost, graph, lo, hi, chips, mode=mode,
                 ep_for_moe=ep_for_moe, max_clusters=max_clusters,
+                chip_type=chip_type, paper_strict=paper_strict,
             )
             if res is None or res.latency == INF:
                 ok = False
@@ -197,12 +220,15 @@ def search(
         if not ok:
             continue
         if best_sched is None or total < best_sched.latency:
+            meta = {"n_segments": n_seg, "mode": mode.value}
+            if chip_type:
+                meta["chip_type"] = chip_type
             best_sched = ScopeSchedule(
                 workload=graph.name,
                 chips=chips,
                 segments=tuple(segs),
                 latency=total,
-                meta={"n_segments": n_seg, "mode": mode.value},
+                meta=meta,
             )
     return best_sched
 

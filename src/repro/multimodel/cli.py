@@ -1,0 +1,56 @@
+"""CLI: co-schedule a model mix onto an MCM package.
+
+    PYTHONPATH=src python -m repro.multimodel.cli \
+        --mix resnet50:1,alexnet:1 --hw mcm16 [--step 1] [--baselines]
+
+``--hw`` accepts any preset from repro.core.hw (including ``mcm64_hetero``).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..core.fastcost import FastCostModel
+from ..core.hw import get_hw
+from .baselines import equal_split, time_multiplexed
+from .coschedule import co_schedule, describe
+from .spec import parse_mix
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mix", required=True,
+                    help="comma list of net[:weight], e.g. resnet50:2,alexnet:1")
+    ap.add_argument("--hw", default="mcm64", help="hardware preset name")
+    ap.add_argument("--m-samples", type=int, default=16)
+    ap.add_argument("--step", type=int, default=1,
+                    help="quota grid step (1 = exhaustive)")
+    ap.add_argument("--baselines", action="store_true",
+                    help="also report equal-split and time-mux baselines")
+    args = ap.parse_args(argv)
+
+    specs = parse_mix(args.mix)
+    hw = get_hw(args.hw)
+    cost = FastCostModel(hw, m_samples=args.m_samples)
+    sched = co_schedule(specs, hw, m_samples=args.m_samples, step=args.step,
+                        cost=cost)
+    if sched is None:
+        raise SystemExit(f"no feasible co-schedule for {args.mix} on {args.hw}")
+    for line in describe(sched):
+        print(line)
+    print(f"  searched in {sched.meta['dse_s']:.2f}s; "
+          f"engine {sched.meta['engine_stats']}")
+    if args.baselines:
+        for name, fn in (("equal_split", equal_split),
+                         ("time_multiplexed", time_multiplexed)):
+            b = fn(specs, cost)
+            if b is None:
+                print(f"{name}: infeasible")
+                continue
+            print(f"{name}: weighted throughput "
+                  f"{b.weighted_throughput:.1f} samples/s "
+                  f"({sched.weighted_throughput / b.weighted_throughput:.2f}x "
+                  "vs co-schedule)")
+
+
+if __name__ == "__main__":
+    main()

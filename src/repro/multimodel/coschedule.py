@@ -1,0 +1,106 @@
+"""The co-scheduler: best of {partitioned quotas, merged pipeline, time-mux}.
+
+``co_schedule`` is the subsystem's entry point.  It searches the three
+co-scheduling families over one shared FastCostModel (the cluster-cost memo
+is what makes the joint sweep affordable -- engine stats land in the result
+meta) and returns the best :class:`MultiModelSchedule` by weighted
+throughput.  Time multiplexing is itself a legal co-schedule, so the result
+is by construction at least as good as either fig11 baseline.
+"""
+from __future__ import annotations
+
+import time
+
+from ..core.costmodel import CostModel
+from ..core.fastcost import FastCostModel
+from ..core.graph import MultiModelSchedule, validate_multimodel
+from ..core.hw import HardwareModel, validate_region_types
+from .baselines import time_multiplexed
+from .curves import build_curves
+from .interleave import merged_graph, search_merged
+from .quota import package_flavors, search_partitioned
+from .spec import ModelSpec
+
+
+def co_schedule(
+    specs: list[ModelSpec],
+    hw: HardwareModel,
+    m_samples: int = 16,
+    step: int = 1,
+    include_merged: bool = True,
+    include_time_mux: bool = True,
+    paper_strict: bool = False,
+    cost: CostModel | None = None,
+    validate: bool = True,
+) -> MultiModelSchedule | None:
+    """Jointly schedule ``specs`` onto one package.
+
+    ``step`` coarsens the quota grid (1 = exhaustive); ``cost`` lets callers
+    supply a pre-warmed engine (its memo then carries over between calls).
+    """
+    validate_region_types(hw)
+    names = [s.name for s in specs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate model names in mix: {names}")
+    if cost is None:
+        cost = FastCostModel(hw, m_samples=m_samples)
+    t0 = time.time()
+    flavors = package_flavors(hw)
+    curves = build_curves(specs, cost, flavors, step, paper_strict)
+
+    candidates: list[tuple[str, MultiModelSchedule]] = []
+    part = search_partitioned(specs, cost, step, paper_strict, curves=curves)
+    if part is not None:
+        candidates.append((part.mode, part))
+    if include_merged and len(specs) > 1:
+        for ctype, _cap in flavors:
+            merged = search_merged(specs, cost, chip_type=ctype,
+                                   paper_strict=paper_strict)
+            if merged is not None:
+                label = f"{merged.mode}:{ctype}" if ctype else merged.mode
+                candidates.append((label, merged))
+    if include_time_mux:
+        tm = time_multiplexed(specs, cost, curves=curves)
+        if tm is not None:
+            candidates.append((tm.mode, tm))
+    if not candidates:
+        return None
+
+    best = max(candidates, key=lambda c: c[1].weighted_throughput)[1]
+    best.meta.update({
+        "dse_s": time.time() - t0,
+        "engine_stats": dict(getattr(cost, "stats", {})),
+        "mode_rates": {
+            label: c.weighted_throughput for label, c in candidates
+        },
+    })
+    if validate:
+        graphs = {s.name: s.graph for s in specs}
+        if best.mode == "merged":
+            mg, _ = merged_graph(specs)
+            graphs[mg.name] = mg
+        type_capacity = dict(flavors)
+        validate_multimodel(best, graphs, type_capacity)
+    return best
+
+
+def describe(sched: MultiModelSchedule) -> list[str]:
+    """Human-readable co-schedule summary (CLI / examples)."""
+    lines = [
+        f"{sched.package}: {sched.n_models} models, mode={sched.mode}, "
+        f"mix rate {sched.mix_rate:.1f}/s, "
+        f"weighted throughput {sched.weighted_throughput:.1f} samples/s"
+    ]
+    for a in sched.assignments:
+        extras = []
+        if a.chip_type:
+            extras.append(f"type={a.chip_type}")
+        if a.samples_per_beat != 1.0:
+            extras.append(f"{a.samples_per_beat:g} samples/beat")
+        if a.time_share != 1.0:
+            extras.append(f"{a.time_share * 100:.0f}% of time")
+        lines.append(
+            f"  {a.model:12s} w={a.weight:g}  {a.chips:4d} chips  "
+            f"{a.throughput:9.1f} samples/s  {' '.join(extras)}"
+        )
+    return lines

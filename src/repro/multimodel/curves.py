@@ -1,0 +1,109 @@
+"""Per-model throughput curves over chip counts -- the quota search's table.
+
+For each (model, chip flavor) the quota search needs ``throughput(c)`` for
+every candidate quota ``c``.  Each point is a full Scope DSE
+(``search(graph, cost, c, chip_type=t)``); all points share one
+:class:`~repro.core.fastcost.FastCostModel`, whose cluster-cost memo is keyed
+on ``(graph, layer range, partitions, region_chips, ..., chip_type)`` -- so
+consecutive ``c`` values re-solve mostly-cached sub-problems and a whole
+curve costs a small multiple of one search (engine stats in the fig11
+benchmark demonstrate the reuse).
+
+Scope throughput is *not* monotone in chips (NoP overheads / utilization
+collapse, paper Fig. 9), so a quota of ``c`` chips is served by the best
+schedule using **at most** ``c`` chips (the rest idle): the curve exposes
+that monotone envelope via :meth:`ThroughputCurve.envelope`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.costmodel import INF, CostModel
+from ..core.graph import LayerGraph, ScopeSchedule
+from ..core.search import search
+
+
+@dataclass
+class CurvePoint:
+    chips: int
+    latency: float
+    throughput: float
+    schedule: ScopeSchedule | None
+
+
+@dataclass
+class ThroughputCurve:
+    """throughput(c) for one (model, chip flavor), plus monotone envelope."""
+    model: str
+    chip_type: str | None
+    points: dict[int, CurvePoint] = field(default_factory=dict)
+
+    def envelope(self, max_chips: int) -> list[CurvePoint | None]:
+        """``envelope()[c]`` = best point using at most ``c`` chips, for
+        every c in 0..max_chips (index 0 is None) -- O(1) quota lookups."""
+        out: list[CurvePoint | None] = [None] * (max_chips + 1)
+        best = None
+        for c in range(1, max_chips + 1):
+            pt = self.points.get(c)
+            if (
+                pt is not None and pt.schedule is not None
+                and (best is None or pt.throughput > best.throughput)
+            ):
+                best = pt
+            out[c] = best
+        return out
+
+
+def candidate_counts(max_chips: int, step: int = 1) -> list[int]:
+    """Curve sample points: all of 1..max_chips at ``step=1``; otherwise the
+    same grid ``quota._flavor_splits`` enumerates -- multiples of ``step``
+    plus the remainder-shifted multiples (the first model of a flavor group
+    absorbs ``max_chips % step``) plus {1, max_chips} -- so every coarse
+    quota resolves to a schedule actually sized for it."""
+    step = max(1, step)
+    if step == 1:
+        return list(range(1, max_chips + 1))
+    rem = max_chips % step
+    pts = set(range(step, max_chips + 1, step)) | {1, max_chips}
+    if rem:
+        pts |= set(range(step + rem, max_chips + 1, step))
+    return sorted(pts)
+
+
+def throughput_curve(
+    cost: CostModel,
+    graph: LayerGraph,
+    max_chips: int,
+    chip_type: str | None = None,
+    step: int = 1,
+    paper_strict: bool = False,
+) -> ThroughputCurve:
+    curve = ThroughputCurve(graph.name, chip_type)
+    for c in candidate_counts(max_chips, step):
+        sched = search(graph, cost, c, chip_type=chip_type,
+                       paper_strict=paper_strict)
+        if sched is None or sched.latency == INF:
+            curve.points[c] = CurvePoint(c, INF, 0.0, None)
+            continue
+        sched.meta["m_samples"] = cost.m
+        curve.points[c] = CurvePoint(
+            c, sched.latency, cost.m / sched.latency, sched
+        )
+    return curve
+
+
+def build_curves(
+    specs,
+    cost: CostModel,
+    flavors: list[tuple[str | None, int]],
+    step: int = 1,
+    paper_strict: bool = False,
+) -> dict[tuple[str, str | None], ThroughputCurve]:
+    """Curves for every (model, flavor) pair, all through one shared memo."""
+    out = {}
+    for spec in specs:
+        for ctype, cap in flavors:
+            out[(spec.name, ctype)] = throughput_curve(
+                cost, spec.graph, cap, ctype, step, paper_strict
+            )
+    return out

@@ -1,0 +1,110 @@
+"""Merged interleaving: fuse several models into one shared merged pipeline.
+
+Spatial partitioning wastes chips when a small model cannot use even its
+minimal quota efficiently.  The alternative the merged-pipeline dimension
+opens up: concatenate the models' LayerGraphs into one chain, scale each
+model's layers by a per-model batch weighting (``LayerNode.scaled``), and
+run a single Scope DSE over the whole package.  One pipeline beat then
+produces ``scale_i`` samples of model ``i``; every region serves exactly one
+model's layers (clusters never straddle models more than the CMT merge
+allows -- straddling is legal and simply means two small adjacent models
+share a region, which is the point of merging).
+
+Boundary semantics: consecutive models exchange no activations -- model
+outputs leave via DRAM (out/halo sanitized to 0, like any network output)
+and the next model's inputs arrive from DRAM.  Each model-initial layer is
+marked ``meta["dram_input"]`` and the cost model's segment-level load term
+charges its staging wherever the boundary lands (mid-segment entry layers
+included, see ``segment_time``) -- partition-independent, so the DSE cannot
+dodge the charge by picking a particular boundary partition pair.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from ..core.costmodel import INF, CostModel
+from ..core.graph import (
+    MM_MERGED,
+    LayerGraph,
+    ModelAssignment,
+    MultiModelSchedule,
+    mix_rate,
+)
+from ..core.search import search
+
+
+def batch_scales(specs, max_scale: int = 8) -> list[int]:
+    """Integer samples-per-beat per model, approximately proportional to the
+    traffic weights (capped at ``max_scale`` to keep merged graphs small).
+    The achieved mix rate is computed from the *actual* scales, so the
+    integer rounding never over-reports throughput."""
+    w_min = min(s.weight for s in specs)
+    return [
+        max(1, min(max_scale, round(s.weight / w_min))) for s in specs
+    ]
+
+
+def merged_graph(specs, scales=None) -> tuple[LayerGraph, list[int]]:
+    """Concatenate the specs' graphs with per-model batch weighting."""
+    scales = scales or batch_scales(specs)
+    layers = []
+    for m, (spec, scale) in enumerate(zip(specs, scales)):
+        for i, node in enumerate(spec.graph.layers):
+            node = node.scaled(scale)
+            if i == len(spec.graph) - 1:
+                node = replace(node, out_bytes=0.0, halo_bytes=0.0)
+            if i == 0 and m > 0:
+                node = replace(
+                    node, meta={**node.meta, "dram_input": True}
+                )
+            layers.append(replace(node, name=f"{spec.name}.{node.name}"))
+    name = "+".join(
+        f"{s.name}x{k}" if k > 1 else s.name for s, k in zip(specs, scales)
+    )
+    return LayerGraph(name, tuple(layers)), list(scales)
+
+
+def search_merged(
+    specs,
+    cost: CostModel,
+    chip_type: str | None = None,
+    chips: int | None = None,
+    paper_strict: bool = False,
+) -> MultiModelSchedule | None:
+    """One Scope DSE over the merged graph on the whole package.
+
+    On a heterogeneous package the merged pipeline must live on a single
+    flavor (a Scope schedule is single-typed); callers pick the flavor via
+    ``chip_type``/``chips`` -- co_schedule tries each.
+    """
+    hw = cost.hw
+    if chips is None:
+        chips = hw.chips if not hw.region_types else hw.chip_type(chip_type).chips
+    graph, scales = merged_graph(specs)
+    sched = search(graph, cost, chips, chip_type=chip_type,
+                   paper_strict=paper_strict)
+    if sched is None or sched.latency == INF:
+        return None
+    sched.meta["m_samples"] = cost.m
+    sched.meta["batch_scales"] = list(scales)
+    assignments = tuple(
+        ModelAssignment(
+            model=spec.name,
+            weight=spec.weight,
+            chips=chips,
+            schedule=sched,
+            chip_type=chip_type,
+            samples_per_beat=float(scale),
+        )
+        for spec, scale in zip(specs, scales)
+    )
+    lam = mix_rate(assignments)
+    return MultiModelSchedule(
+        package=hw.name,
+        chips=hw.chips,
+        mode=MM_MERGED,
+        assignments=assignments,
+        mix_rate=lam,
+        weighted_throughput=lam * sum(s.weight for s in specs),
+        meta={"merged_graph": graph.name, "batch_scales": list(scales)},
+    )

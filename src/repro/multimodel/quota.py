@@ -1,0 +1,188 @@
+"""Package partitioning: per-model chip quotas over an (optionally hetero) MCM.
+
+The partitioned mode gives every model a dedicated region set drawn from one
+chip flavor and runs the models' pipelines concurrently.  The search is
+two-level:
+
+1. per-(model, flavor) throughput curves (``curves.py``) -- all Scope
+   sub-searches share one FastCostModel memo, so sweeping every quota size
+   costs a small multiple of a single search;
+2. enumeration over quota assignments: which flavor each model draws from,
+   and how each flavor's chips split among its models.  This level is pure
+   table lookups over the curves' monotone envelopes; it is exhaustive at
+   ``step=1`` (cheap for the benchmark mixes: O(C^(N-1)) lookups) and walks
+   a coarsened ``step``-chip grid for large packages / many models, where
+   exact compositions would explode combinatorially.
+
+``brute_force_partitioned`` re-solves the same problem with fresh reference
+searches per candidate -- exponentially slower, used by
+``tests/test_multimodel.py`` to pin the table-based search on tiny cases.
+"""
+from __future__ import annotations
+
+import itertools
+
+from ..core.costmodel import INF, CostModel
+from ..core.graph import (
+    MM_PARTITIONED,
+    ModelAssignment,
+    MultiModelSchedule,
+    mix_rate,
+)
+from ..core.hw import HardwareModel
+from ..core.search import compositions, search
+from .curves import build_curves
+
+
+def package_flavors(hw: HardwareModel) -> list[tuple[str | None, int]]:
+    """The quota pools: ``[(chip_type_name, chips)]``; homogeneous packages
+    are one anonymous pool."""
+    if hw.region_types:
+        return [(t.name, t.chips) for t in hw.region_types]
+    return [(None, hw.chips)]
+
+
+def _flavor_splits(cap: int, parts: int, step: int):
+    """Splits of ``cap`` chips among ``parts`` models on a ``step`` grid.
+
+    ``step == 1`` is every exact composition.  ``step > 1`` composes
+    ``cap // step`` units of ``step`` chips (remainder to the first model) --
+    the coarse grid for large packages; the curves' monotone envelope turns
+    each quota into "at most this many chips", so coarse quotas stay valid,
+    just less finely optimized.
+    """
+    if step <= 1 or cap < parts * step:
+        yield from compositions(cap, parts)
+        return
+    units, rem = divmod(cap, step)
+    for comp in compositions(units, parts):
+        yield [c * step + (rem if i == 0 else 0) for i, c in enumerate(comp)]
+
+
+def _enumerate_quotas(
+    n_models: int, flavors: list[tuple[str | None, int]], step: int = 1
+):
+    """Yield ``[(flavor_idx, chips), ...]`` per model: every assignment of
+    models to flavors x every split of each flavor's chips among its models
+    (on the ``step`` quota grid).
+
+    Splits are compositions of the full pool; quotas that would be better
+    served by fewer chips are handled by the curves' monotone envelope
+    (idle chips), so exact-sum compositions lose no generality.
+    """
+    for type_assign in itertools.product(range(len(flavors)), repeat=n_models):
+        groups: dict[int, list[int]] = {}
+        for i, t in enumerate(type_assign):
+            groups.setdefault(t, []).append(i)
+        if any(len(g) > flavors[t][1] for t, g in groups.items()):
+            continue
+        per_flavor = [
+            (t, g, list(_flavor_splits(flavors[t][1], len(g), step)))
+            for t, g in groups.items()
+        ]
+        for combo in itertools.product(*[opts for _, _, opts in per_flavor]):
+            quota = [None] * n_models
+            for (t, g, _), comp in zip(per_flavor, combo):
+                for i, c in zip(g, comp):
+                    quota[i] = (t, c)
+            yield quota
+
+
+def search_partitioned(
+    specs,
+    cost: CostModel,
+    step: int = 1,
+    paper_strict: bool = False,
+    curves=None,
+) -> MultiModelSchedule | None:
+    """Best spatial partitioning of the package across the specs."""
+    hw = cost.hw
+    flavors = package_flavors(hw)
+    if curves is None:
+        curves = build_curves(specs, cost, flavors, step, paper_strict)
+    envelopes = {
+        (name, ctype): curve.envelope(dict(flavors)[ctype])
+        for (name, ctype), curve in curves.items()
+    }
+    n = len(specs)
+    best_lam, best_quota, n_candidates = -1.0, None, 0
+    for quota in _enumerate_quotas(n, flavors, step):
+        n_candidates += 1
+        lam = INF
+        picks = []
+        for spec, (t, c) in zip(specs, quota):
+            ctype = flavors[t][0]
+            pt = envelopes[(spec.name, ctype)][c]
+            tp = pt.throughput if pt else 0.0
+            picks.append((ctype, pt))
+            lam = min(lam, tp / spec.weight)
+            if lam <= best_lam:
+                break
+        if lam > best_lam:
+            best_lam, best_quota = lam, picks
+    if best_quota is None or best_lam <= 0.0:
+        return None
+    assignments = tuple(
+        ModelAssignment(
+            model=spec.name,
+            weight=spec.weight,
+            chips=pt.chips,
+            schedule=pt.schedule,
+            chip_type=ctype,
+        )
+        for spec, (ctype, pt) in zip(specs, best_quota)
+    )
+    lam = mix_rate(assignments)
+    return MultiModelSchedule(
+        package=hw.name,
+        chips=hw.chips,
+        mode=MM_PARTITIONED,
+        assignments=assignments,
+        mix_rate=lam,
+        weighted_throughput=lam * sum(s.weight for s in specs),
+        meta={
+            "quota_candidates": n_candidates,
+            "curve_points": sum(len(c.points) for c in curves.values()),
+        },
+    )
+
+
+def brute_force_partitioned(
+    specs, hw: HardwareModel, m_samples: int = 16,
+    cost_cls=CostModel,
+) -> tuple[float, list[tuple[str | None, int]]]:
+    """Exhaustive (flavor, chips) assignment with a fresh search per point.
+
+    Idle chips are allowed (per-flavor sums may be < the pool), matching the
+    quota search's monotone envelope.  Tiny cases only -- this is the test
+    oracle, deliberately sharing no code with the table-based search.
+    """
+    flavors = package_flavors(hw)
+    n = len(specs)
+    best_lam, best_assign = 0.0, None
+    for type_assign in itertools.product(range(len(flavors)), repeat=n):
+        caps = [flavors[t][1] for t in type_assign]
+        for chips_assign in itertools.product(
+            *[range(1, c + 1) for c in caps]
+        ):
+            used: dict[int, int] = {}
+            for t, c in zip(type_assign, chips_assign):
+                used[t] = used.get(t, 0) + c
+            if any(u > flavors[t][1] for t, u in used.items()):
+                continue
+            lam = INF
+            for spec, t, c in zip(specs, type_assign, chips_assign):
+                cost = cost_cls(hw, m_samples=m_samples)
+                sched = search(spec.graph, cost, c, chip_type=flavors[t][0])
+                tp = (
+                    0.0 if sched is None or sched.latency == INF
+                    else m_samples / sched.latency
+                )
+                lam = min(lam, tp / spec.weight)
+            if lam > best_lam:
+                best_lam = lam
+                best_assign = [
+                    (flavors[t][0], c)
+                    for t, c in zip(type_assign, chips_assign)
+                ]
+    return best_lam, best_assign

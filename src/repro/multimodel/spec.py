@@ -1,0 +1,51 @@
+"""Model specs for co-scheduling: a LayerGraph plus its traffic weight."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.graph import LayerGraph
+from ..core.workloads import get_cnn
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """One tenant of a co-scheduled package.
+
+    ``weight`` is the relative request rate of this model in the traffic
+    mix (weights only matter relative to each other): the co-scheduler
+    maximizes the sustainable rate of the weighted mix unit.
+    """
+    graph: LayerGraph
+    weight: float = 1.0
+
+    @property
+    def name(self) -> str:
+        return self.graph.name
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"{self.graph.name}: weight must be > 0")
+
+
+def parse_mix(mix: str) -> list[ModelSpec]:
+    """``"resnet50:2,alexnet:1"`` -> ModelSpecs (weight defaults to 1).
+
+    Names resolve through the CNN workload registry; duplicate names get a
+    ``#k`` suffix so per-model results stay distinguishable.
+    """
+    specs: list[ModelSpec] = []
+    seen: dict[str, int] = {}
+    for part in mix.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition(":")
+        graph = get_cnn(name)
+        count = seen.get(name, 0)
+        seen[name] = count + 1
+        if count:
+            graph = LayerGraph(f"{name}#{count + 1}", graph.layers)
+        specs.append(ModelSpec(graph, float(w) if w else 1.0))
+    if not specs:
+        raise ValueError(f"empty mix: {mix!r}")
+    return specs

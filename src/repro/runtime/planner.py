@@ -58,8 +58,21 @@ def plan_for_cell(
     meta = {"kind": kind, "dse": True, "t_layers": t_layers,
             "latency": best[0], "dse_s": dse_s,
             "dse_engine": cost.stats}
-    # graph layout: [embed] + per-block nodes + [lm_head]; map the layer
-    # transition onto the repeat axis of the scanned stack.
+    return _plan_from_transition(cfg, mesh_axes, t_layers, L, meta)
+
+
+def _plan_from_transition(
+    cfg: ModelConfig,
+    mesh_axes: tuple[str, ...],
+    t_layers: int,
+    L: int,
+    meta: dict,
+) -> ShardPlan:
+    """Map a WSP->ISP layer transition index onto the scanned layer stack.
+
+    Graph layout: [embed] + per-block nodes + [lm_head]; the transition maps
+    onto the repeat axis of the stack as ``transition_repeat`` (two zones).
+    """
     per_block = (L - 2) / max(1, cfg.n_layers)
     layers_per_repeat = per_block * len(cfg.expanded_pattern)
     t_rep = round(max(0.0, (t_layers - 1)) / max(1e-9, layers_per_repeat))
@@ -74,3 +87,65 @@ def plan_for_cell(
         mesh_axes=mesh_axes, p1="WSP", p2="ISP", transition_repeat=t_rep,
         meta=meta,
     )
+
+
+def plan_for_multimodel(
+    cfgs: list[ModelConfig],
+    seq_len: int,
+    global_batch: int,
+    mesh_axes: tuple[str, ...],
+    model_axis: int = 16,
+    weights: list[float] | None = None,
+    step: int = 1,
+):
+    """Co-schedule several LM configs onto one model axis.
+
+    Runs the multimodel quota search (``repro.multimodel.co_schedule``) over
+    the configs' exported layer graphs on a ``model_axis``-chip package, then
+    derives each model's ShardPlan from its Scope schedule: the plan's
+    WSP->ISP transition is the schedule's first transition point, and
+    ``meta["quota_chips"]`` is the model-axis share the co-schedule assigned
+    (the serving path runs each model on that sub-axis, or time-multiplexes
+    when the co-schedule says so).
+
+    Returns ``(MultiModelSchedule, {cfg.name: ShardPlan})``.
+    """
+    from ..multimodel import ModelSpec, co_schedule
+
+    names = [cfg.name for cfg in cfgs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate config names in co-schedule: {names}")
+    weights = weights or [1.0] * len(cfgs)
+    if len(weights) != len(cfgs):
+        raise ValueError(
+            f"{len(weights)} weights for {len(cfgs)} configs"
+        )
+    graphs = [lm_graph(cfg, seq_len, decode=False) for cfg in cfgs]
+    # LayerGraph names default to the arch name; keep them aligned to cfgs.
+    specs = [ModelSpec(g, w) for g, w in zip(graphs, weights)]
+    hw = tpu_v5e(model_axis, (1, model_axis))
+    cost = FastCostModel(hw, m_samples=max(2, global_batch),
+                         distributed_weights=True)
+    # Merged interleaving has no GSPMD execution path (one jitted fn serves
+    # one config), so the runtime bridge searches partitioned + time-mux.
+    mm = co_schedule(specs, hw, m_samples=max(2, global_batch), step=step,
+                     include_merged=False, cost=cost)
+    if mm is None:
+        return None, {}
+    plans: dict[str, ShardPlan] = {}
+    for cfg, graph, spec in zip(cfgs, graphs, specs):
+        a = mm.assignment(spec.name)
+        flat = a.schedule.layer_partition()
+        L = len(graph)
+        t_layers = next(
+            (i for i, (_, p, _) in enumerate(flat) if p != PARTITION_WSP), L
+        )
+        meta = {
+            "kind": "serve", "dse": True, "t_layers": t_layers,
+            "latency": a.schedule.latency,
+            "quota_chips": a.chips,
+            "co_mode": mm.mode,
+            "time_share": a.time_share,
+        }
+        plans[cfg.name] = _plan_from_transition(cfg, mesh_axes, t_layers, L, meta)
+    return mm, plans

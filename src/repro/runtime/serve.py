@@ -93,6 +93,44 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, plan: ShardPlan,
     return jitted, {"params": p_specs, "caches": k_specs}
 
 
+def build_multimodel_steps(
+    cfgs,
+    mesh: Mesh,
+    plans: dict[str, ShardPlan],
+    batch: int | None = None,
+    max_len: int | None = None,
+    with_decode: bool = True,
+):
+    """Per-model serving steps from a multimodel co-schedule.
+
+    ``plans`` comes from :func:`repro.runtime.planner.plan_for_multimodel`:
+    each plan's WSP->ISP transition and ``meta["quota_chips"]`` /
+    ``meta["time_share"]`` were chosen jointly by the co-scheduler.  Every
+    model gets its own jitted prefill (and decode) step on the *shared*
+    mesh, which executes a time-multiplexed co-schedule directly (dispatch
+    each model for its ``time_share``).  For ``co_mode == "partitioned"``
+    these steps are the bridge, not the destination: true concurrent
+    execution needs per-quota sub-meshes (jitting each model against a
+    ``quota_chips``-sized mesh slice), which is the serving-executor item
+    tracked in ROADMAP.md.
+
+    Returns ``{cfg.name: {"prefill": fn, "param_specs": specs,
+    "decode": fn, "cache_specs": specs, "plan": plan}}``.
+    """
+    fleet = {}
+    for cfg in cfgs:
+        plan = plans[cfg.name]
+        prefill, p_specs = build_prefill_step(cfg, mesh, plan)
+        entry = {"prefill": prefill, "param_specs": p_specs, "plan": plan}
+        if with_decode:
+            decode, specs = build_decode_step(cfg, mesh, plan,
+                                              batch=batch, max_len=max_len)
+            entry["decode"] = decode
+            entry["cache_specs"] = specs["caches"]
+        fleet[cfg.name] = entry
+    return fleet
+
+
 def greedy_generate(cfg, params, decode_fn, caches, prompt_last_token, start_pos, steps):
     """Simple batched greedy loop driving the jitted decode step."""
     B = prompt_last_token.shape[0]

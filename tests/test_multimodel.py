@@ -1,0 +1,364 @@
+"""Multi-model co-scheduling subsystem tests.
+
+* quota search vs brute-force enumeration over all chip splits (tiny cases,
+  homogeneous and heterogeneous packages);
+* hetero-region memo-key correctness: no cross-flavor cache hits, parity
+  with a reference model built on the flavor-scaled hardware;
+* MultiModelSchedule validation;
+* merged interleaving construction;
+* regions.rebalance(paper_strict=...) semantics;
+* 2D (k x layer) batched seed-phase fill parity.
+"""
+import math
+
+import pytest
+
+from repro.core.costmodel import INF, CostModel
+from repro.core.fastcost import FastCostModel
+from repro.core.graph import (
+    MM_PARTITIONED,
+    LayerNode,
+    ModelAssignment,
+    MultiModelSchedule,
+    chain,
+    validate_multimodel,
+)
+from repro.core.hw import ChipType, mcm_hetero, mcm_table_iii, validate_region_types
+from repro.core.regions import rebalance
+from repro.core.search import evaluate_segment, search, search_segment
+from repro.core.workloads import get_cnn
+from repro.multimodel import (
+    ModelSpec,
+    brute_force_partitioned,
+    co_schedule,
+    equal_split,
+    merged_graph,
+    parse_mix,
+    search_merged,
+    search_partitioned,
+    time_multiplexed,
+)
+from repro.multimodel.curves import throughput_curve
+from repro.multimodel.quota import package_flavors
+
+
+def tiny_graph(name: str, flops_scale: float = 1.0, L: int = 3):
+    layers = [
+        LayerNode(
+            name=f"l{i}", kind="conv", flops=flops_scale * (2.0 + i) * 1e8,
+            weight_bytes=48e3 * (1 + i % 2), in_bytes=32e3, out_bytes=24e3,
+            halo_bytes=512.0, wsp_parallel=28.0, isp_parallel=128.0,
+        )
+        for i in range(L)
+    ]
+    return chain(name, layers)
+
+
+def close(a, b, rtol=1e-9):
+    return a == b or abs(a - b) <= rtol * max(abs(a), abs(b))
+
+
+# ---------------------------------------------------------- quota parity
+
+class TestQuotaParity:
+    def test_tiny_homogeneous_matches_brute_force(self):
+        hw = mcm_table_iii(8)
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 3.0), 2.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        fast = search_partitioned(specs, cost)
+        lam_bf, assign_bf = brute_force_partitioned(specs, hw, m_samples=16)
+        assert fast is not None and lam_bf > 0
+        assert close(fast.mix_rate, lam_bf), (fast.mix_rate, lam_bf)
+
+    def test_tiny_heterogeneous_matches_brute_force(self):
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.4)
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 4.0), 1.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        fast = search_partitioned(specs, cost)
+        lam_bf, assign_bf = brute_force_partitioned(specs, hw, m_samples=16)
+        assert fast is not None and lam_bf > 0
+        assert close(fast.mix_rate, lam_bf), (fast.mix_rate, lam_bf)
+
+    def test_equal_split_is_dominated(self):
+        """Equal split is one of the enumerated quotas -> co >= equal."""
+        hw = mcm_table_iii(16)
+        specs = parse_mix("alexnet:1,resnet18:1")
+        cost = FastCostModel(hw, m_samples=16)
+        co = co_schedule(specs, hw, cost=cost)
+        eq = equal_split(specs, cost)
+        tm = time_multiplexed(specs, cost)
+        assert co.weighted_throughput >= eq.weighted_throughput - 1e-9
+        assert co.weighted_throughput >= tm.weighted_throughput - 1e-9
+
+    def test_envelope_handles_non_monotone_curves(self):
+        hw = mcm_table_iii(16)
+        cost = FastCostModel(hw, m_samples=16)
+        curve = throughput_curve(cost, get_cnn("alexnet"), 16)
+        env = curve.envelope(16)
+        assert env[0] is None
+        tps = [env[c].throughput for c in range(1, 17) if env[c]]
+        assert all(b >= a - 1e-12 for a, b in zip(tps, tps[1:]))
+        # envelope point never uses more chips than the quota
+        for c in range(1, 17):
+            if env[c]:
+                assert env[c].chips <= c
+
+
+# ------------------------------------------------------ hetero memo keys
+
+class TestHeteroMemo:
+    def test_no_cross_flavor_cache_hits(self):
+        """The same cluster evaluated under two flavors must be computed
+        twice (distinct memo cells) and give flavor-scaled results."""
+        hw = mcm_hetero(16, big_fraction=0.5, little_flops_scale=0.5)
+        g = get_cnn("alexnet")
+        fast = FastCostModel(hw, m_samples=16)
+        clustering = ((0, len(g)),)
+        partitions = tuple(["WSP"] * 2 + ["ISP"] * (len(g) - 2))
+        lat_big, _ = evaluate_segment(fast, g, 0, clustering, partitions, [8],
+                                      chip_type="big")
+        computes_after_big = fast.stats["cluster_computes"]
+        lat_little, _ = evaluate_segment(fast, g, 0, clustering, partitions,
+                                         [8], chip_type="little")
+        computes_after_little = fast.stats["cluster_computes"]
+        # little must NOT have been served from big's cache
+        assert computes_after_little > computes_after_big
+        assert lat_big < lat_little  # little has half the FLOPs/chip
+        # re-evaluating either flavor is now a pure cache hit
+        lat_big2, _ = evaluate_segment(fast, g, 0, clustering, partitions, [8],
+                                       chip_type="big")
+        assert lat_big2 == lat_big
+        assert fast.stats["cluster_computes"] == computes_after_little
+
+    @pytest.mark.parametrize("flavor", ["big", "little"])
+    def test_flavor_parity_with_scaled_reference(self, flavor):
+        """Evaluating on a flavor == reference model on the scaled hardware."""
+        hw = mcm_hetero(16, big_fraction=0.5,
+                        little_flops_scale=0.4, little_nop_scale=0.6)
+        g = get_cnn("alexnet")
+        fast = FastCostModel(hw, m_samples=16)
+        ref = CostModel(hw.typed(flavor), m_samples=16)
+        L = len(g)
+        for t in (0, 2, L):
+            partitions = tuple(["WSP"] * t + ["ISP"] * (L - t))
+            for regions in ([8], [3, 5]):
+                clustering = (
+                    ((0, L),) if len(regions) == 1 else ((0, 2), (2, L))
+                )
+                lf, _ = evaluate_segment(fast, g, 0, clustering, partitions,
+                                         regions, chip_type=flavor)
+                lr, _ = evaluate_segment(ref, g, 0, clustering, partitions,
+                                         regions)
+                assert close(lf, lr), (flavor, t, regions, lf, lr)
+
+    def test_search_prefers_big_flavor(self):
+        hw = mcm_hetero(32, big_fraction=0.5, little_flops_scale=0.25)
+        cost = FastCostModel(hw, m_samples=16)
+        g = get_cnn("resnet18")
+        sb = search(g, cost, 16, chip_type="big")
+        sl = search(g, cost, 16, chip_type="little")
+        assert sb.latency < sl.latency
+
+    def test_validate_region_types(self):
+        bad = mcm_table_iii(16)
+        bad = bad.__class__(**{**bad.__dict__,
+                               "region_types": (ChipType("big", 9),
+                                                ChipType("little", 9))})
+        with pytest.raises(AssertionError):
+            validate_region_types(bad)
+
+
+# ----------------------------------------------------------- validation
+
+class TestMultiModelScheduleValidation:
+    def _co(self, mix="alexnet:1,resnet18:1", chips=16):
+        hw = mcm_table_iii(chips)
+        specs = parse_mix(mix)
+        co = co_schedule(specs, hw)   # validates internally
+        return co, specs, hw
+
+    def test_co_schedule_validates(self):
+        co, specs, hw = self._co()
+        assert co.mode in ("partitioned", "merged", "time_mux")
+        assert co.weighted_throughput > 0
+        assert math.isclose(
+            co.weighted_throughput,
+            co.mix_rate * sum(s.weight for s in specs),
+        )
+
+    def test_overallocated_partition_rejected(self):
+        co, specs, hw = self._co()
+        part = search_partitioned(
+            specs, FastCostModel(hw, m_samples=16)
+        )
+        # double one quota so the per-type chips sum overflows the package
+        a0 = part.assignments[0]
+        bloated = MultiModelSchedule(
+            package=part.package, chips=part.chips, mode=MM_PARTITIONED,
+            assignments=(
+                ModelAssignment(
+                    model=a0.model, weight=a0.weight,
+                    chips=hw.chips + 1,
+                    schedule=a0.schedule, chip_type=a0.chip_type,
+                ),
+            ) + part.assignments[1:],
+            mix_rate=part.mix_rate,
+            weighted_throughput=part.weighted_throughput,
+        )
+        graphs = {s.name: s.graph for s in specs}
+        with pytest.raises(AssertionError):
+            validate_multimodel(bloated, graphs, {None: hw.chips})
+
+    def test_inconsistent_mix_rate_rejected(self):
+        co, specs, hw = self._co()
+        wrong = MultiModelSchedule(
+            package=co.package, chips=co.chips, mode=co.mode,
+            assignments=co.assignments,
+            mix_rate=co.mix_rate * 2.0,
+            weighted_throughput=co.weighted_throughput,
+        )
+        graphs = {s.name: s.graph for s in specs}
+        mg, _ = merged_graph(specs)
+        graphs[mg.name] = mg
+        with pytest.raises(AssertionError):
+            validate_multimodel(wrong, graphs, {None: hw.chips})
+
+
+# ------------------------------------------------------------ interleave
+
+class TestMergedInterleave:
+    def test_merged_graph_concatenates_and_scales(self):
+        specs = [
+            ModelSpec(tiny_graph("a"), 1.0),
+            ModelSpec(tiny_graph("b"), 2.0),
+        ]
+        mg, scales = merged_graph(specs)
+        assert scales == [1, 2]
+        assert len(mg) == 6
+        # model b's layers carry 2 samples per beat
+        assert mg.layers[3].flops == 2 * specs[1].graph.layers[0].flops
+        # model-final layers: outputs leave via DRAM, no NoP hand-off
+        assert mg.layers[2].out_bytes == 0.0 and mg.layers[2].halo_bytes == 0.0
+        assert mg.layers[5].out_bytes == 0.0
+        # model-initial layers past the first are DRAM-staged entry points,
+        # charged by the segment load term wherever the boundary lands
+        assert mg.layers[3].meta.get("dram_input") is True
+        assert "dram_input" not in mg.layers[0].meta
+
+    def test_boundary_staging_charged_and_engines_agree(self):
+        """The mid-segment model boundary's DRAM staging is charged under
+        every partition pair (incl. WSP->WSP, which has no NoP volume), and
+        both engines agree on flagged graphs."""
+        from dataclasses import replace as _rep
+
+        specs = [ModelSpec(tiny_graph("a")), ModelSpec(tiny_graph("b"))]
+        mg, _ = merged_graph(specs)
+        hw = mcm_table_iii(8)
+        ref = CostModel(hw, m_samples=16)
+        fast = FastCostModel(hw, m_samples=16)
+        clustering = ((0, len(mg)),)
+        for partitions in (("WSP",) * len(mg), ("ISP",) * len(mg)):
+            lr, _ = evaluate_segment(ref, mg, 0, clustering, partitions, [8])
+            lf, _ = evaluate_segment(fast, mg, 0, clustering, partitions, [8])
+            assert lr == lf, (partitions, lr, lf)
+            stripped = chain(
+                mg.name + "_noflag",
+                tuple(_rep(n, meta={}) for n in mg.layers),
+            )
+            l0, _ = evaluate_segment(ref, stripped, 0, clustering,
+                                     partitions, [8])
+            expect = ref.m * mg.layers[3].in_bytes / hw.dram_bw_total
+            assert close(lr - l0, expect), (lr - l0, expect)
+
+    def test_search_merged_feasible_and_consistent(self):
+        hw = mcm_table_iii(16)
+        specs = parse_mix("alexnet:1,resnet18:1")
+        cost = FastCostModel(hw, m_samples=16)
+        mm = search_merged(specs, cost)
+        assert mm is not None
+        assert mm.mode == "merged"
+        # both models share the one merged schedule
+        assert mm.assignments[0].schedule is mm.assignments[1].schedule
+        lam = min(a.throughput / a.weight for a in mm.assignments)
+        assert math.isclose(lam, mm.mix_rate)
+
+
+# ---------------------------------------------------------- paper_strict
+
+class TestPaperStrict:
+    def test_inf_seed_not_repaired(self):
+        calls = []
+
+        def eval_fn(alloc):
+            calls.append(tuple(alloc))
+            # region 0 infeasible below 3 chips
+            if alloc[0] < 3:
+                return INF, [INF, 1.0]
+            return 1.0 / alloc[0], [1.0 / alloc[0], 1.0 / alloc[1]]
+
+        alloc, lat, _ = rebalance([1, 7], eval_fn, paper_strict=True)
+        assert lat == INF and alloc == [1, 7] and len(calls) == 1
+
+        alloc, lat, _ = rebalance([1, 7], eval_fn)   # default repairs
+        assert lat < INF and alloc[0] >= 3
+
+    def test_single_donor_only(self):
+        """A tied fastest donor terminates strict rebalance; the default
+        retries the next-fastest donor and finds the improvement."""
+        def eval_fn(alloc):
+            a, b, c = alloc
+            # slowest is region 2; donating from region 0 (fastest) ties,
+            # donating from region 1 improves.
+            times = [0.1 - 0.001 * a, 0.3 - 0.01 * b, 1.0 / c]
+            return max(times), times
+
+        strict = rebalance([4, 4, 4], eval_fn, paper_strict=True)
+        loose = rebalance([4, 4, 4], eval_fn)
+        assert loose[1] <= strict[1]
+
+    def test_search_segment_strict_never_better(self):
+        g = get_cnn("alexnet")
+        cost = FastCostModel(mcm_table_iii(16), m_samples=16)
+        loose = search_segment(cost, g, 0, len(g), 16)
+        strict = search_segment(cost, g, 0, len(g), 16, paper_strict=True)
+        assert strict.latency >= loose.latency - 1e-12
+
+
+# ------------------------------------------------------ batched seed fill
+
+class TestBatchedSeedFill:
+    @pytest.mark.parametrize("net,chips", [("resnet18", 32), ("resnet50", 64)])
+    def test_search_identical_with_and_without(self, net, chips):
+        g = get_cnn(net)
+        on = FastCostModel(mcm_table_iii(chips), m_samples=16)
+        off = FastCostModel(mcm_table_iii(chips), m_samples=16)
+        off.batched_seed_fill = False
+        s_on = search(g, on, chips)
+        s_off = search(g, off, chips)
+        assert s_on.latency == s_off.latency          # bit-identical
+        assert [seg.clusters for seg in s_on.segments] == [
+            seg.clusters for seg in s_off.segments
+        ]
+        assert on.stats["batched_bodies"] > 0
+        assert off.stats["batched_bodies"] == 0
+
+    def test_batch_fill_bodies_match_lazy(self):
+        from repro.core.fastcost import _BODY, _STATIC
+        g = get_cnn("resnet50")
+        L = len(g)
+        fast = FastCostModel(mcm_table_iii(64), m_samples=16)
+        gd = fast.graph_data(g)
+        fast._batch_seed_fill(gd, 0, L, 33)
+        lazy = FastCostModel(mcm_table_iii(64), m_samples=16)
+        gdl = lazy.graph_data(g)
+        for k in range(L + 1):
+            cell_b = fast._cluster_cell_hint(gd, 0, L, k, False, None)
+            cell_l = lazy._cluster_cell_hint(gdl, 0, L, k, False, None)
+            body_l = lazy._cluster_body(cell_l[_STATIC], 33)
+            assert cell_b[_BODY][33] == body_l, k
