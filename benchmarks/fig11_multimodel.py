@@ -6,14 +6,19 @@ against the two static baselines: equal chip split and whole-package time
 multiplexing.  The co-scheduler searches a superset of both baseline
 families, so it must be >= each of them on every mix -- asserted here.
 
-The last mix runs on a heterogeneous big/little package (the hetero-chiplet
-extension): quotas are drawn per chip flavor and the engine memo keeps the
-flavors' cluster costs apart.
+The last mixes run on a heterogeneous big/little package (the hetero-chiplet
+extension): quotas are drawn per chip flavor, the engine memo keeps the
+flavors' cluster costs apart, and quotas may *span* flavors (mixed-flavor
+pipelines: ``partitioned:mixed`` in the mode rates).  On hetero rows the
+mixed-enabled co-schedule must be >= the single-flavor partitioned family,
+and every spanning assignment's schedule is re-evaluated on the reference
+CostModel to assert fast/reference parity on mixed-flavor candidates.
 """
 from __future__ import annotations
 
 import time
 
+from repro.core.costmodel import CostModel
 from repro.core.fastcost import FastCostModel
 from repro.core.hw import get_hw
 from repro.multimodel import (
@@ -26,12 +31,15 @@ from repro.multimodel import (
 from .common import M_SAMPLES, cached
 
 # (mix, hardware preset); the first three are the acceptance mixes, the
-# fourth exercises the heterogeneous package.
+# last two exercise the heterogeneous package (the final one is the
+# big/little mix where spanning quotas must win strictly: resnet50 carries
+# most of the traffic, so giving it one whole flavor is not enough).
 MIXES = [
     ("resnet50:1,alexnet:1", "mcm16"),
     ("resnet152:1,resnet18:1", "mcm64"),
     ("resnet50:2,resnet18:1,alexnet:1", "mcm64"),
     ("resnet50:1,resnet18:1", "mcm64_hetero"),
+    ("resnet50:4,resnet18:1", "mcm64_hetero"),
 ]
 
 
@@ -63,6 +71,7 @@ def run_mix(mix: str, hw_name: str) -> dict:
         "co_assignments": [
             {
                 "model": a.model, "chips": a.chips, "chip_type": a.chip_type,
+                "chip_quota": [[t, c] for t, c in a.chip_quota],
                 "throughput": a.throughput, "time_share": a.time_share,
                 "samples_per_beat": a.samples_per_beat,
             }
@@ -71,6 +80,31 @@ def run_mix(mix: str, hw_name: str) -> dict:
         "mode_rates": co.meta["mode_rates"],
         "engine_stats": co.meta["engine_stats"],
     }
+    if hw.region_types:
+        # Hetero rows: the mixed-enabled search must not lose to the
+        # single-flavor quota family it strictly generalizes...
+        single = co.meta["mode_rates"].get("partitioned", 0.0)
+        assert co.weighted_throughput >= single - 1e-9, (mix, hw_name)
+        row["single_flavor_partitioned_throughput"] = single
+        row["mixed_wins"] = (
+            co.meta["mode_rates"].get("partitioned:mixed", 0.0) > single
+        )
+        # ...and spanning schedules must evaluate identically on the
+        # reference model (fast/reference parity on mixed candidates).
+        ref = CostModel(hw, m_samples=M_SAMPLES)
+        for a in co.assignments:
+            if not a.chip_quota:
+                continue
+            graph = next(s.graph for s in specs if s.name == a.model)
+            lat = sum(
+                ref.segment_time(graph, seg.clusters)[0]
+                for seg in a.schedule.segments
+            )
+            assert abs(lat - a.schedule.latency) <= 1e-9 * lat, (
+                "mixed-flavor parity violated", a.model, lat,
+                a.schedule.latency,
+            )
+            row["mixed_parity_checked"] = True
     eq = equal_split(specs, cost)
     row["equal_split_weighted_throughput"] = (
         eq.weighted_throughput if eq else 0.0

@@ -39,6 +39,10 @@ from .common import M_SAMPLES, cached
 CASES = [("alexnet", 16), ("resnet50", 64), ("resnet152", 256)]
 # New larger sweep enabled by the fast engine (reference/seed too slow).
 LARGE_CASES = [("resnet152", 512)]
+# Quota-curve sampling (multimodel/curves.py): exhaustive step=1 sweep vs
+# the coarse-to-fine schedule (coarse grid + step-1 refinement around the
+# argmax) on large packages -- the ROADMAP's ~10x curve-time item.
+CURVE_CASES = [("resnet18", 256, 16), ("resnet18", 512, 16)]
 # Measured on the seed commit (d44433a) with the same driver and machine
 # class; see CHANGES.md.  Kept as constants so speedup-vs-seed survives the
 # seed implementation no longer being in the tree.
@@ -121,12 +125,39 @@ def run(refresh: bool = False):
                 "seed_search_s": None,
                 "note": "new sweep unlocked by the fast engine",
             })
+        for net, chips, step in CURVE_CASES:
+            from repro.multimodel.curves import throughput_curve
+
+            g = get_cnn(net)
+            cost = FastCostModel(mcm_table_iii(chips), m_samples=M_SAMPLES)
+            t0 = time.time()
+            exact = throughput_curve(cost, g, chips, step=1)
+            exact_s = time.time() - t0
+            cost = FastCostModel(mcm_table_iii(chips), m_samples=M_SAMPLES)
+            t0 = time.time()
+            refined = throughput_curve(cost, g, chips, step=step, refine=True)
+            refined_s = time.time() - t0
+            peak = lambda c: max(p.throughput for p in c.points.values())
+            rows.append({
+                "net": net, "chips": chips, "layers": len(g),
+                "curve_step": step,
+                "curve_exhaustive_s": exact_s,
+                "curve_exhaustive_points": len(exact.points),
+                "curve_refined_s": refined_s,
+                "curve_refined_points": len(refined.points),
+                "curve_speedup": exact_s / refined_s,
+                "curve_peak_match": peak(exact) == peak(refined),
+                "note": "quota-curve sampling: exhaustive vs coarse-to-fine",
+            })
         return rows
 
     rows = cached("search_time", _go, refresh)
-    if rows and "no_batched_fill_search_s" not in rows[0]:
+    if rows and (
+        "no_batched_fill_search_s" not in rows[0]
+        or not any("curve_speedup" in r for r in rows)
+    ):
         # Stale cache from an older schema (pre-fastcost "search_s"-only
-        # rows, or pre-batched-fill rows): redo.
+        # rows, pre-batched-fill rows, or pre-curve rows): redo.
         rows = cached("search_time", _go, refresh=True)
     with open(ROOT_BENCH, "w") as f:
         json.dump(rows, f, indent=1)
@@ -136,6 +167,8 @@ def run(refresh: bool = False):
 def report(rows) -> list[str]:
     lines = ["net,chips,layers,log10_space,fast_s,ref_s,seed_s,speedup_vs_seed,engine_speedup"]
     for r in rows:
+        if "curve_speedup" in r:
+            continue
         lines.append(
             f"{r['net']},{r['chips']},{r['layers']},"
             f"{r['log10_Q_total']:.0f},{r['fast_search_s']:.3f},"
@@ -143,6 +176,16 @@ def report(rows) -> list[str]:
             f"{r.get('seed_search_s') or float('nan')},"
             f"{r.get('speedup_vs_seed', float('nan')):.1f},"
             f"{r.get('engine_speedup', float('nan')):.1f}"
+        )
+    for r in rows:
+        if "curve_speedup" not in r:
+            continue
+        lines.append(
+            f"# curve {r['net']}x{r['chips']}: exhaustive "
+            f"{r['curve_exhaustive_s']:.2f}s ({r['curve_exhaustive_points']} pts) "
+            f"vs coarse-to-fine {r['curve_refined_s']:.2f}s "
+            f"({r['curve_refined_points']} pts), {r['curve_speedup']:.1f}x, "
+            f"peak match {r['curve_peak_match']}"
         )
     lines.append("# paper: resnet152x256 space O(10^164), search ~1h on i7")
     lines.append("# seed_s measured on the seed commit; the current search "

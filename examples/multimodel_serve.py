@@ -2,10 +2,18 @@
 
 Schedules a 3-model mix (weighted traffic) onto a 64-chiplet package with
 the co-scheduler, compares it against the two static baselines, then shows
-the same subsystem on a heterogeneous big/little package.
+the same subsystem on a heterogeneous big/little package -- including
+mixed-flavor quotas, where one model's pipeline spans both flavors -- and
+finally drives a mixed-flavor plan end to end through the runtime bridge
+(``plan_for_multimodel`` -> ``build_multimodel_steps``) on a host-device
+mesh.
 
     PYTHONPATH=src python examples/multimodel_serve.py
 """
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 from repro.core.fastcost import FastCostModel
 from repro.core.hw import mcm_hetero, mcm_table_iii
 from repro.multimodel import (
@@ -37,10 +45,62 @@ for name, fn in (("equal_split", equal_split), ("time_mux", time_multiplexed)):
           f"({co.weighted_throughput / b.weighted_throughput:.2f}x behind)")
 
 # --- heterogeneous package: quotas are drawn per chip flavor -------------
+# Mixed-flavor quotas are searched too: a model's pipeline may start on big
+# chips and finish on little ones, crossing the flavor seam
+# (hw.seam_link_bw) exactly once -- look for `quota=AxBig+BxLittle` below.
 hw2 = mcm_hetero(64)    # 32 big + 32 little (half the FLOPs, 3/4 the NoP)
-specs2 = parse_mix("resnet50:1,resnet18:1")
-print(f"\nmix resnet50:1,resnet18:1 on {hw2.name} "
+specs2 = parse_mix("resnet50:4,resnet18:1")
+print(f"\nmix resnet50:4,resnet18:1 on {hw2.name} "
       f"({', '.join(f'{t.chips}x{t.name}' for t in hw2.region_types)})")
 co2 = co_schedule(specs2, hw2)
 for line in describe(co2):
     print(line)
+print(f"  modes searched: { {k: round(v) for k, v in co2.meta['mode_rates'].items()} }")
+
+# --- runtime bridge: a mixed-flavor plan end to end ----------------------
+# Co-schedule two tiny LM configs onto a heterogeneous 8-chip model axis,
+# then build their jitted serving steps on a shared host-device mesh.  Each
+# plan records which chip flavor serves which pipeline stage
+# (plan.stage_chip_types); a mixed-flavor assignment itemizes its
+# per-flavor chips in meta["chip_quota"].
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.hw import ChipType, tpu_v5e
+from repro.launch.mesh import make_mesh
+from repro.models import init_params
+from repro.runtime.planner import plan_for_multimodel
+from repro.runtime.serve import build_multimodel_steps
+
+MODEL_AXIS = 8
+hw3 = replace(
+    tpu_v5e(MODEL_AXIS, (1, MODEL_AXIS)),
+    name=f"tpu_v5e_{MODEL_AXIS}_hetero",
+    region_types=(
+        ChipType("big", 4),
+        ChipType("little", 4, flops_scale=0.5, nop_bw_scale=0.75),
+    ),
+)
+cfgs = [get_smoke_config("granite-3-8b"), get_smoke_config("granite-20b")]
+mm, plans = plan_for_multimodel(
+    cfgs, seq_len=64, global_batch=8, mesh_axes=("data", "model"),
+    model_axis=MODEL_AXIS, weights=[2.0, 1.0], hw=hw3,
+)
+print(f"\nruntime bridge on {hw3.name} (4xbig + 4xlittle):")
+for line in describe(mm):
+    print(line)
+for name, plan in plans.items():
+    print(f"  {name}: p1={plan.p1} p2={plan.p2} "
+          f"stages={[(lo, hi, t, c) for lo, hi, t, c in plan.stage_chip_types]}")
+
+mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+fleet = build_multimodel_steps(cfgs, mesh, plans, with_decode=False)
+for cfg in cfgs:
+    prefill = fleet[cfg.name]["prefill"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.ones((2, 16), jnp.int32)
+    logits = prefill(params, toks)
+    print(f"  {cfg.name}: prefill logits {logits.shape} on {mesh.shape}")

@@ -67,6 +67,47 @@ assert s64["segment_evals"] > 3 * s64["cluster_computes"], s64
 assert dt64 <= budget64, f"x64 multi-model DSE: {dt64:.2f}s > {budget64:.0f}s"
 PY
 
+  echo "== mixed-flavor DSE smoke budget =="
+  python - <<'PY'
+import os
+import time
+
+from repro.core.costmodel import CostModel
+from repro.core.fastcost import FastCostModel
+from repro.core.hw import mcm_hetero
+from repro.core.search import search, search_mixed
+from repro.core.workloads import get_cnn
+
+budget = float(os.environ.get("CI_MIXED_BUDGET_S", "30"))
+g = get_cnn("resnet50")
+hw = mcm_hetero(64)
+cost = FastCostModel(hw, m_samples=16)
+t0 = time.time()
+singles = {
+    t.name: search(g, cost, t.chips, chip_type=t.name)
+    for t in hw.region_types
+}
+mixed = search_mixed(g, cost)
+dt = time.time() - t0
+assert mixed is not None and mixed.latency < float("inf"), "mixed DSE infeasible"
+finite = [s.latency for s in singles.values() if s is not None]
+assert finite, "both single-flavor searches infeasible"
+best_single = min(finite)
+flavors = sorted({cl.chip_type for seg in mixed.segments for cl in seg.clusters})
+print(f"resnet50 x {hw.name} mixed DSE: {dt:.2f}s (budget {budget:.0f}s), "
+      f"mixed latency {mixed.latency:.6g} vs best single-flavor "
+      f"{best_single:.6g} ({best_single / mixed.latency:.2f}x), "
+      f"flavors used {flavors}, stats {cost.stats}")
+# the per-cluster flavor dimension strictly generalizes single-flavor search
+assert mixed.latency <= best_single + 1e-12, "mixed lost to single-flavor"
+# fast/reference parity on the mixed-flavor winner
+ref = CostModel(hw, m_samples=16)
+ref_lat = sum(ref.segment_time(g, seg.clusters)[0] for seg in mixed.segments)
+assert abs(ref_lat - mixed.latency) <= 1e-9 * ref_lat, (
+    f"mixed-flavor parity violated: ref {ref_lat} vs fast {mixed.latency}")
+assert dt <= budget, f"mixed DSE regression: {dt:.2f}s > {budget:.0f}s"
+PY
+
   echo "== DSE search-time smoke budget =="
   python - <<'PY'
 import os

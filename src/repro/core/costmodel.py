@@ -41,6 +41,29 @@ from .hw import HardwareModel, eff
 
 INF = float("inf")
 
+# Sentinel for ``next_chip_type``: "the consuming cluster has the same flavor
+# as the producer" -- the homogeneous-pipeline default, which keeps every
+# pre-mixed-flavor call site's behavior (and results) unchanged.  ``None`` is
+# a real flavor (the package's base type), so it cannot double as the default.
+SAME_FLAVOR = "<same>"
+
+
+def _flavor_tuple(chip_type, n_clusters: int) -> tuple:
+    """Normalize a schedule-level or per-cluster flavor argument.
+
+    ``chip_type`` may be ``None``/a flavor name (every cluster on that
+    flavor, the pre-mixed-flavor calling convention) or a sequence of
+    per-cluster flavors (mixed pipelines).
+    """
+    if chip_type is None or isinstance(chip_type, str):
+        return (chip_type,) * n_clusters
+    types = tuple(chip_type)
+    if len(types) != n_clusters:
+        raise ValueError(
+            f"{len(types)} chip types for {n_clusters} clusters"
+        )
+    return types
+
 
 @dataclass(frozen=True)
 class LayerTime:
@@ -81,6 +104,7 @@ class CostModel:
         self.distributed_weights = distributed_weights
         self.literal_pre = literal_pre
         self._typed_hw: dict[str | None, HardwareModel] = {}
+        self._seam_bw: dict[tuple[str | None, str | None], float] = {}
 
     def hw_for(self, chip_type: str | None) -> HardwareModel:
         """The hardware a region of ``chip_type`` chips sees (hetero packages;
@@ -91,6 +115,13 @@ class CostModel:
         if hw is None:
             hw = self._typed_hw[chip_type] = self.hw.typed(chip_type)
         return hw
+
+    def seam_bw(self, a: str | None, b: str | None) -> float:
+        """Cached :meth:`HardwareModel.seam_link_bw` for a flavor pair."""
+        bw = self._seam_bw.get((a, b))
+        if bw is None:
+            bw = self._seam_bw[(a, b)] = self.hw.seam_link_bw(a, b)
+        return bw
 
     # ------------------------------------------------------------------ utils
     def _util(self, layer: LayerNode, p: str, n: int,
@@ -156,20 +187,26 @@ class CostModel:
         next_n: int | None,
         same_region: bool,
         chip_type: str | None = None,
+        next_chip_type: str | None = SAME_FLAVOR,
     ) -> float:
         vol = self.comm_volume(layer, p, n, next_p, next_n, same_region)
         if vol <= 0:
             return 0.0
-        # The producing region's flavor bounds both its injection bandwidth
-        # and the boundary links it drives.
+        # The producing region's flavor bounds its injection bandwidth; the
+        # boundary links are shared with the consuming region, so a flavor
+        # seam runs at the weaker flavor's link rate (hw.seam_link_bw).
         hw = self.hw_for(chip_type)
         if same_region:
             # Collectives inside the region: aggregate injection bandwidth.
             return vol / (n * hw.nop_bw_per_chip)
         # Region boundary: limited by the links crossing the ZigZag seam
         # (stand-in for the paper's BookSim regression, see DESIGN.md SS3).
+        if next_chip_type is SAME_FLAVOR or next_chip_type == chip_type:
+            link_bw = hw.link_bw
+        else:
+            link_bw = self.seam_bw(chip_type, next_chip_type)
         links = max(1, round(math.sqrt(min(n, next_n or n))))
-        boundary = vol / (links * hw.link_bw)
+        boundary = vol / (links * link_bw)
         injection = vol / (n * hw.nop_bw_per_chip)
         return max(boundary, injection)
 
@@ -229,12 +266,14 @@ class CostModel:
         gather_bytes: float = 0.0,
         extra_pre: float = 0.0,
         chip_type: str | None = None,
+        next_chip_type: str | None = SAME_FLAVOR,
     ) -> LayerTime:
         pre = extra_pre
         if gather_bytes > 0:
             pre += gather_bytes / self.hw_for(chip_type).nop_bw_per_chip
         comp = self.comp_time(layer, p, n, chip_type)
-        comm = self.comm_time(layer, p, n, next_p, next_n, same_region, chip_type)
+        comm = self.comm_time(layer, p, n, next_p, next_n, same_region,
+                              chip_type, next_chip_type)
         return LayerTime(pre=pre, comp=comp, comm=comm)
 
     # -------------------------------------------------------------- clusters
@@ -255,10 +294,12 @@ class CostModel:
         total = 0.0
         for k, (layer, p) in enumerate(zip(layers, cluster.partitions)):
             last_layer = k == len(layers) - 1
+            nxt_t = SAME_FLAVOR
             if not last_layer:
                 nxt_p, nxt_n, same = cluster.partitions[k + 1], n, True
             elif next_cluster is not None:
                 nxt_p, nxt_n, same = next_cluster.partitions[0], next_cluster.region_chips, False
+                nxt_t = next_cluster.chip_type
             else:
                 nxt_p, nxt_n, same = None, None, False
             extra_pre = 0.0
@@ -269,6 +310,7 @@ class CostModel:
                 gather_bytes=placement.gather_bytes[k],
                 extra_pre=extra_pre,
                 chip_type=cluster.chip_type,
+                next_chip_type=nxt_t,
             )
             total += t.total if self.overlap else t.unoverlapped
         return total
@@ -323,8 +365,10 @@ class CostModel:
 
         ``transition`` is an optional Algorithm 1 sweep hint (ignored here;
         see :meth:`repro.core.fastcost.FastCostModel.segment_evaluator`).
-        ``chip_type`` evaluates the segment on that flavor of a heterogeneous
-        package.
+        ``chip_type`` evaluates the segment on a heterogeneous package: one
+        flavor name runs every cluster on that flavor, a per-cluster
+        sequence evaluates a mixed-flavor pipeline (boundary comm between
+        differently-flavored neighbors is charged through the seam model).
 
         The DSE (search.py) funnels every candidate region allocation of a
         fixed (clustering, partitions) choice through this closure.  The
@@ -332,6 +376,8 @@ class CostModel:
         every cluster from scratch; :class:`repro.core.fastcost.FastCostModel`
         overrides it with a vectorized, memoized evaluator.
         """
+        types = _flavor_tuple(chip_type, len(clustering))
+
         def eval_fn(alloc):
             clusters = tuple(
                 ClusterAssignment(
@@ -339,9 +385,9 @@ class CostModel:
                     layer_hi=seg_lo + hi,
                     region_chips=chips,
                     partitions=partitions[lo:hi],
-                    chip_type=chip_type,
+                    chip_type=ctype,
                 )
-                for (lo, hi), chips in zip(clustering, alloc)
+                for (lo, hi), chips, ctype in zip(clustering, alloc, types)
             )
             return self.segment_time(graph, clusters)
 

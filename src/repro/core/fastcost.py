@@ -24,15 +24,17 @@ chip between two regions while every other region is untouched.
 2. **Cross-candidate memoization.**  The steady-state beat time of a cluster
    (Eq. 3 body) depends only on
 
-   ``(graph, layer_lo, layer_hi, partitions, region_chips,
-      next_first_partition, next_chips)``
+   ``(graph, layer_lo, layer_hi, partitions, region_chips, chip_type,
+      next_first_partition, next_chips, next_chip_type)``
 
    which is exactly the memo key.  Why this is sound: every term of the
    reference ``cluster_time`` reads only (a) the layer records in
    ``[layer_lo, layer_hi)`` -- fixed by the graph and the bounds, (b) the
-   per-layer partition choices and the region size ``n`` -- in the key, and
-   (c) for the *last* layer's Table II Case 2 hand-off, the next cluster's
-   first-layer partition and region size -- also in the key.  Nothing else
+   per-layer partition choices, the region size ``n`` and the region's chip
+   flavor -- in the key, and (c) for the *last* layer's Table II Case 2
+   hand-off, the next cluster's first-layer partition, region size and chip
+   flavor (the hand-off crosses the flavor seam, whose bandwidth depends on
+   both endpoints' flavors) -- also in the key.  Nothing else
    (segment membership, position within the segment, the allocation of other
    regions) enters the formula, so two candidates that agree on the key have
    equal cluster cost by construction.  The memo is shared across the
@@ -56,7 +58,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .costmodel import INF, CostModel
+from .costmodel import INF, SAME_FLAVOR, CostModel, _flavor_tuple
 from .graph import ClusterAssignment, LayerGraph
 from .hw import eff
 
@@ -306,15 +308,17 @@ class FastCostModel(CostModel):
     def _cluster_cost(self, st: _ClusterStatic, n: int,
                       next_p0: str | None, next_n: int | None,
                       body_cache: dict | None = None,
-                      ctype: str | None = None) -> float:
+                      ctype: str | None = None,
+                      next_ctype: str | None = SAME_FLAVOR) -> float:
         """Vectorized reference ``cluster_time`` for one memoized static.
 
         The last layer's Table II Case 2 boundary term is the only part that
-        depends on the *next* cluster, so the expensive array work -- the
-        ``body`` -- is keyed by ``n`` alone in ``body_cache`` and the final
-        assembly is three scalar operations.  During rebalance, a donor's
-        left neighbor changes only ``next_n``: its re-evaluation is a body
-        cache hit plus scalar math, no NumPy at all.
+        depends on the *next* cluster (its first partition, region size, and
+        -- across a flavor seam -- its chip flavor), so the expensive array
+        work -- the ``body`` -- is keyed by ``n`` alone in ``body_cache``
+        and the final assembly is three scalar operations.  During
+        rebalance, a donor's left neighbor changes only ``next_n``: its
+        re-evaluation is a body cache hit plus scalar math, no NumPy at all.
         """
         body = body_cache.get(n) if body_cache is not None else None
         if body is None:
@@ -325,7 +329,8 @@ class FastCostModel(CostModel):
             return INF
         head, pre_last, comp_last = body
         comm_last = self.comm_time(
-            st.last_layer, st.last_p, n, next_p0, next_n, False, ctype
+            st.last_layer, st.last_p, n, next_p0, next_n, False, ctype,
+            next_ctype,
         )
         if self.overlap:
             t_last = pre_last + (comm_last if comm_last >= comp_last else comp_last)
@@ -606,14 +611,19 @@ class FastCostModel(CostModel):
         next_p0: str | None,
         next_n: int | None,
         ctype: str | None = None,
+        next_ctype: str | None = None,
     ) -> float:
         cell = self._cluster_cell(gd, lo, hi, partitions, ctype)
-        k = (n, next_p0, next_n)
+        # The entry key carries the *neighbor's* flavor too: the last
+        # layer's boundary term crosses the seam, so a cached time is only
+        # valid against a next cluster of the same flavor.
+        k = (n, next_p0, next_n, next_ctype)
         t = cell.get(k)
         if t is None:
             self._misses += 1
             t = cell[k] = self._cluster_cost(
-                cell[_STATIC], n, next_p0, next_n, cell[_BODY], ctype
+                cell[_STATIC], n, next_p0, next_n, cell[_BODY], ctype,
+                next_ctype,
             )
         return t
 
@@ -628,6 +638,7 @@ class FastCostModel(CostModel):
     ) -> float:
         next_p0 = next_cluster.partitions[0] if next_cluster is not None else None
         next_n = next_cluster.region_chips if next_cluster is not None else None
+        next_ct = next_cluster.chip_type if next_cluster is not None else None
         return self._cluster_time_fast(
             self.graph_data(graph),
             cluster.layer_lo,
@@ -637,6 +648,7 @@ class FastCostModel(CostModel):
             next_p0,
             next_n,
             cluster.chip_type,
+            next_ct,
         )
 
     def segment_time(
@@ -648,10 +660,11 @@ class FastCostModel(CostModel):
             nxt = clusters[j + 1] if j + 1 < len(clusters) else None
             next_p0 = nxt.partitions[0] if nxt is not None else None
             next_n = nxt.region_chips if nxt is not None else None
+            next_ct = nxt.chip_type if nxt is not None else None
             times.append(
                 self._cluster_time_fast(
                     gd, cl.layer_lo, cl.layer_hi, cl.partitions,
-                    cl.region_chips, next_p0, next_n, cl.chip_type,
+                    cl.region_chips, next_p0, next_n, cl.chip_type, next_ct,
                 )
             )
         bottleneck = max(times)
@@ -689,6 +702,8 @@ class FastCostModel(CostModel):
         only touches the single cluster whose partition slice changed.
         ``sweeper.prefill(seed)`` batch-fills the seed-phase bodies (2D
         ``k x layer`` vectorization) for every transition slice at once.
+        ``chip_type`` is one flavor name (whole segment) or a per-cluster
+        flavor sequence (mixed pipeline, seam-aware boundary terms).
         """
         sweep = _SegmentSweep(self, graph, seg_lo, clustering, chip_type)
 
@@ -722,13 +737,17 @@ class _SegmentSweep:
     __slots__ = (
         "model", "gd", "spans", "rel", "n_cl", "load_const", "m",
         "fill_factor", "has_expert", "first_expert", "cells", "statics",
-        "next_p0s", "cur_k", "cur_ep", "ctype",
+        "next_p0s", "cur_k", "cur_ep", "ctypes", "next_ctypes",
     )
 
     def __init__(self, model: FastCostModel, graph: LayerGraph, seg_lo: int,
-                 clustering, chip_type: str | None = None) -> None:
+                 clustering, chip_type=None) -> None:
         self.model = model
-        self.ctype = chip_type
+        # One flavor name applies to every cluster; a sequence gives each
+        # cluster its own flavor (mixed pipelines).  next_ctypes[j] feeds the
+        # seam-aware boundary term of slot j's memo entry key.
+        self.ctypes = list(_flavor_tuple(chip_type, len(clustering)))
+        self.next_ctypes = self.ctypes[1:] + [None]
         gd = model.graph_data(graph)
         self.gd = gd
         self.rel = tuple(clustering)
@@ -769,7 +788,7 @@ class _SegmentSweep:
             # Generic path (arbitrary partition tuples): tuple-keyed cells.
             for j, (lo, hi) in enumerate(self.rel):
                 p = partitions[lo:hi]
-                cell = model._cluster_cell(gd, *self.spans[j], p, self.ctype)
+                cell = model._cluster_cell(gd, *self.spans[j], p, self.ctypes[j])
                 self.cells[j] = cell
                 self.statics[j] = cell[_STATIC]
                 self.cur_k[j] = self.cur_ep[j] = None
@@ -786,7 +805,8 @@ class _SegmentSweep:
             ep_j = ep_variant and self.has_expert[j]
             if k == self.cur_k[j] and ep_j == self.cur_ep[j]:
                 continue
-            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j, self.ctype)
+            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j,
+                                            self.ctypes[j])
             self.cells[j] = cell
             self.statics[j] = cell[_STATIC]
             self.cur_k[j] = k
@@ -799,13 +819,15 @@ class _SegmentSweep:
 
     def _probe(self, j: int, n: int, next_n: int | None) -> float:
         next_p0 = self.next_p0s[j]
-        k = (n, next_p0, next_n)
+        next_ct = self.next_ctypes[j]
+        k = (n, next_p0, next_n, next_ct)
         cell = self.cells[j]
         t = cell.get(k)
         if t is None:
             self.model._misses += 1
             t = cell[k] = self.model._cluster_cost(
-                self.statics[j], n, next_p0, next_n, cell[_BODY], self.ctype
+                self.statics[j], n, next_p0, next_n, cell[_BODY],
+                self.ctypes[j], next_ct,
             )
         return t
 
@@ -817,19 +839,21 @@ class _SegmentSweep:
         statics = self.statics
         next_p0s = self.next_p0s
         cost = model._cluster_cost
-        ctype = self.ctype
+        ctypes = self.ctypes
+        next_ctypes = self.next_ctypes
         times = []
         append = times.append
         bottleneck = 0.0
         for j in range(n_cl):
             next_n = alloc[j + 1] if j + 1 < n_cl else None
-            k = (alloc[j], next_p0s[j], next_n)
+            k = (alloc[j], next_p0s[j], next_n, next_ctypes[j])
             cell = cells[j]
             t = cell.get(k)
             if t is None:
                 model._misses += 1
                 t = cell[k] = cost(
-                    statics[j], alloc[j], next_p0s[j], next_n, cell[_BODY], ctype
+                    statics[j], alloc[j], next_p0s[j], next_n, cell[_BODY],
+                    ctypes[j], next_ctypes[j],
                 )
             if t > bottleneck:
                 bottleneck = t
@@ -850,7 +874,7 @@ class _SegmentSweep:
             return
         for j, (lo, hi) in enumerate(self.spans):
             if hi - lo >= _BATCH_MIN_LAYERS:
-                model._batch_seed_fill(self.gd, lo, hi, alloc[j], self.ctype)
+                model._batch_seed_fill(self.gd, lo, hi, alloc[j], self.ctypes[j])
 
     def move(self, base_alloc, base_times, dst, src, k=1):
         """Incremental re-eval after moving ``k`` chips src -> dst."""

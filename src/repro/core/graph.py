@@ -166,13 +166,17 @@ class ModelAssignment:
 
     ``samples_per_beat`` is this model's batch weighting inside a merged
     pipeline (1.0 elsewhere); ``time_share`` is its slice of a
-    time-multiplexed package (1.0 elsewhere).
+    time-multiplexed package (1.0 elsewhere).  A quota drawn from a single
+    flavor names it in ``chip_type``; a mixed-flavor quota (the model's
+    pipeline spans flavors) itemizes per-flavor chips in ``chip_quota``
+    with ``chips`` their total and ``chip_type`` None.
     """
     model: str                     # LayerGraph name
     weight: float                  # traffic weight (relative request rate)
     chips: int                     # chips dedicated (partitioned) or total (else)
     schedule: ScopeSchedule
     chip_type: str | None = None   # hetero flavor the quota is drawn from
+    chip_quota: tuple[tuple[str | None, int], ...] = ()  # mixed-flavor quota
     samples_per_beat: float = 1.0
     time_share: float = 1.0
 
@@ -233,7 +237,8 @@ def validate_multimodel(
     * every assignment's underlying ScopeSchedule is itself valid for its
       (merged-mode: shared) graph and chip budget;
     * partitioned quotas are disjoint: per chip type, dedicated chips sum to
-      at most the flavor's capacity;
+      at most the flavor's capacity (mixed-flavor quotas are itemized via
+      ``chip_quota`` and accounted per flavor);
     * time-multiplexed shares sum to at most 1;
     * mix_rate / weighted_throughput are consistent with the assignments.
     """
@@ -242,6 +247,13 @@ def validate_multimodel(
     for a in sched.assignments:
         assert a.weight > 0, f"{a.model}: non-positive traffic weight"
         assert a.chips >= 1
+        if a.chip_quota:
+            assert a.chip_type is None, (
+                f"{a.model}: chip_type and chip_quota are mutually exclusive"
+            )
+            assert sum(c for _, c in a.chip_quota) == a.chips, (
+                f"{a.model}: chip_quota {a.chip_quota} != chips {a.chips}"
+            )
         # Keyed by the schedule's workload so merged-mode assignments (which
         # share one schedule over the concatenated graph) validate against
         # the merged graph, not the per-model one.
@@ -250,7 +262,11 @@ def validate_multimodel(
     if sched.mode == MM_PARTITIONED:
         used: dict[str | None, int] = {}
         for a in sched.assignments:
-            used[a.chip_type] = used.get(a.chip_type, 0) + a.chips
+            if a.chip_quota:
+                for ctype, c in a.chip_quota:
+                    used[ctype] = used.get(ctype, 0) + c
+            else:
+                used[a.chip_type] = used.get(a.chip_type, 0) + a.chips
         for ctype, n in used.items():
             cap = type_capacity.get(ctype)
             assert cap is not None, f"unknown chip type {ctype!r}"
@@ -267,19 +283,37 @@ def validate_multimodel(
     assert abs(expect - sched.weighted_throughput) <= 1e-9 * max(1.0, expect)
 
 
-def validate_schedule(graph: LayerGraph, sched: ScopeSchedule, chips: int) -> None:
-    """Invariants: contiguous cover of all layers; regions fit the package."""
+def validate_schedule(
+    graph: LayerGraph,
+    sched: ScopeSchedule,
+    chips: int,
+    flavor_caps: dict[str | None, int] | None = None,
+) -> None:
+    """Invariants: contiguous cover of all layers; regions fit the package.
+
+    ``flavor_caps`` (mixed-flavor schedules) additionally bounds each
+    segment's per-flavor chip usage by that flavor's budget.
+    """
     cursor = 0
     for seg in sched.segments:
         used = 0
+        by_type: dict[str | None, int] = {}
         for cl in seg.clusters:
             assert cl.layer_lo == cursor, (cl.layer_lo, cursor)
             assert cl.layer_hi > cl.layer_lo
             assert len(cl.partitions) == cl.n_layers
             assert cl.region_chips >= 1
             used += cl.region_chips
+            by_type[cl.chip_type] = by_type.get(cl.chip_type, 0) + cl.region_chips
             cursor = cl.layer_hi
         assert used <= chips, f"segment uses {used} > {chips} chips"
+        if flavor_caps is not None:
+            for ctype, n in by_type.items():
+                cap = flavor_caps.get(ctype)
+                assert cap is not None, f"unknown chip type {ctype!r}"
+                assert n <= cap, (
+                    f"segment uses {n} chips of type {ctype!r} > {cap}"
+                )
     assert cursor == len(graph), f"schedule covers {cursor}/{len(graph)} layers"
 
 

@@ -73,6 +73,14 @@ class HardwareModel:
     # Heterogeneous package: per-region chip flavors.  Empty = homogeneous
     # (every chip is the base flavor described by the fields above).
     region_types: tuple[ChipType, ...] = ()
+    # Cross-flavor seam model: the links crossing the boundary between two
+    # adjacent regions of *different* flavors.  Default bandwidth is the
+    # weaker flavor's link bandwidth (the seam runs at the slower endpoint's
+    # SerDes rate), optionally derated by ``seam_bw_scale`` (interposer
+    # crossings slower than intra-flavor links).  ``seam_bw_overrides`` pins
+    # specific unordered flavor pairs to an absolute bytes/s per link.
+    seam_bw_scale: float = 1.0
+    seam_bw_overrides: tuple[tuple[str, str, float], ...] = ()
 
     def with_chips(self, chips: int) -> "HardwareModel":
         side = int(math.sqrt(chips))
@@ -113,6 +121,28 @@ class HardwareModel:
             region_types=(),
         )
 
+    def flavor_link_bw(self, name: str | None) -> float:
+        """Link bandwidth of one ``name``-flavored chip's mesh links."""
+        if not name:
+            return self.link_bw
+        return self.link_bw * self.chip_type(name).nop_bw_scale
+
+    def seam_link_bw(self, a: str | None, b: str | None) -> float:
+        """Bandwidth of one link on the seam between a region of flavor
+        ``a`` and an adjacent region of flavor ``b``.
+
+        Same flavor on both sides: the flavor's own link bandwidth
+        (homogeneous seam, the pre-mixed-flavor behavior).  Different
+        flavors: an explicit override for the pair if one exists, else the
+        weaker flavor's link bandwidth times ``seam_bw_scale``.
+        """
+        if a == b:
+            return self.flavor_link_bw(a)
+        for x, y, bw in self.seam_bw_overrides:
+            if (x == a and y == b) or (x == b and y == a):
+                return bw
+        return min(self.flavor_link_bw(a), self.flavor_link_bw(b)) * self.seam_bw_scale
+
 
 def validate_region_types(hw: HardwareModel) -> None:
     if not hw.region_types:
@@ -124,6 +154,13 @@ def validate_region_types(hw: HardwareModel) -> None:
     assert total == hw.chips, (
         f"{hw.name}: region_types cover {total} != {hw.chips} chips"
     )
+    assert hw.seam_bw_scale > 0, f"seam_bw_scale {hw.seam_bw_scale} <= 0"
+    for x, y, bw in hw.seam_bw_overrides:
+        assert bw > 0, f"seam override {x}<->{y}: bandwidth {bw} <= 0"
+        for n in (x, y):
+            assert any(t.name == n for t in hw.region_types), (
+                f"seam override names unknown chip type {n!r}"
+            )
 
 
 def mcm_table_iii(chips: int = 256) -> HardwareModel:

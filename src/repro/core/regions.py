@@ -74,6 +74,7 @@ def rebalance(
     max_iters: int = 256,
     donor_tries: int = 2,
     paper_strict: bool = False,
+    groups: list[int] | None = None,
 ) -> tuple[list[int], float, list[float]]:
     """Paper's heuristic: move 1 chip from the fastest to the slowest region.
 
@@ -87,6 +88,13 @@ def rebalance(
     * when the fastest donor's move ties or regresses, the next-fastest
       donor is tried (``donor_tries`` donors in total) before terminating --
       a tie through one donor does not prove no donor can improve.
+
+    ``groups`` (mixed-flavor pipelines) gives each region a pool id: chips
+    only move between regions of the same pool, because a chip physically
+    belongs to one flavor of the package.  A bottleneck region whose pool
+    has no improving donor terminates the walk, exactly as in the ungrouped
+    case -- cross-pool moves could never lower a bottleneck outside their
+    pool.  ``None`` is a single shared pool (homogeneous behavior).
 
     ``paper_strict=True`` disables both repairs and replicates Algorithm 1's
     pseudocode exactly: an infeasible seed terminates immediately, and only
@@ -125,8 +133,17 @@ def rebalance(
             bad = [j for j, t in enumerate(best_times) if t == INF]
             if not bad:
                 break
-            target = bad[0]
-            donors = _fastest_donors(best_times, best, bad, donor_tries)
+            # Repair an infeasible region whose pool still has donors
+            # (pool-less infeasible regions stay INF and the walk ends).
+            target = next(
+                (
+                    j for j in bad
+                    if _fastest_donors(best_times, best, bad, 1, groups, j)
+                ),
+                bad[0],
+            )
+            donors = _fastest_donors(best_times, best, bad, donor_tries,
+                                     groups, target)
             moved = False
             for donor in donors:
                 # donors all have > 1 chip, so k >= 1
@@ -150,7 +167,8 @@ def rebalance(
         for j in range(1, n):
             if best_times[j] > best_times[slow]:
                 slow = j
-        donors = _fastest_donors(best_times, best, (slow,), donor_tries)
+        donors = _fastest_donors(best_times, best, (slow,), donor_tries,
+                                 groups, slow)
         improved = False
         for fast in donors:
             lat, trial, times = mv(best, best_times, slow, fast, 1)
@@ -163,11 +181,18 @@ def rebalance(
     return best, best_lat, best_times
 
 
-def _fastest_donors(times, alloc, exclude, k):
-    """Indices of the ``k`` fastest regions that can give up a chip."""
+def _fastest_donors(times, alloc, exclude, k, groups=None, receiver=None):
+    """Indices of the ``k`` fastest regions that can give up a chip.
+
+    With ``groups``, only regions in the receiver's pool may donate (chips
+    never cross a flavor boundary).
+    """
+    pool = None if groups is None or receiver is None else groups[receiver]
     out = []
     for j, t in enumerate(times):
         if alloc[j] > 1 and j not in exclude:
+            if pool is not None and groups[j] != pool:
+                continue
             out.append((t, j))
     out.sort()
     return [j for _, j in out[:k]]

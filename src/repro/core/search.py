@@ -5,6 +5,16 @@ Per segment, three nested dimensions are explored:
   * N_cluster via the cluster merge table (linear, L rows)   [cmt.py]
   * region allocation: proportional seed + chip-rebalance    [regions.py]
 
+On heterogeneous packages a fourth dimension opens up (``search_mixed`` /
+``search_segment_mixed``): contiguous *runs* of clusters are assigned to
+chip flavors under per-flavor chip budgets, so one pipeline can start on
+big chips and finish on little ones (SCAR / Odema et al.).  Flavors occupy
+contiguous areas of the mesh, so a pipeline crosses at most one seam per
+flavor change; the cost model charges those boundary hand-offs through
+``HardwareModel.seam_link_bw``.  Run boundaries are pruned to a window
+around the compute-proportional cut (per-flavor proportional seeds), and
+the rebalance walk only moves chips within a flavor pool.
+
 The pseudocode's inner ``while tmpLatency < minLatency`` only rebalances while
 beating the global best; we run the (strictly stronger) local-improvement
 rebalance and track the global best across it -- this can only find better
@@ -16,12 +26,14 @@ an identical segment allocation for Scope and the segmented baseline).
 """
 from __future__ import annotations
 
+import bisect
 import itertools
+import math
 import random
 from dataclasses import dataclass
 
 from .cmt import Clustering, gen_cmt
-from .costmodel import INF, CostModel
+from .costmodel import INF, CostModel, _flavor_tuple
 from .graph import (
     ClusterAssignment,
     LayerGraph,
@@ -48,18 +60,23 @@ def build_clusters(
     clustering: Clustering,
     partitions: tuple[str, ...],
     regions: list[int],
-    chip_type: str | None = None,
+    chip_type=None,
 ) -> tuple[ClusterAssignment, ...]:
-    """Assemble ClusterAssignments from segment-relative pieces."""
+    """Assemble ClusterAssignments from segment-relative pieces.
+
+    ``chip_type`` is one flavor name for every cluster, or a per-cluster
+    flavor sequence (mixed-flavor pipelines).
+    """
+    types = _flavor_tuple(chip_type, len(clustering))
     out = []
-    for (lo, hi), chips in zip(clustering, regions):
+    for (lo, hi), chips, ctype in zip(clustering, regions, types):
         out.append(
             ClusterAssignment(
                 layer_lo=seg_lo + lo,
                 layer_hi=seg_lo + hi,
                 region_chips=chips,
                 partitions=partitions[lo:hi],
-                chip_type=chip_type,
+                chip_type=ctype,
             )
         )
     return tuple(out)
@@ -72,7 +89,7 @@ def evaluate_segment(
     clustering: Clustering,
     partitions: tuple[str, ...],
     regions: list[int],
-    chip_type: str | None = None,
+    chip_type=None,
 ) -> tuple[float, list[float]]:
     clusters = build_clusters(seg_lo, clustering, partitions, regions, chip_type)
     lat, times = cost.segment_time(graph, clusters)
@@ -84,6 +101,23 @@ class SegmentResult:
     clusters: tuple[ClusterAssignment, ...]
     latency: float
     cluster_times: tuple[float, ...]
+
+
+def _partition_sets(
+    graph: LayerGraph, seg_lo: int, L: int, ep_for_moe: bool
+) -> dict[tuple[str, ...], tuple[int, bool]]:
+    """Candidate partition sets, each with a (transition_idx, ep) hint that
+    lets FastCostModel key its memo by small int tuples (see fastcost.py)."""
+    partition_sets: dict[tuple[str, ...], tuple[int, bool]] = {}
+    for idx in range(L + 1):
+        partition_sets[transition_partitions(L, idx)] = (idx, False)
+    if ep_for_moe:
+        for idx in range(L + 1):
+            p = transition_partitions(L, idx)
+            pe = apply_ep(graph, p, lo=seg_lo)
+            if pe != p and pe not in partition_sets:  # dedupe, keep order
+                partition_sets[pe] = (idx, True)
+    return partition_sets
 
 
 def search_segment(
@@ -110,18 +144,7 @@ def search_segment(
     L = len(sub)
     cmt = {len(fixed_clustering): fixed_clustering} if fixed_clustering else gen_cmt(sub)
     best: SegmentResult | None = None
-
-    # Candidate partition sets, each with a (transition_idx, ep) hint that
-    # lets FastCostModel key its memo by small int tuples (see fastcost.py).
-    partition_sets: dict[tuple[str, ...], tuple[int, bool]] = {}
-    for idx in range(L + 1):
-        partition_sets[transition_partitions(L, idx)] = (idx, False)
-    if ep_for_moe:
-        for idx in range(L + 1):
-            p = transition_partitions(L, idx)
-            pe = apply_ep(graph, p, lo=seg_lo)
-            if pe != p and pe not in partition_sets:  # dedupe, keep order
-                partition_sets[pe] = (idx, True)
+    partition_sets = _partition_sets(graph, seg_lo, L, ep_for_moe)
 
     # Seed allocations depend only on the clustering (not on partitions), so
     # compute them once per CMT row instead of once per (partitions x row).
@@ -175,6 +198,237 @@ def search_segment(
                     cluster_times=tuple(times),
                 )
     return best
+
+
+# ---------------------------------------------------------------------------
+# Mixed-flavor pipelines: chip_type as a per-cluster search dimension
+# ---------------------------------------------------------------------------
+
+def _flavor_sequences(n_flavors: int, max_runs: int):
+    """Ordered tuples of distinct flavor indices: the flavor each contiguous
+    cluster run lands on, in pipeline order.  Flavors occupy contiguous mesh
+    areas, so revisiting a flavor would tear a region apart -- runs use each
+    flavor at most once, in either direction."""
+    for r in range(1, min(n_flavors, max_runs) + 1):
+        yield from itertools.permutations(range(n_flavors), r)
+
+
+def _run_cut_candidates(
+    loads: list[float], capacities: list[float], window: int
+) -> list[tuple[int, ...]]:
+    """Candidate cut index tuples splitting ``len(loads)`` clusters into
+    ``len(capacities)`` contiguous non-empty runs.
+
+    Small segments are cut exhaustively.  Larger ones are pruned to a
+    ``window`` around the compute-proportional cuts (run r's cumulative
+    cluster load tracks its cumulative effective capacity) -- the same
+    proportionality the region seed allocation uses, applied one level up.
+    """
+    n = len(loads)
+    R = len(capacities)
+    if R == 1:
+        return [()]
+    if n < R:
+        return []
+    exhaustive = math.comb(n - 1, R - 1)
+    if exhaustive <= (2 * window + 1) ** (R - 1):
+        return list(itertools.combinations(range(1, n), R - 1))
+    prefix = [0.0]
+    for l in loads:
+        prefix.append(prefix[-1] + l)
+    total_load = prefix[-1] or 1.0
+    total_cap = sum(capacities) or 1.0
+    targets, acc = [], 0.0
+    for c in capacities[:-1]:
+        acc += c
+        s = bisect.bisect_left(prefix, (acc / total_cap) * total_load, 1, n)
+        targets.append(min(max(s, 1), n - 1))
+    ranges = [
+        range(max(1, t - window), min(n - 1, t + window) + 1) for t in targets
+    ]
+    return [
+        cut for cut in itertools.product(*ranges)
+        if all(a < b for a, b in zip(cut, cut[1:]))
+    ]
+
+
+def search_segment_mixed(
+    cost: CostModel,
+    graph: LayerGraph,
+    seg_lo: int,
+    seg_hi: int,
+    flavor_budgets: list[tuple[str | None, int]],
+    mode: RegionMode = RegionMode.FREE,
+    ep_for_moe: bool = False,
+    max_clusters: int | None = None,
+    fixed_clustering: Clustering | None = None,
+    paper_strict: bool = False,
+    cut_window: int = 2,
+) -> SegmentResult | None:
+    """Algorithm 1 over one segment with per-cluster chip flavors.
+
+    On top of the three paper dimensions, a flavor-run assignment layer
+    maps contiguous runs of clusters onto package flavors under the
+    per-flavor chip budgets in ``flavor_budgets`` (``[(chip_type, chips)]``).
+    Seeds are proportional *within* each run's budget and the rebalance
+    walk is constrained to within-flavor chip moves (a chip physically
+    belongs to one flavor).  Single-run assignments are included, so the
+    result is never worse than running the whole segment on the best
+    single flavor at these budgets.
+    """
+    sub = graph.slice(seg_lo, seg_hi)
+    L = len(sub)
+    cmt = {len(fixed_clustering): fixed_clustering} if fixed_clustering else gen_cmt(sub)
+    partition_sets = _partition_sets(graph, seg_lo, L, ep_for_moe)
+    hw = cost.hw
+    scales = [
+        1.0 if t is None else hw.chip_type(t).flops_scale
+        for t, _ in flavor_budgets
+    ]
+    best: SegmentResult | None = None
+
+    for n_cluster, clustering in cmt.items():
+        if max_clusters is not None and n_cluster > max_clusters:
+            continue
+        loads = [
+            sum(graph.layers[seg_lo + i].flops for i in range(lo, hi))
+            for lo, hi in clustering
+        ]
+        for seq in _flavor_sequences(len(flavor_budgets), n_cluster):
+            eff_caps = [flavor_budgets[f][1] * scales[f] for f in seq]
+            for cuts in _run_cut_candidates(loads, eff_caps, cut_window):
+                bounds = (0, *cuts, n_cluster)
+                runs = list(zip(bounds[:-1], bounds[1:]))
+                if any(
+                    hi - lo > flavor_budgets[f][1]
+                    for (lo, hi), f in zip(runs, seq)
+                ):
+                    continue   # a run needs >= 1 chip per cluster
+                ctypes, groups, seed = [], [], []
+                feasible = True
+                for r, ((lo, hi), f) in enumerate(zip(runs, seq)):
+                    budget = flavor_budgets[f][1]
+                    ctypes += [flavor_budgets[f][0]] * (hi - lo)
+                    groups += [r] * (hi - lo)
+                    if mode is RegionMode.UNIFORM:
+                        alloc_r = uniform_allocate(hi - lo, budget)
+                        if alloc_r is None:
+                            feasible = False
+                            break
+                        seed += alloc_r
+                    else:
+                        seed += proportional_allocate(loads[lo:hi], budget)
+                if not feasible:
+                    continue
+                ctypes = tuple(ctypes)
+                sweeper = cost.segment_sweeper(graph, seg_lo, clustering, ctypes)
+                prefill = getattr(sweeper, "prefill", None)
+                if prefill is not None:
+                    prefill(seed)
+                for partitions, hint in partition_sets.items():
+                    eval_fn = sweeper(partitions, transition=hint)
+                    if mode is RegionMode.UNIFORM:
+                        lat, times = eval_fn(seed)
+                        alloc = seed
+                    else:
+                        alloc, lat, times = rebalance(
+                            seed, eval_fn, paper_strict=paper_strict,
+                            groups=groups,
+                        )
+                    if lat < (best.latency if best else INF):
+                        best = SegmentResult(
+                            clusters=build_clusters(
+                                seg_lo, clustering, partitions, alloc, ctypes
+                            ),
+                            latency=lat,
+                            cluster_times=tuple(times),
+                        )
+    return best
+
+
+def search_mixed(
+    graph: LayerGraph,
+    cost: CostModel,
+    flavor_budgets: list[tuple[str | None, int]] | None = None,
+    mode: RegionMode = RegionMode.FREE,
+    ep_for_moe: bool = False,
+    segment_counts: list[int] | None = None,
+    max_clusters: int | None = None,
+    paper_strict: bool = False,
+    cut_window: int = 2,
+    include_single_flavor: bool = True,
+) -> ScopeSchedule | None:
+    """Full Scope DSE with ``chip_type`` as a per-cluster dimension.
+
+    ``flavor_budgets`` caps how many chips of each flavor the schedule may
+    use (default: every chip of every flavor of ``cost.hw``); the multimodel
+    quota search passes partial budgets so one model can span flavors while
+    others keep the rest.  The result is the best of (a) the plain
+    single-flavor DSE per flavor at its budget and (b) the mixed sweep, so
+    mixed search never returns worse than the best single-flavor schedule.
+    """
+    hw = cost.hw
+    if flavor_budgets is None:
+        if hw.region_types:
+            flavor_budgets = [(t.name, t.chips) for t in hw.region_types]
+        else:
+            flavor_budgets = [(None, hw.chips)]
+    flavor_budgets = [(t, b) for t, b in flavor_budgets if b > 0]
+    if not flavor_budgets:
+        return None
+
+    best_sched: ScopeSchedule | None = None
+    if include_single_flavor or len(flavor_budgets) == 1:
+        for t, b in flavor_budgets:
+            s = search(
+                graph, cost, b, mode=mode, ep_for_moe=ep_for_moe,
+                segment_counts=segment_counts, max_clusters=max_clusters,
+                chip_type=t, paper_strict=paper_strict,
+            )
+            if s is not None and (
+                best_sched is None or s.latency < best_sched.latency
+            ):
+                best_sched = s
+    if len(flavor_budgets) == 1:
+        return best_sched
+
+    total = sum(b for _, b in flavor_budgets)
+    counts = segment_counts or candidate_segment_counts(graph, hw, total)
+    for n_seg in counts:
+        split = divide_segments(graph, hw, total, n_seg)
+        if split is None:
+            continue
+        segs: list[SegmentSchedule] = []
+        total_lat = 0.0
+        ok = True
+        for lo, hi in split:
+            res = search_segment_mixed(
+                cost, graph, lo, hi, flavor_budgets, mode=mode,
+                ep_for_moe=ep_for_moe, max_clusters=max_clusters,
+                paper_strict=paper_strict, cut_window=cut_window,
+            )
+            if res is None or res.latency == INF:
+                ok = False
+                break
+            segs.append(
+                SegmentSchedule(res.clusters, res.latency, res.cluster_times)
+            )
+            total_lat += res.latency
+        if not ok:
+            continue
+        if best_sched is None or total_lat < best_sched.latency:
+            best_sched = ScopeSchedule(
+                workload=graph.name,
+                chips=total,
+                segments=tuple(segs),
+                latency=total_lat,
+                meta={
+                    "n_segments": n_seg,
+                    "mode": mode.value,
+                    "mixed_flavors": [[t, b] for t, b in flavor_budgets],
+                },
+            )
+    return best_sched
 
 
 def search(

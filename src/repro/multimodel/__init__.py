@@ -5,7 +5,9 @@ subsystem schedules a set of ``(LayerGraph, traffic_weight)`` models onto a
 single package by searching jointly over
 
 * package partitioning into per-model chip quotas (``quota.py``), drawing
-  each quota from one flavor of a heterogeneous package,
+  each quota from one flavor of a heterogeneous package -- or *spanning*
+  two flavors (``search_partitioned_mixed``), where the model's pipeline
+  itself crosses the flavor seam (``repro.core.search.search_mixed``),
 * per-model Scope schedules via the existing ``search()`` -- one shared
   :class:`~repro.core.fastcost.FastCostModel` memo makes the repeated
   ``(graph, chips, chip_type)`` sub-searches across quota candidates
@@ -29,8 +31,17 @@ from ..core.graph import (  # noqa: F401
     validate_multimodel,
 )
 from .spec import ModelSpec, parse_mix  # noqa: F401
-from .curves import ThroughputCurve, build_curves  # noqa: F401
-from .quota import brute_force_partitioned, search_partitioned  # noqa: F401
+from .curves import (  # noqa: F401
+    MixedCurve,
+    ThroughputCurve,
+    build_curves,
+    mixed_throughput_curve,
+)
+from .quota import (  # noqa: F401
+    brute_force_partitioned,
+    search_partitioned,
+    search_partitioned_mixed,
+)
 from .interleave import merged_graph, search_merged  # noqa: F401
 from .baselines import equal_split, time_multiplexed  # noqa: F401
 from .coschedule import co_schedule, describe  # noqa: F401

@@ -24,6 +24,18 @@ def main(argv=None) -> None:
     ap.add_argument("--m-samples", type=int, default=16)
     ap.add_argument("--step", type=int, default=1,
                     help="quota grid step (1 = exhaustive)")
+    ap.add_argument("--refine", action="store_true",
+                    help="coarse-to-fine curves: re-sample at step 1 around "
+                         "each coarse argmax")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable mixed-flavor (spanning) quotas on "
+                         "heterogeneous packages")
+    ap.add_argument("--mixed-step", type=int, default=None,
+                    help="budget grid step of the mixed-flavor curves "
+                         "(default: quarter of the smaller flavor)")
+    ap.add_argument("--switch-cost", action="store_true",
+                    help="charge time-mux slices for per-slice weight "
+                         "re-deployment")
     ap.add_argument("--baselines", action="store_true",
                     help="also report equal-split and time-mux baselines")
     args = ap.parse_args(argv)
@@ -32,7 +44,9 @@ def main(argv=None) -> None:
     hw = get_hw(args.hw)
     cost = FastCostModel(hw, m_samples=args.m_samples)
     sched = co_schedule(specs, hw, m_samples=args.m_samples, step=args.step,
-                        cost=cost)
+                        cost=cost, include_mixed=not args.no_mixed,
+                        curve_refine=args.refine, mixed_step=args.mixed_step,
+                        switch_cost=args.switch_cost)
     if sched is None:
         raise SystemExit(f"no feasible co-schedule for {args.mix} on {args.hw}")
     for line in describe(sched):

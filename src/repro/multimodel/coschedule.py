@@ -18,7 +18,7 @@ from ..core.hw import HardwareModel, validate_region_types
 from .baselines import time_multiplexed
 from .curves import build_curves
 from .interleave import merged_graph, search_merged
-from .quota import package_flavors, search_partitioned
+from .quota import package_flavors, search_partitioned, search_partitioned_mixed
 from .spec import ModelSpec
 
 
@@ -29,14 +29,24 @@ def co_schedule(
     step: int = 1,
     include_merged: bool = True,
     include_time_mux: bool = True,
+    include_mixed: bool = True,
     paper_strict: bool = False,
     cost: CostModel | None = None,
     validate: bool = True,
+    curve_refine: bool = False,
+    mixed_step: int | None = None,
+    switch_cost: bool = False,
+    switch_period_s: float = 1.0,
 ) -> MultiModelSchedule | None:
     """Jointly schedule ``specs`` onto one package.
 
-    ``step`` coarsens the quota grid (1 = exhaustive); ``cost`` lets callers
-    supply a pre-warmed engine (its memo then carries over between calls).
+    ``step`` coarsens the quota grid (1 = exhaustive; ``curve_refine``
+    re-samples the coarse curves at step 1 around each argmax); ``cost``
+    lets callers supply a pre-warmed engine (its memo then carries over
+    between calls).  On two-flavor heterogeneous packages ``include_mixed``
+    also searches quotas that span flavors (one model's pipeline on big
+    *and* little chips); ``switch_cost`` charges the time-mux mode for
+    per-slice weight re-deployment (see ``baselines.time_multiplexed``).
     """
     validate_region_types(hw)
     names = [s.name for s in specs]
@@ -46,12 +56,20 @@ def co_schedule(
         cost = FastCostModel(hw, m_samples=m_samples)
     t0 = time.time()
     flavors = package_flavors(hw)
-    curves = build_curves(specs, cost, flavors, step, paper_strict)
+    curves = build_curves(specs, cost, flavors, step, paper_strict,
+                          refine=curve_refine)
 
     candidates: list[tuple[str, MultiModelSchedule]] = []
     part = search_partitioned(specs, cost, step, paper_strict, curves=curves)
     if part is not None:
         candidates.append((part.mode, part))
+    if include_mixed and len(flavors) == 2:
+        mixed = search_partitioned_mixed(
+            specs, cost, step, paper_strict, curves=curves,
+            mixed_step=mixed_step,
+        )
+        if mixed is not None:
+            candidates.append(("partitioned:mixed", mixed))
     if include_merged and len(specs) > 1:
         for ctype, _cap in flavors:
             merged = search_merged(specs, cost, chip_type=ctype,
@@ -60,7 +78,9 @@ def co_schedule(
                 label = f"{merged.mode}:{ctype}" if ctype else merged.mode
                 candidates.append((label, merged))
     if include_time_mux:
-        tm = time_multiplexed(specs, cost, curves=curves)
+        tm = time_multiplexed(specs, cost, curves=curves,
+                              switch_cost=switch_cost,
+                              switch_period_s=switch_period_s)
         if tm is not None:
             candidates.append((tm.mode, tm))
     if not candidates:
@@ -95,6 +115,10 @@ def describe(sched: MultiModelSchedule) -> list[str]:
         extras = []
         if a.chip_type:
             extras.append(f"type={a.chip_type}")
+        if a.chip_quota:
+            extras.append(
+                "quota=" + "+".join(f"{c}x{t}" for t, c in a.chip_quota if c)
+            )
         if a.samples_per_beat != 1.0:
             extras.append(f"{a.samples_per_beat:g} samples/beat")
         if a.time_share != 1.0:

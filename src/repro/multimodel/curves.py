@@ -13,14 +13,31 @@ Scope throughput is *not* monotone in chips (NoP overheads / utilization
 collapse, paper Fig. 9), so a quota of ``c`` chips is served by the best
 schedule using **at most** ``c`` chips (the rest idle): the curve exposes
 that monotone envelope via :meth:`ThroughputCurve.envelope`.
+
+Two extensions for large / heterogeneous packages:
+
+* **Coarse-to-fine sampling** (``refine=True``): sample the coarse ``step``
+  grid, then re-sample at step 1 inside one coarse cell around the argmax.
+  The envelope stays correct at every quota (coarse points lower-bound it);
+  only the peak region gets the exact resolution, which is where the quota
+  search's winning candidates live.  ~10x fewer searches on 512+ chip
+  packages.
+* **Mixed-flavor curves** (:class:`MixedCurve`): throughput over per-flavor
+  chip budget *pairs*, each point a full mixed-flavor DSE
+  (:func:`repro.core.search.search_mixed`) that may land different clusters
+  of the pipeline on different flavors.  The quota search combines these
+  with the single-flavor envelopes so one model of a co-schedule can span
+  flavors.
 """
 from __future__ import annotations
+
+import itertools
 
 from dataclasses import dataclass, field
 
 from ..core.costmodel import INF, CostModel
 from ..core.graph import LayerGraph, ScopeSchedule
-from ..core.search import search
+from ..core.search import search, search_mixed
 
 
 @dataclass
@@ -77,18 +94,37 @@ def throughput_curve(
     chip_type: str | None = None,
     step: int = 1,
     paper_strict: bool = False,
+    refine: bool = False,
 ) -> ThroughputCurve:
     curve = ThroughputCurve(graph.name, chip_type)
-    for c in candidate_counts(max_chips, step):
+
+    def sample(c: int) -> None:
         sched = search(graph, cost, c, chip_type=chip_type,
                        paper_strict=paper_strict)
         if sched is None or sched.latency == INF:
             curve.points[c] = CurvePoint(c, INF, 0.0, None)
-            continue
+            return
         sched.meta["m_samples"] = cost.m
         curve.points[c] = CurvePoint(
             c, sched.latency, cost.m / sched.latency, sched
         )
+
+    for c in candidate_counts(max_chips, step):
+        sample(c)
+    if refine and step > 1:
+        # Coarse-to-fine: fill the one-coarse-cell neighborhood of the
+        # argmax at step 1, where the quota search's winners concentrate.
+        best = max(
+            (p for p in curve.points.values() if p.schedule is not None),
+            key=lambda p: p.throughput,
+            default=None,
+        )
+        if best is not None:
+            lo = max(1, best.chips - step + 1)
+            hi = min(max_chips, best.chips + step - 1)
+            for c in range(lo, hi + 1):
+                if c not in curve.points:
+                    sample(c)
     return curve
 
 
@@ -98,12 +134,103 @@ def build_curves(
     flavors: list[tuple[str | None, int]],
     step: int = 1,
     paper_strict: bool = False,
+    refine: bool = False,
 ) -> dict[tuple[str, str | None], ThroughputCurve]:
     """Curves for every (model, flavor) pair, all through one shared memo."""
     out = {}
     for spec in specs:
         for ctype, cap in flavors:
             out[(spec.name, ctype)] = throughput_curve(
-                cost, spec.graph, cap, ctype, step, paper_strict
+                cost, spec.graph, cap, ctype, step, paper_strict, refine
             )
     return out
+
+
+# ---------------------------------------------------------------------------
+# Mixed-flavor curves: one model spanning two chip flavors
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MixedPoint:
+    quota: tuple[int, int]         # chips per flavor, aligned with curve.flavors
+    latency: float
+    throughput: float
+    schedule: ScopeSchedule | None
+
+
+@dataclass
+class MixedCurve:
+    """throughput(c_a, c_b) for one model over two chip flavors."""
+    model: str
+    flavors: tuple[str | None, str | None]
+    points: dict[tuple[int, int], MixedPoint] = field(default_factory=dict)
+
+    def envelope(self, caps, env_a, env_b):
+        """2D monotone envelope combining this curve with the flavors' 1D
+        envelopes.
+
+        ``table[a][b]`` is the best record reachable with at most ``a``
+        chips of flavor 0 and ``b`` of flavor 1: ``(throughput, kind,
+        flavor_idx, point)`` where ``kind`` is ``"single"`` (a 1D
+        CurvePoint on one flavor) or ``"mixed"`` (a MixedPoint spanning
+        both), or ``None`` when nothing fits.  O(caps[0] * caps[1]) DP.
+        """
+        A, B = caps
+
+        def better(x, y):
+            return y if x is None or (y is not None and y[0] > x[0]) else x
+
+        table = [[None] * (B + 1) for _ in range(A + 1)]
+        for a in range(A + 1):
+            row = table[a]
+            for b in range(B + 1):
+                cand = None
+                if a > 0 and env_a[a] is not None:
+                    cand = better(cand, (env_a[a].throughput, "single", 0, env_a[a]))
+                if b > 0 and env_b[b] is not None:
+                    cand = better(cand, (env_b[b].throughput, "single", 1, env_b[b]))
+                pt = self.points.get((a, b))
+                if pt is not None and pt.schedule is not None:
+                    cand = better(cand, (pt.throughput, "mixed", None, pt))
+                if a > 0:
+                    cand = better(cand, table[a - 1][b])
+                if b > 0:
+                    cand = better(cand, row[b - 1])
+                row[b] = cand
+        return table
+
+
+def mixed_throughput_curve(
+    cost: CostModel,
+    graph: LayerGraph,
+    flavors: list[tuple[str | None, int]],
+    step: int = 1,
+    paper_strict: bool = False,
+    cut_window: int = 2,
+) -> MixedCurve:
+    """Sample mixed-flavor DSEs over the two flavors' budget grid.
+
+    Only genuinely mixed budgets (both > 0) are sampled -- pure quotas are
+    covered by the 1D curves, and :meth:`MixedCurve.envelope` merges both.
+    ``step`` walks the same coarse grid as the 1D curves (a point's budget
+    pair is a *cap*, so coarse points stay valid under the envelope).
+    """
+    assert len(flavors) == 2, "mixed curves span exactly two flavors"
+    (ta, cap_a), (tb, cap_b) = flavors
+    curve = MixedCurve(graph.name, (ta, tb))
+    for qa, qb in itertools.product(
+        candidate_counts(cap_a, step), candidate_counts(cap_b, step)
+    ):
+        sched = search_mixed(
+            graph, cost, [(ta, qa), (tb, qb)],
+            paper_strict=paper_strict, cut_window=cut_window,
+            include_single_flavor=False,
+        )
+        if sched is None or sched.latency == INF:
+            curve.points[(qa, qb)] = MixedPoint((qa, qb), INF, 0.0, None)
+            continue
+        sched.meta["m_samples"] = cost.m
+        curve.points[(qa, qb)] = MixedPoint(
+            (qa, qb), sched.latency, cost.m / sched.latency, sched
+        )
+    return curve

@@ -14,6 +14,14 @@ two-level:
    a coarsened ``step``-chip grid for large packages / many models, where
    exact compositions would explode combinatorially.
 
+On heterogeneous packages a third level opens up
+(:func:`search_partitioned_mixed`): per-model quotas may *span* flavors, so
+one model's pipeline starts on big chips and finishes on little ones
+(``search_mixed``'s per-cluster flavor dimension).  Per-flavor chip splits
+are enumerated independently per flavor (weak compositions, zeros allowed)
+and looked up in 2D mixed envelopes (:class:`~.curves.MixedCurve`) that
+combine the single-flavor curves with genuinely-mixed DSE points.
+
 ``brute_force_partitioned`` re-solves the same problem with fresh reference
 searches per candidate -- exponentially slower, used by
 ``tests/test_multimodel.py`` to pin the table-based search on tiny cases.
@@ -21,6 +29,7 @@ searches per candidate -- exponentially slower, used by
 from __future__ import annotations
 
 import itertools
+import math
 
 from ..core.costmodel import INF, CostModel
 from ..core.graph import (
@@ -31,7 +40,7 @@ from ..core.graph import (
 )
 from ..core.hw import HardwareModel
 from ..core.search import compositions, search
-from .curves import build_curves
+from .curves import build_curves, mixed_throughput_curve
 
 
 def package_flavors(hw: HardwareModel) -> list[tuple[str | None, int]]:
@@ -143,6 +152,139 @@ def search_partitioned(
         meta={
             "quota_candidates": n_candidates,
             "curve_points": sum(len(c.points) for c in curves.values()),
+        },
+    )
+
+
+# Enumeration budget for the spanning quota search's split cross-product;
+# beyond it the quota grid is coarsened (doubling steps) until it fits.
+_MAX_SPLIT_CANDIDATES = 2_000_000
+
+
+def _weak_splits(cap: int, parts: int, step: int):
+    """Splits of up to ``cap`` chips among ``parts`` models, zeros allowed,
+    on a ``step`` grid (exact-unit sums; the envelopes' "at most" semantics
+    make exact-total splits lose no generality, and the ``cap % step``
+    remainder tops up the first non-zero share)."""
+    step = max(1, step)
+    units, rem = divmod(cap, step)
+    for comp in itertools.product(range(units + 1), repeat=parts - 1):
+        head = sum(comp)
+        if head > units:
+            continue
+        split = [c * step for c in comp] + [(units - head) * step]
+        if rem:
+            for i, c in enumerate(split):
+                if c:
+                    split[i] = c + rem
+                    break
+        yield split
+
+
+def search_partitioned_mixed(
+    specs,
+    cost: CostModel,
+    step: int = 1,
+    paper_strict: bool = False,
+    curves=None,
+    mixed_curves=None,
+    mixed_step: int | None = None,
+    cut_window: int = 2,
+) -> MultiModelSchedule | None:
+    """Partitioned quotas where a model's quota may span two chip flavors.
+
+    Requires a heterogeneous package with exactly two flavors (the
+    big/little setting of SCAR / Odema et al.; more flavors fall back to
+    ``search_partitioned``'s single-flavor quotas).  ``mixed_step`` walks
+    the mixed curves' budget grid (default: quarter-capacity steps -- each
+    point is a full mixed DSE, so the grid is deliberately coarser than
+    the single-flavor curves').
+    """
+    hw = cost.hw
+    flavors = package_flavors(hw)
+    if len(flavors) != 2:
+        return None
+    (ta, cap_a), (tb, cap_b) = flavors
+    if curves is None:
+        curves = build_curves(specs, cost, flavors, step, paper_strict)
+    if mixed_step is None:
+        mixed_step = max(1, min(cap_a, cap_b) // 4)
+    if mixed_curves is None:
+        mixed_curves = {
+            spec.name: mixed_throughput_curve(
+                cost, spec.graph, flavors, step=mixed_step,
+                paper_strict=paper_strict, cut_window=cut_window,
+            )
+            for spec in specs
+        }
+    env2 = {
+        spec.name: mixed_curves[spec.name].envelope(
+            (cap_a, cap_b),
+            curves[(spec.name, ta)].envelope(cap_a),
+            curves[(spec.name, tb)].envelope(cap_b),
+        )
+        for spec in specs
+    }
+    n = len(specs)
+    # The enumeration is the cross-product of the two flavors' weak splits
+    # (O((cap/step + 1)^(2(n-1))) candidates): coarsen the quota grid until
+    # it is tractable -- the envelopes' "at most" semantics keep every
+    # coarse quota valid, just less finely optimized (same policy as
+    # _flavor_splits' step grid).
+    quota_step = max(1, step)
+    while (
+        math.comb(cap_a // quota_step + n - 1, n - 1)
+        * math.comb(cap_b // quota_step + n - 1, n - 1)
+        > _MAX_SPLIT_CANDIDATES
+    ):
+        quota_step *= 2
+    best_lam, best_picks, n_candidates = -1.0, None, 0
+    for split_a in _weak_splits(cap_a, n, quota_step):
+        for split_b in _weak_splits(cap_b, n, quota_step):
+            n_candidates += 1
+            lam = INF
+            picks = []
+            for spec, a, b in zip(specs, split_a, split_b):
+                rec = env2[spec.name][a][b]
+                tp = rec[0] if rec is not None else 0.0
+                picks.append(rec)
+                lam = min(lam, tp / spec.weight)
+                if lam <= best_lam:
+                    break
+            if lam > best_lam:
+                best_lam, best_picks = lam, picks
+    if best_picks is None or best_lam <= 0.0:
+        return None
+    assignments = []
+    for spec, rec in zip(specs, best_picks):
+        _tp, kind, fidx, pt = rec
+        if kind == "single":
+            assignments.append(ModelAssignment(
+                model=spec.name, weight=spec.weight, chips=pt.chips,
+                schedule=pt.schedule, chip_type=flavors[fidx][0],
+            ))
+        else:
+            qa, qb = pt.quota
+            assignments.append(ModelAssignment(
+                model=spec.name, weight=spec.weight, chips=qa + qb,
+                schedule=pt.schedule,
+                chip_quota=((ta, qa), (tb, qb)),
+            ))
+    assignments = tuple(assignments)
+    lam = mix_rate(assignments)
+    return MultiModelSchedule(
+        package=hw.name,
+        chips=hw.chips,
+        mode=MM_PARTITIONED,
+        assignments=assignments,
+        mix_rate=lam,
+        weighted_throughput=lam * sum(s.weight for s in specs),
+        meta={
+            "family": "partitioned_mixed",
+            "quota_candidates": n_candidates,
+            "quota_step": quota_step,
+            "mixed_points": sum(len(c.points) for c in mixed_curves.values()),
+            "mixed_step": mixed_step,
         },
     )
 

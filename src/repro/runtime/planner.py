@@ -67,11 +67,14 @@ def _plan_from_transition(
     t_layers: int,
     L: int,
     meta: dict,
+    stage_chip_types: tuple = (),
 ) -> ShardPlan:
     """Map a WSP->ISP layer transition index onto the scanned layer stack.
 
     Graph layout: [embed] + per-block nodes + [lm_head]; the transition maps
     onto the repeat axis of the stack as ``transition_repeat`` (two zones).
+    ``stage_chip_types`` carries the schedule's per-stage chip flavors into
+    the plan (mixed-flavor packages).
     """
     per_block = (L - 2) / max(1, cfg.n_layers)
     layers_per_repeat = per_block * len(cfg.expanded_pattern)
@@ -79,13 +82,26 @@ def _plan_from_transition(
     t_rep = min(max(t_rep, 0), cfg.pattern_repeats)
     if t_rep == 0:
         return ShardPlan(mesh_axes=mesh_axes, p1="ISP", p2="ISP",
-                         transition_repeat=None, meta=meta)
+                         transition_repeat=None,
+                         stage_chip_types=stage_chip_types, meta=meta)
     if t_rep == cfg.pattern_repeats:
         return ShardPlan(mesh_axes=mesh_axes, p1="WSP", p2="WSP",
-                         transition_repeat=None, meta=meta)
+                         transition_repeat=None,
+                         stage_chip_types=stage_chip_types, meta=meta)
     return ShardPlan(
         mesh_axes=mesh_axes, p1="WSP", p2="ISP", transition_repeat=t_rep,
-        meta=meta,
+        stage_chip_types=stage_chip_types, meta=meta,
+    )
+
+
+def schedule_stages(schedule) -> tuple[tuple[int, int, str | None, int], ...]:
+    """Flatten a ScopeSchedule into per-stage ``(layer_lo, layer_hi,
+    chip_type, region_chips)`` tuples -- the runtime's view of which chip
+    flavor serves which layer range."""
+    return tuple(
+        (cl.layer_lo, cl.layer_hi, cl.chip_type, cl.region_chips)
+        for seg in schedule.segments
+        for cl in seg.clusters
     )
 
 
@@ -97,16 +113,21 @@ def plan_for_multimodel(
     model_axis: int = 16,
     weights: list[float] | None = None,
     step: int = 1,
+    hw=None,
+    switch_cost: bool = False,
 ):
     """Co-schedule several LM configs onto one model axis.
 
     Runs the multimodel quota search (``repro.multimodel.co_schedule``) over
     the configs' exported layer graphs on a ``model_axis``-chip package, then
     derives each model's ShardPlan from its Scope schedule: the plan's
-    WSP->ISP transition is the schedule's first transition point, and
+    WSP->ISP transition is the schedule's first transition point,
     ``meta["quota_chips"]`` is the model-axis share the co-schedule assigned
     (the serving path runs each model on that sub-axis, or time-multiplexes
-    when the co-schedule says so).
+    when the co-schedule says so), and ``plan.stage_chip_types`` records
+    which chip flavor serves each pipeline stage -- on a heterogeneous
+    package (pass ``hw``) one model's stages may span flavors, and
+    ``meta["chip_quota"]`` itemizes the per-flavor chips.
 
     Returns ``(MultiModelSchedule, {cfg.name: ShardPlan})``.
     """
@@ -123,13 +144,17 @@ def plan_for_multimodel(
     graphs = [lm_graph(cfg, seq_len, decode=False) for cfg in cfgs]
     # LayerGraph names default to the arch name; keep them aligned to cfgs.
     specs = [ModelSpec(g, w) for g, w in zip(graphs, weights)]
-    hw = tpu_v5e(model_axis, (1, model_axis))
+    if hw is None:
+        hw = tpu_v5e(model_axis, (1, model_axis))
+    elif hw.chips != model_axis:
+        raise ValueError(f"hw has {hw.chips} chips != model_axis {model_axis}")
     cost = FastCostModel(hw, m_samples=max(2, global_batch),
                          distributed_weights=True)
     # Merged interleaving has no GSPMD execution path (one jitted fn serves
     # one config), so the runtime bridge searches partitioned + time-mux.
     mm = co_schedule(specs, hw, m_samples=max(2, global_batch), step=step,
-                     include_merged=False, cost=cost)
+                     include_merged=False, cost=cost,
+                     switch_cost=switch_cost)
     if mm is None:
         return None, {}
     plans: dict[str, ShardPlan] = {}
@@ -147,5 +172,12 @@ def plan_for_multimodel(
             "co_mode": mm.mode,
             "time_share": a.time_share,
         }
-        plans[cfg.name] = _plan_from_transition(cfg, mesh_axes, t_layers, L, meta)
+        if a.chip_type:
+            meta["chip_type"] = a.chip_type
+        if a.chip_quota:
+            meta["chip_quota"] = [[t, c] for t, c in a.chip_quota]
+        plans[cfg.name] = _plan_from_transition(
+            cfg, mesh_axes, t_layers, L, meta,
+            stage_chip_types=schedule_stages(a.schedule),
+        )
     return mm, plans

@@ -43,6 +43,12 @@ class ShardPlan:
     zero: bool = True                     # optimizer state sharded over data too
     shard_kv_cache_time: bool = True      # decode cache sharded over T
     use_dp: bool = True                   # False when batch < dp size (long_500k)
+    # Pipeline stages of the Scope schedule behind this plan, as
+    # (layer_lo, layer_hi, chip_type, region_chips) tuples.  On mixed-flavor
+    # packages consecutive stages may carry different chip types; the
+    # serving executor maps each stage onto its flavor's sub-mesh.  Empty
+    # for plans not derived from a cluster-level schedule.
+    stage_chip_types: tuple[tuple[int, int, str | None, int], ...] = ()
     meta: dict = field(default_factory=dict, hash=False, compare=False)
 
     @property

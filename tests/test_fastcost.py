@@ -15,10 +15,16 @@ from hypothesis import strategies as st
 from repro.core.costmodel import INF, CostModel
 from repro.core.fastcost import FastCostModel
 from repro.core.graph import ClusterAssignment, LayerNode, chain, validate_schedule
-from repro.core.hw import mcm_table_iii
+from repro.core.hw import mcm_hetero, mcm_table_iii
 from repro.core.baselines import schedule_scope, schedule_segmented
 from repro.core.regions import RegionMode
-from repro.core.search import evaluate_segment, search_segment
+from repro.core.search import (
+    evaluate_segment,
+    search,
+    search_mixed,
+    search_segment,
+    search_segment_mixed,
+)
 from repro.core.workloads import get_cnn
 from repro.core.workloads.lm import lm_graph
 from repro.configs import get_smoke_config
@@ -207,6 +213,137 @@ class TestSearchParity:
         sr = schedule_segmented(g, ref, 16)
         sf = schedule_segmented(g, fast, 16)
         assert close(sr.latency, sf.latency)
+
+
+class TestMixedFlavorParity:
+    """Per-cluster chip flavors: seam-aware parity between the engines.
+
+    Adjacent clusters of one segment sit on *different* flavors of a
+    heterogeneous package, so the last-layer boundary term crosses the
+    flavor seam (hw.seam_link_bw) -- exactly the term the extended memo key
+    (next_chip_type) must keep apart.
+    """
+
+    HW = dict(big_fraction=0.5, little_flops_scale=0.4, little_nop_scale=0.6)
+
+    def _mixed_configs(self, g, chips, samples, seed=0):
+        rng = random.Random(seed)
+        for clustering, partitions, regions in random_segment_configs(
+            g, chips, samples, seed
+        ):
+            ctypes = tuple(
+                rng.choice(("big", "little")) for _ in clustering
+            )
+            yield clustering, partitions, regions, ctypes
+
+    def test_mixed_random_configs_fast_vs_reference(self):
+        hw = mcm_hetero(16, **self.HW)
+        g = get_cnn("alexnet")
+        ref = CostModel(hw, m_samples=16)
+        fast = FastCostModel(hw, m_samples=16)
+        n_mixed = 0
+        for clustering, partitions, regions, ctypes in self._mixed_configs(
+            g, 16, 80, seed=23
+        ):
+            lr, tr = evaluate_segment(ref, g, 0, clustering, partitions,
+                                      regions, chip_type=ctypes)
+            lf, tf = evaluate_segment(fast, g, 0, clustering, partitions,
+                                      regions, chip_type=ctypes)
+            assert close(lr, lf), (clustering, partitions, ctypes, lr, lf)
+            for a, b in zip(tr, tf):
+                assert close(a, b)
+            n_mixed += len(set(ctypes)) > 1 and lr < INF
+        assert n_mixed > 5   # genuinely mixed finite configs were exercised
+
+    def test_mixed_memo_vs_fresh(self):
+        """Memoized answers on mixed-flavor segments == a fresh engine's."""
+        hw = mcm_hetero(16, **self.HW)
+        g = get_cnn("alexnet")
+        fast = FastCostModel(hw, m_samples=16)
+        cfgs = list(self._mixed_configs(g, 16, 40, seed=5))
+        first = [
+            evaluate_segment(fast, g, 0, c, p, r, chip_type=t)[0]
+            for c, p, r, t in cfgs
+        ]
+        second = [
+            evaluate_segment(fast, g, 0, c, p, r, chip_type=t)[0]
+            for c, p, r, t in cfgs
+        ]
+        assert first == second
+        fresh = FastCostModel(mcm_hetero(16, **self.HW), m_samples=16)
+        third = [
+            evaluate_segment(fresh, g, 0, c, p, r, chip_type=t)[0]
+            for c, p, r, t in cfgs
+        ]
+        assert first == third
+
+    def test_neighbor_flavor_not_cached_across(self):
+        """The same cluster against a big vs little *neighbor* must be two
+        memo entries (the seam bandwidth differs), and the cross-flavor
+        hand-off must not be faster than the intra-flavor one."""
+        hw = mcm_hetero(16, **self.HW)
+        g = get_cnn("alexnet")
+        fast = FastCostModel(hw, m_samples=16)
+        clustering = ((0, 3), (3, 5))
+        partitions = ("ISP",) * 5
+        lat_same, _ = evaluate_segment(
+            fast, g, 0, clustering, partitions, [8, 8],
+            chip_type=("big", "big"),
+        )
+        computes_same = fast.stats["cluster_computes"]
+        lat_cross, _ = evaluate_segment(
+            fast, g, 0, clustering, partitions, [8, 8],
+            chip_type=("big", "little"),
+        )
+        assert fast.stats["cluster_computes"] > computes_same
+        # seam runs at the weaker (little) link bw and little chips compute
+        # slower, so the mixed variant cannot beat all-big here
+        assert lat_cross >= lat_same
+        # both flavors' seam view agrees with the hardware model
+        assert hw.seam_link_bw("big", "little") == hw.flavor_link_bw("little")
+        assert hw.seam_link_bw("big", "big") == hw.flavor_link_bw("big")
+
+    @pytest.mark.parametrize("mode", [RegionMode.FREE, RegionMode.UNIFORM])
+    def test_search_segment_mixed_reference_parity(self, mode):
+        """The mixed-flavor segment search's winner re-evaluates identically
+        on the reference model, and never loses to the single-flavor search
+        at the same per-flavor budgets -- in both RegionModes."""
+        hw = mcm_hetero(16, **self.HW)
+        g = get_cnn("alexnet")
+        fast = FastCostModel(hw, m_samples=16)
+        budgets = [("big", 8), ("little", 8)]
+        res = search_segment_mixed(fast, g, 0, len(g), budgets, mode=mode)
+        assert res is not None and res.latency < INF
+        ref = CostModel(hw, m_samples=16)
+        lat_ref, times_ref = ref.segment_time(g, res.clusters)
+        assert close(lat_ref, res.latency)
+        for a, b in zip(times_ref, res.cluster_times):
+            assert close(a, b)
+        for ctype, chips in budgets:
+            sr = search_segment(fast, g, 0, len(g), chips, mode=mode,
+                                chip_type=ctype)
+            if sr is not None:
+                assert res.latency <= sr.latency + 1e-12
+
+    def test_search_mixed_dominates_single_flavor(self):
+        hw = mcm_hetero(32, **self.HW)
+        g = get_cnn("resnet18")
+        fast = FastCostModel(hw, m_samples=16)
+        mixed = search_mixed(g, fast)
+        assert mixed is not None
+        for ctype in ("big", "little"):
+            single = search(g, fast, hw.chip_type(ctype).chips,
+                            chip_type=ctype)
+            if single is not None:
+                assert mixed.latency <= single.latency + 1e-12
+        # the full mixed winner also matches the reference model exactly
+        ref = CostModel(hw, m_samples=16)
+        total = sum(ref.segment_time(g, seg.clusters)[0]
+                    for seg in mixed.segments)
+        assert close(total, mixed.latency)
+        validate_schedule(g, mixed, hw.chips,
+                          flavor_caps={t.name: t.chips
+                                       for t in hw.region_types})
 
 
 class TestMemoSoundness:

@@ -25,7 +25,7 @@ from repro.core.graph import (
 )
 from repro.core.hw import ChipType, mcm_hetero, mcm_table_iii, validate_region_types
 from repro.core.regions import rebalance
-from repro.core.search import evaluate_segment, search, search_segment
+from repro.core.search import evaluate_segment, search, search_mixed, search_segment
 from repro.core.workloads import get_cnn
 from repro.multimodel import (
     ModelSpec,
@@ -36,6 +36,7 @@ from repro.multimodel import (
     parse_mix,
     search_merged,
     search_partitioned,
+    search_partitioned_mixed,
     time_multiplexed,
 )
 from repro.multimodel.curves import throughput_curve
@@ -172,6 +173,133 @@ class TestHeteroMemo:
                                                 ChipType("little", 9))})
         with pytest.raises(AssertionError):
             validate_region_types(bad)
+
+
+# ------------------------------------------------------ mixed quotas
+
+class TestMixedQuota:
+    """Mixed-flavor quota splits: one model spanning both chip flavors."""
+
+    def test_mixed_beats_or_matches_single_flavor_brute_force(self):
+        """The mixed-enabled co-schedule on mcm_hetero must be >= the
+        exhaustive *single-flavor* quota assignment (brute force with fresh
+        searches per candidate)."""
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.4)
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 3.0), 2.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        co = co_schedule(specs, hw, cost=cost)   # validates internally
+        lam_bf, _ = brute_force_partitioned(specs, hw, m_samples=16)
+        assert lam_bf > 0
+        assert co.mix_rate >= lam_bf * (1 - 1e-9), (co.mix_rate, lam_bf)
+
+    def test_search_partitioned_mixed_dominates_and_validates(self):
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.5)
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 2.0), 1.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        part = search_partitioned(specs, cost)
+        pm = search_partitioned_mixed(specs, cost)
+        assert pm is not None
+        # the mixed enumeration includes every single-flavor quota split
+        # through the 1D envelopes, so it can only do better
+        assert pm.weighted_throughput >= part.weighted_throughput * (1 - 1e-9)
+        graphs = {s.name: s.graph for s in specs}
+        validate_multimodel(pm, graphs, dict(package_flavors(hw)))
+
+    def test_spanning_wins_when_weights_overflow_one_flavor(self):
+        """A model whose weights overflow either flavor's chips alone: the
+        single-flavor search is forced into sequential segments (one per
+        layer, each re-deployed through DRAM), while the mixed per-cluster
+        flavor search pipelines the whole model across both flavors in one
+        segment -- a strict win."""
+        cap = mcm_table_iii(4).weight_capacity_per_chip
+        layers = [
+            LayerNode(
+                name=f"l{i}", kind="conv", flops=1e9,
+                weight_bytes=1.5 * cap, in_bytes=32e3, out_bytes=24e3,
+                wsp_parallel=28.0, isp_parallel=128.0,
+            )
+            for i in range(2)
+        ]
+        g = chain("fat", layers)
+        # 2 big + 2 little, mildly asymmetric so the little run does not
+        # itself become a worse bottleneck than the sequential re-deploys
+        hw = mcm_hetero(4, big_fraction=0.5,
+                        little_flops_scale=0.9, little_nop_scale=0.9)
+        cost = FastCostModel(hw, m_samples=16)
+        singles = []
+        for ctype in ("big", "little"):
+            s = search(g, cost, 2, chip_type=ctype)
+            assert s is None or s.n_segments == 2   # can't fit one segment
+            if s is not None:
+                singles.append(s.latency)
+        mixed = search_mixed(g, cost)
+        assert mixed is not None and mixed.latency < float("inf")
+        assert mixed.latency < min(singles)         # strictly better
+        assert mixed.n_segments == 1                # one pipelined wave
+        flavors_used = {
+            cl.chip_type for seg in mixed.segments for cl in seg.clusters
+        }
+        assert flavors_used == {"big", "little"}
+        # and the quota layer surfaces it as a spanning assignment
+        co = co_schedule([ModelSpec(g, 1.0)], hw, cost=cost)
+        assert co is not None and co.weighted_throughput > 0
+        a = co.assignments[0]
+        assert a.chip_quota and len([c for _, c in a.chip_quota if c]) == 2
+
+    def test_time_mux_switch_cost_charged(self):
+        hw = mcm_table_iii(16)
+        specs = parse_mix("alexnet:1,resnet18:1")
+        cost = FastCostModel(hw, m_samples=16)
+        free = time_multiplexed(specs, cost)
+        paid = time_multiplexed(specs, cost, switch_cost=True)
+        slow = time_multiplexed(specs, cost, switch_cost=True,
+                                switch_period_s=0.01)
+        assert paid.weighted_throughput < free.weighted_throughput
+        # longer periods amortize the reload: monotone in the period
+        assert paid.weighted_throughput > slow.weighted_throughput
+        # useful shares stay a valid time split
+        assert sum(a.time_share for a in paid.assignments) <= 1.0 + 1e-9
+        graphs = {s.name: s.graph for s in specs}
+        validate_multimodel(paid, graphs, {None: hw.chips})
+
+    def test_grouped_rebalance_conserves_pools(self):
+        """groups= restricts chip moves to within a pool: per-pool totals
+        are invariants of the walk, and the bottleneck pool equalizes."""
+        def eval_fn(alloc):
+            # pool 0 is the 10x-slower flavor, so it owns the bottleneck
+            times = [10.0 / alloc[0], 10.0 / alloc[1],
+                     1.0 / alloc[2], 1.0 / alloc[3]]
+            return max(times), times
+
+        seed = [1, 7, 4, 4]
+        groups = [0, 0, 1, 1]
+        alloc, lat, _ = rebalance(seed, eval_fn, groups=groups)
+        assert alloc[0] + alloc[1] == 8     # pool totals conserved --
+        assert alloc[2] + alloc[3] == 8     # no chip crossed the seam
+        assert alloc[:2] == [4, 4]          # bottleneck pool equalized
+        assert lat == 10.0 / 4
+
+    def test_coarse_to_fine_refine(self):
+        """refine=True fills the argmax neighborhood: the refined coarse
+        curve recovers the exhaustive curve's peak with far fewer points."""
+        hw = mcm_table_iii(16)
+        g = get_cnn("alexnet")
+        cost = FastCostModel(hw, m_samples=16)
+        exact = throughput_curve(cost, g, 16, step=1)
+        coarse = throughput_curve(cost, g, 16, step=4)
+        refined = throughput_curve(cost, g, 16, step=4, refine=True)
+        best = lambda c: max(p.throughput for p in c.points.values())
+        assert len(coarse.points) < len(refined.points) < len(exact.points)
+        assert best(refined) >= best(coarse)
+        assert best(refined) <= best(exact) * (1 + 1e-12)
+        # the peak sits inside the refined argmax window for this curve
+        assert math.isclose(best(refined), best(exact), rel_tol=1e-9)
 
 
 # ----------------------------------------------------------- validation
