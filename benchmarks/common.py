@@ -1,15 +1,15 @@
-"""Shared benchmark utilities: scheduling runs with a JSON result cache."""
+"""Shared benchmark utilities: scheduling runs with a JSON result cache.
+
+All scheduling goes through the solver facade (``repro.scope.solve``); the
+method name maps 1:1 onto a registered strategy (``scope`` / ``segmented``
+/ ``sequential`` / ``full_pipeline`` / ...).
+"""
 from __future__ import annotations
 
 import json
 import os
-import time
 
-from repro.core.costmodel import INF
-from repro.core.fastcost import FastCostModel
-from repro.core.baselines import ALL_METHODS
-from repro.core.hw import mcm_table_iii
-from repro.core.workloads import get_cnn
+from repro import scope
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 M_SAMPLES = 16          # inference batch streamed through the pipeline
@@ -31,22 +31,22 @@ def cached(name: str, fn, refresh: bool = False):
     return out
 
 
+def solve_cnn(net: str, hw, method: str = "scope", **opts) -> scope.Solution:
+    """One facade solve on the default fast engine (exact CostModel parity)."""
+    opts.setdefault("m_samples", M_SAMPLES)
+    return scope.solve(scope.problem(net, hw, strategy=method, **opts))
+
+
 def run_method(net: str, chips: int, method: str) -> dict:
-    g = get_cnn(net)
-    hw = mcm_table_iii(chips)
-    # The vectorized + memoized engine (exact parity with CostModel).
-    cost = FastCostModel(hw, m_samples=M_SAMPLES)
-    t0 = time.time()
-    sched = ALL_METHODS[method](g, cost, chips)
-    dt = time.time() - t0
-    if sched is None or sched.latency == INF:
-        return {"net": net, "chips": chips, "method": method, "valid": False,
-                "search_s": dt}
-    return {
-        "net": net, "chips": chips, "method": method, "valid": True,
-        "latency_s": sched.latency,
-        "throughput": cost.throughput(g, sched.latency),
-        "n_segments": len(sched.segments) or None,
-        "clusters_per_segment": [s.n_clusters for s in sched.segments],
-        "search_s": dt,
-    }
+    sol = solve_cnn(net, f"mcm{chips}", method)
+    row = {"net": net, "chips": chips, "method": method,
+           "valid": sol.feasible, "search_s": sol.diagnostics["dse_s"]}
+    if not sol.feasible:
+        return row
+    row.update(
+        latency_s=sol.latency,
+        throughput=sol.throughput,
+        n_segments=len(sol.schedule.segments) or None,
+        clusters_per_segment=[s.n_clusters for s in sol.schedule.segments],
+    )
+    return row

@@ -10,13 +10,10 @@ from __future__ import annotations
 
 import statistics
 
-from repro.core.fastcost import FastCostModel
-from repro.core.baselines import schedule_scope, schedule_segmented
 from repro.core.energy import schedule_energy
-from repro.core.hw import mcm_table_iii
 from repro.core.workloads import get_cnn
 
-from .common import M_SAMPLES, cached
+from .common import M_SAMPLES, cached, solve_cnn
 
 NET, CHIPS = "resnet152", 256
 
@@ -32,11 +29,16 @@ def _balance(graph, sched):
 
 def run(refresh: bool = False):
     def _go():
+        from repro import scope
+        from repro.core.hw import get_hw
+
         g = get_cnn(NET)
-        hw = mcm_table_iii(CHIPS)
-        cost = FastCostModel(hw, m_samples=M_SAMPLES)
-        seg = schedule_segmented(g, cost, CHIPS)
-        sc = schedule_scope(g, cost, CHIPS)
+        # One engine shared by both solves and the energy accounting.
+        hw = get_hw(f"mcm{CHIPS}")
+        cost = scope.SearchOptions(m_samples=M_SAMPLES).make_cost(hw)
+        seg_sol = solve_cnn(NET, hw, "segmented", cost=cost)
+        sc_sol = solve_cnn(NET, hw, "scope", cost=cost)
+        seg, sc = seg_sol.schedule, sc_sol.schedule
         e_seg = schedule_energy(cost, g, seg)
         e_sc = schedule_energy(cost, g, sc)
         return {

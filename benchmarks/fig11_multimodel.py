@@ -1,32 +1,24 @@
 """Fig. 11 (beyond-paper): multi-model co-scheduling vs static baselines.
 
 For each traffic mix, compares the co-scheduler's weighted throughput (best
-of partitioned quotas / merged pipeline / time-mux, ``repro.multimodel``)
-against the two static baselines: equal chip split and whole-package time
-multiplexing.  The co-scheduler searches a superset of both baseline
-families, so it must be >= each of them on every mix -- asserted here.
+of partitioned quotas / merged pipeline / time-mux, facade strategy
+``coschedule``) against the two static baselines (facade strategies
+``equal-split`` and ``time-mux``).  The co-scheduler searches a superset of
+both baseline families, so it must be >= each of them on every mix --
+asserted here.
 
 The last mixes run on a heterogeneous big/little package (the hetero-chiplet
 extension): quotas are drawn per chip flavor, the engine memo keeps the
 flavors' cluster costs apart, and quotas may *span* flavors (mixed-flavor
 pipelines: ``partitioned:mixed`` in the mode rates).  On hetero rows the
 mixed-enabled co-schedule must be >= the single-flavor partitioned family,
-and every spanning assignment's schedule is re-evaluated on the reference
-CostModel to assert fast/reference parity on mixed-flavor candidates.
+and every winning schedule is re-evaluated on the reference CostModel
+(``Solution.verify_reference``) to assert fast/reference parity on
+mixed-flavor candidates.
 """
 from __future__ import annotations
 
-import time
-
-from repro.core.costmodel import CostModel
-from repro.core.fastcost import FastCostModel
-from repro.core.hw import get_hw
-from repro.multimodel import (
-    co_schedule,
-    equal_split,
-    parse_mix,
-    time_multiplexed,
-)
+from repro import scope
 
 from .common import M_SAMPLES, cached
 
@@ -48,26 +40,25 @@ def _slug(mix: str, hw: str) -> str:
 
 
 def run_mix(mix: str, hw_name: str) -> dict:
-    specs = parse_mix(mix)
-    hw = get_hw(hw_name)
-    cost = FastCostModel(hw, m_samples=M_SAMPLES)
-    t0 = time.time()
-    co = co_schedule(specs, hw, m_samples=M_SAMPLES, cost=cost)
-    co_s = time.time() - t0
+    prob = scope.problem(mix, hw_name, m_samples=M_SAMPLES,
+                         strategy="coschedule")
+    sol = scope.solve(prob)
+    co = sol.multi
     if co is None:
-        return {"mix": mix, "hw": hw_name, "chips": hw.chips,
+        return {"mix": mix, "hw": hw_name, "chips": sol.hw.chips,
                 "co_mode": "infeasible", "co_weighted_throughput": 0.0,
                 "equal_split_weighted_throughput": 0.0,
-                "time_mux_weighted_throughput": 0.0, "co_search_s": co_s}
+                "time_mux_weighted_throughput": 0.0,
+                "co_search_s": sol.diagnostics["dse_s"]}
     row = {
         "mix": mix,
         "hw": hw_name,
-        "chips": hw.chips,
-        "weights": [s.weight for s in specs],
+        "chips": sol.hw.chips,
+        "weights": [m.weight for m in prob.workload.models],
         "co_weighted_throughput": co.weighted_throughput,
         "co_mode": co.mode,
         "co_mix_rate": co.mix_rate,
-        "co_search_s": co_s,
+        "co_search_s": sol.diagnostics["dse_s"],
         "co_assignments": [
             {
                 "model": a.model, "chips": a.chips, "chip_type": a.chip_type,
@@ -77,41 +68,31 @@ def run_mix(mix: str, hw_name: str) -> dict:
             }
             for a in co.assignments
         ],
-        "mode_rates": co.meta["mode_rates"],
-        "engine_stats": co.meta["engine_stats"],
+        "mode_rates": sol.diagnostics["mode_rates"],
+        "engine_stats": sol.diagnostics["engine_stats"],
+        "seam_crossings": sol.diagnostics.get("seam_crossings", {}),
     }
-    if hw.region_types:
+    if sol.hw.region_types:
         # Hetero rows: the mixed-enabled search must not lose to the
         # single-flavor quota family it strictly generalizes...
-        single = co.meta["mode_rates"].get("partitioned", 0.0)
+        single = sol.diagnostics["mode_rates"].get("partitioned", 0.0)
         assert co.weighted_throughput >= single - 1e-9, (mix, hw_name)
         row["single_flavor_partitioned_throughput"] = single
         row["mixed_wins"] = (
-            co.meta["mode_rates"].get("partitioned:mixed", 0.0) > single
+            sol.diagnostics["mode_rates"].get("partitioned:mixed", 0.0)
+            > single
         )
-        # ...and spanning schedules must evaluate identically on the
-        # reference model (fast/reference parity on mixed candidates).
-        ref = CostModel(hw, m_samples=M_SAMPLES)
-        for a in co.assignments:
-            if not a.chip_quota:
-                continue
-            graph = next(s.graph for s in specs if s.name == a.model)
-            lat = sum(
-                ref.segment_time(graph, seg.clusters)[0]
-                for seg in a.schedule.segments
-            )
-            assert abs(lat - a.schedule.latency) <= 1e-9 * lat, (
-                "mixed-flavor parity violated", a.model, lat,
-                a.schedule.latency,
-            )
-            row["mixed_parity_checked"] = True
-    eq = equal_split(specs, cost)
+        # ...and the winning schedules (spanning ones included) must
+        # evaluate identically on the reference model.
+        sol.verify_reference()
+        row["mixed_parity_checked"] = True
+    eq = scope.solve(prob.with_options(strategy="equal-split"))
     row["equal_split_weighted_throughput"] = (
-        eq.weighted_throughput if eq else 0.0
+        eq.weighted_throughput if eq.feasible else 0.0
     )
     # time-mux is one of co_schedule's searched modes: reuse its rate
     # instead of re-running the per-model full-package searches.
-    row["time_mux_weighted_throughput"] = co.meta["mode_rates"].get(
+    row["time_mux_weighted_throughput"] = sol.diagnostics["mode_rates"].get(
         "time_mux", 0.0
     )
     return row

@@ -2,18 +2,17 @@
 
 The paper compares Algorithm 1's result against the full design space
 (exhaustive at the smallest scale) and reports a top-0.05% rank.  We build
-the processing-time histogram from uniform random samples of the space and
-rank Algorithm 1's schedule in it; a small exact exhaustive case checks
-near-optimality directly.
+the processing-time histogram from uniform random samples of the space
+(facade strategy ``random``) and rank Algorithm 1's schedule
+(strategy ``scope``, pinned to one segment like the paper's single-segment
+study) in it; a small exact exhaustive case (strategy ``exhaustive``)
+checks near-optimality directly.
 """
 from __future__ import annotations
 
-import time
-
-from repro.core.fastcost import FastCostModel
+from repro import scope
 from repro.core.graph import chain
 from repro.core.hw import mcm_table_iii
-from repro.core.search import exhaustive_search, random_search, search_segment
 from repro.core.workloads import get_cnn
 
 from .common import M_SAMPLES, cached
@@ -22,35 +21,55 @@ from .common import M_SAMPLES, cached
 def run(refresh: bool = False, samples: int = 50_000):
     def _go():
         g = get_cnn("alexnet")
-        hw = mcm_table_iii(16)
-        cost = FastCostModel(hw, m_samples=M_SAMPLES)
-        t0 = time.time()
-        res = search_segment(cost, g, 0, len(g), 16)
-        alg1_s = time.time() - t0
-        t0 = time.time()
-        pop = random_search(cost, g, 16, samples=samples, seed=0)
-        sample_s = time.time() - t0
-        beaten = sum(1 for s in pop if s < res.latency)
+        # One shared engine: the random sweep reuses the DSE's memo.
+        cost = scope.SearchOptions(m_samples=M_SAMPLES).make_cost(
+            mcm_table_iii(16)
+        )
+        alg1 = scope.solve(
+            workload="alexnet", package="mcm16",
+            options=scope.SearchOptions(
+                strategy="scope", m_samples=M_SAMPLES, cost=cost,
+                segment_counts=(1,),
+            ),
+        )
+        rand = scope.solve(
+            workload="alexnet", package="mcm16",
+            options=scope.SearchOptions(
+                strategy="random", m_samples=M_SAMPLES, cost=cost,
+                samples=samples, seed=0,
+            ),
+        )
+        pop = rand.diagnostics["population"]
+        beaten = sum(1 for s in pop if s < alg1.latency)
         # exact exhaustive check on a reduced case
         sub = chain("alexnet[:4]", g.layers[:4])
-        best = next(exhaustive_search(cost, sub, 6))
-        res_sub = search_segment(cost, sub, 0, 4, 6)
+        sub_opts = dict(m_samples=M_SAMPLES, segment_counts=(1,))
+        best = scope.solve(
+            workload=scope.WorkloadSpec.graphs([sub]),
+            package=mcm_table_iii(16).with_chips(6),
+            options=scope.SearchOptions(strategy="exhaustive", **sub_opts),
+        )
+        res_sub = scope.solve(
+            workload=scope.WorkloadSpec.graphs([sub]),
+            package=mcm_table_iii(16).with_chips(6),
+            options=scope.SearchOptions(strategy="scope", **sub_opts),
+        )
         # histogram (20 bins) of the sampled space
         lo, hi = min(pop), max(pop)
         bins = [0] * 20
         for s in pop:
             bins[min(19, int((s - lo) / (hi - lo + 1e-30) * 20))] += 1
         return {
-            "alg1_latency_s": res.latency,
-            "alg1_search_s": alg1_s,
+            "alg1_latency_s": alg1.latency,
+            "alg1_search_s": alg1.diagnostics["dse_s"],
             "samples": samples,
-            "sample_s": sample_s,
+            "sample_s": rand.diagnostics["dse_s"],
             "rank_fraction": beaten / samples,
             "histogram": {"lo": lo, "hi": hi, "bins": bins},
             "exhaustive_small": {
-                "optimum_s": best[0],
+                "optimum_s": best.latency,
                 "alg1_s": res_sub.latency,
-                "ratio": res_sub.latency / best[0],
+                "ratio": res_sub.latency / best.latency,
             },
         }
 

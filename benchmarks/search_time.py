@@ -1,22 +1,26 @@
 """SSV-B(1) search-cost table: DSE wall time per (net x chips) + space size.
 
 Paper reference point: ResNet-152 x 256 chiplets searched in ~1 hour on a
-laptop CPU over an O(10^164) space.  This PR's FastCostModel (vectorized +
-memoized evaluation engine, fastcost.py) sweeps the same space in seconds;
-the benchmark records
+laptop CPU over an O(10^164) space.  The fast engine (FastCostModel,
+fastcost.py) sweeps the same space in seconds; every sweep goes through the
+solver facade (``repro.scope.solve``, strategy ``scope``) and records
 
 * ``fast_search_s``   -- wall time with FastCostModel (the default engine),
 * ``ref_search_s``    -- wall time of the reference CostModel driving the
                          *same* search code (skipped when projected > budget),
-* ``seed_search_s``   -- the pre-PR seed implementation's measured wall time
-                         (recorded constants; the seed rebalance explored
-                         strictly less: no INF-seed repair, no donor retry),
+* ``seed_search_s``   -- the pre-PR-1 seed implementation's measured wall
+                         time (recorded constants; the seed rebalance
+                         explored strictly less: no INF-seed repair, no
+                         donor retry),
 * engine memo counters and the best-schedule latency, which must be
   identical between engines (asserted here and in tests/test_fastcost.py).
 
-The ``resnet152 x 512`` row is the new larger sweep the seed code was too
-slow to run routinely (projected >= 5 minutes; the fast engine does it in a
-few seconds).
+The ``resnet152 x 512`` row is the larger sweep the seed code was too slow
+to run routinely (projected >= 5 minutes; the fast engine does it in a few
+seconds).  The curve rows time the quota-curve sampling
+(multimodel/curves.py): 1D exhaustive vs coarse-to-fine, and the 2D
+mixed-flavor analogue (``mixed_throughput_curve(refine=True)``) on a
+heterogeneous package.
 
 Results land in ``benchmarks/results/search_time.json`` and are mirrored to
 ``BENCH_search_time.json`` at the repo root for before/after tracking.
@@ -28,11 +32,11 @@ import math
 import os
 import time
 
-from repro.core.costmodel import CostModel
+from repro import scope
 from repro.core.fastcost import FastCostModel
-from repro.core.baselines import schedule_scope
-from repro.core.hw import mcm_table_iii
+from repro.core.hw import get_hw, mcm_table_iii
 from repro.core.workloads import get_cnn
+from repro.multimodel.quota import package_flavors
 
 from .common import M_SAMPLES, cached
 
@@ -43,6 +47,9 @@ LARGE_CASES = [("resnet152", 512)]
 # the coarse-to-fine schedule (coarse grid + step-1 refinement around the
 # argmax) on large packages -- the ROADMAP's ~10x curve-time item.
 CURVE_CASES = [("resnet18", 256, 16), ("resnet18", 512, 16)]
+# 2D analogue on a heterogeneous package: mixed-flavor budget-pair curves,
+# exhaustive vs coarse grid vs coarse + 2D refine pass.
+MIXED_CURVE_CASES = [("resnet18", "mcm16_hetero", 4)]
 # Measured on the seed commit (d44433a) with the same driver and machine
 # class; see CHANGES.md.  Kept as constants so speedup-vs-seed survives the
 # seed implementation no longer being in the tree.
@@ -60,27 +67,29 @@ def q_total(L: int, C: int) -> float:
     return L * math.log10(2) + math.log10(total)
 
 
-def _sweep(net: str, chips: int, engine_cls, batched_seed_fill: bool = True):
-    g = get_cnn(net)
-    cost = engine_cls(mcm_table_iii(chips), m_samples=M_SAMPLES)
+def _sweep(net: str, chips: int, engine: str = "fast",
+           batched_seed_fill: bool = True):
+    """One full Scope DSE through the facade on a chosen engine."""
+    opts = scope.SearchOptions(strategy="scope", m_samples=M_SAMPLES,
+                               engine=engine)
+    cost = opts.make_cost(get_hw(f"mcm{chips}"))
     if hasattr(cost, "batched_seed_fill"):
         cost.batched_seed_fill = batched_seed_fill
-    t0 = time.time()
-    sched = schedule_scope(g, cost, chips)
-    dt = time.time() - t0
-    return dt, sched, cost
+    sol = scope.solve(workload=net, package=f"mcm{chips}",
+                      options=scope.SearchOptions(
+                          strategy="scope", m_samples=M_SAMPLES, cost=cost))
+    return sol.diagnostics["dse_s"], sol.schedule, cost
 
 
 def run(refresh: bool = False):
     def _go():
         rows = []
         for net, chips in CASES:
-            fast_s, sched, fast = _sweep(net, chips, FastCostModel)
+            fast_s, sched, fast = _sweep(net, chips)
             # Same engine without the 2D (k x layer) seed-phase batch fill:
             # isolates that satellite's constant-factor effect.
-            nobatch_s, nb_sched, _ = _sweep(
-                net, chips, FastCostModel, batched_seed_fill=False
-            )
+            nobatch_s, nb_sched, _ = _sweep(net, chips,
+                                            batched_seed_fill=False)
             assert nb_sched.latency == sched.latency, (net, chips)
             row = {
                 "net": net, "chips": chips, "layers": len(get_cnn(net)),
@@ -98,7 +107,7 @@ def run(refresh: bool = False):
             # Unknown seed timing -> assume unaffordable, skip.
             seed_s = row["seed_search_s"]
             if seed_s is not None and seed_s * 5 <= REF_BUDGET_S:
-                ref_s, ref_sched, _ = _sweep(net, chips, CostModel)
+                ref_s, ref_sched, _ = _sweep(net, chips, engine="reference")
                 # Engine contract is 1e-9 rtol (bit-identical in practice).
                 assert math.isclose(
                     ref_sched.latency, sched.latency, rel_tol=1e-9
@@ -110,10 +119,9 @@ def run(refresh: bool = False):
                 row["engine_speedup"] = ref_s / fast_s
             rows.append(row)
         for net, chips in LARGE_CASES:
-            fast_s, sched, fast = _sweep(net, chips, FastCostModel)
-            nobatch_s, nb_sched, _ = _sweep(
-                net, chips, FastCostModel, batched_seed_fill=False
-            )
+            fast_s, sched, fast = _sweep(net, chips)
+            nobatch_s, nb_sched, _ = _sweep(net, chips,
+                                            batched_seed_fill=False)
             assert nb_sched.latency == sched.latency, (net, chips)
             rows.append({
                 "net": net, "chips": chips, "layers": len(get_cnn(net)),
@@ -149,15 +157,52 @@ def run(refresh: bool = False):
                 "curve_peak_match": peak(exact) == peak(refined),
                 "note": "quota-curve sampling: exhaustive vs coarse-to-fine",
             })
+        for net, hw_name, step in MIXED_CURVE_CASES:
+            from repro.multimodel.curves import mixed_throughput_curve
+
+            g = get_cnn(net)
+            hw = get_hw(hw_name)
+            flavors = package_flavors(hw)
+            peak = lambda c: max(
+                (p.throughput for p in c.points.values()), default=0.0
+            )
+
+            def timed(**kw):
+                cost = FastCostModel(hw, m_samples=M_SAMPLES)
+                t0 = time.time()
+                curve = mixed_throughput_curve(cost, g, flavors, **kw)
+                return time.time() - t0, curve
+
+            exact_s, exact = timed(step=1)
+            coarse_s, coarse = timed(step=step)
+            refined_s, refined = timed(step=step, refine=True)
+            rows.append({
+                "net": net, "hw": hw_name, "layers": len(g),
+                "mixed_curve_step": step,
+                "mixed_curve_exhaustive_s": exact_s,
+                "mixed_curve_exhaustive_points": len(exact.points),
+                "mixed_curve_coarse_s": coarse_s,
+                "mixed_curve_coarse_points": len(coarse.points),
+                "mixed_curve_refined_s": refined_s,
+                "mixed_curve_refined_points": len(refined.points),
+                "mixed_curve_peak_coarse": peak(coarse),
+                "mixed_curve_peak_refined": peak(refined),
+                "mixed_curve_peak_exhaustive": peak(exact),
+                "mixed_curve_peak_match": peak(refined) == peak(exact),
+                "note": "2D mixed-flavor budget curves: exhaustive vs "
+                        "coarse vs coarse + 2D refine pass",
+            })
         return rows
 
     rows = cached("search_time", _go, refresh)
     if rows and (
         "no_batched_fill_search_s" not in rows[0]
         or not any("curve_speedup" in r for r in rows)
+        or not any("mixed_curve_step" in r for r in rows)
     ):
         # Stale cache from an older schema (pre-fastcost "search_s"-only
-        # rows, pre-batched-fill rows, or pre-curve rows): redo.
+        # rows, pre-batched-fill rows, pre-curve or pre-mixed-curve rows):
+        # redo.
         rows = cached("search_time", _go, refresh=True)
     with open(ROOT_BENCH, "w") as f:
         json.dump(rows, f, indent=1)
@@ -167,7 +212,7 @@ def run(refresh: bool = False):
 def report(rows) -> list[str]:
     lines = ["net,chips,layers,log10_space,fast_s,ref_s,seed_s,speedup_vs_seed,engine_speedup"]
     for r in rows:
-        if "curve_speedup" in r:
+        if "curve_speedup" in r or "mixed_curve_step" in r:
             continue
         lines.append(
             f"{r['net']},{r['chips']},{r['layers']},"
@@ -186,6 +231,19 @@ def report(rows) -> list[str]:
             f"vs coarse-to-fine {r['curve_refined_s']:.2f}s "
             f"({r['curve_refined_points']} pts), {r['curve_speedup']:.1f}x, "
             f"peak match {r['curve_peak_match']}"
+        )
+    for r in rows:
+        if "mixed_curve_step" not in r:
+            continue
+        lines.append(
+            f"# mixed curve {r['net']}x{r['hw']}: exhaustive "
+            f"{r['mixed_curve_exhaustive_s']:.2f}s "
+            f"({r['mixed_curve_exhaustive_points']} pts) vs coarse "
+            f"{r['mixed_curve_coarse_s']:.2f}s "
+            f"({r['mixed_curve_coarse_points']} pts) vs 2D-refined "
+            f"{r['mixed_curve_refined_s']:.2f}s "
+            f"({r['mixed_curve_refined_points']} pts), peak match "
+            f"{r['mixed_curve_peak_match']}"
         )
     lines.append("# paper: resnet152x256 space O(10^164), search ~1h on i7")
     lines.append("# seed_s measured on the seed commit; the current search "

@@ -1,12 +1,13 @@
 """Multi-model co-scheduling walkthrough: mixed traffic on one MCM package.
 
-Schedules a 3-model mix (weighted traffic) onto a 64-chiplet package with
-the co-scheduler, compares it against the two static baselines, then shows
-the same subsystem on a heterogeneous big/little package -- including
-mixed-flavor quotas, where one model's pipeline spans both flavors -- and
-finally drives a mixed-flavor plan end to end through the runtime bridge
-(``plan_for_multimodel`` -> ``build_multimodel_steps``) on a host-device
-mesh.
+Everything goes through the solver facade (``repro.scope``): schedule a
+3-model mix (weighted traffic) onto a 64-chiplet package
+(``solve`` auto-selects the ``coschedule`` strategy), compare it against
+the two static baselines by switching the strategy, then show the same
+subsystem on a heterogeneous big/little package -- including mixed-flavor
+quotas, where one model's pipeline spans both flavors -- and finally drive
+a mixed-flavor plan end to end through the runtime bridge
+(``Solution.deploy`` -> ``Deployment.build_steps``) on a host-device mesh.
 
     PYTHONPATH=src python examples/multimodel_serve.py
 """
@@ -14,52 +15,43 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from repro.core.fastcost import FastCostModel
-from repro.core.hw import mcm_hetero, mcm_table_iii
-from repro.multimodel import (
-    co_schedule,
-    describe,
-    equal_split,
-    parse_mix,
-    time_multiplexed,
-)
+from repro import scope
 
 # Traffic mix: resnet50 gets 2x the request rate of the small models.
 MIX = "resnet50:2,resnet18:1,alexnet:1"
 
-specs = parse_mix(MIX)
-hw = mcm_table_iii(64)
-cost = FastCostModel(hw, m_samples=16)   # one shared memo for everything
-
-print(f"mix {MIX} on {hw.name}\n")
-co = co_schedule(specs, hw, cost=cost)
-for line in describe(co):
+prob = scope.problem(MIX, "mcm64", m_samples=16)
+print(f"mix {MIX} on mcm64\n")
+co = scope.solve(prob)
+for line in co.describe():
     print(line)
-print(f"  modes searched: { {k: round(v) for k, v in co.meta['mode_rates'].items()} }")
-print(f"  engine stats:   {co.meta['engine_stats']}")
+print(f"  modes searched: "
+      f"{ {k: round(v) for k, v in co.diagnostics['mode_rates'].items()} }")
 
 print("\nstatic baselines:")
-for name, fn in (("equal_split", equal_split), ("time_mux", time_multiplexed)):
-    b = fn(specs, cost)
+for name in ("equal-split", "time-mux"):
+    b = scope.solve(prob.with_options(strategy=name))
     print(f"  {name:12s} {b.weighted_throughput:9.1f} samples/s "
           f"({co.weighted_throughput / b.weighted_throughput:.2f}x behind)")
 
 # --- heterogeneous package: quotas are drawn per chip flavor -------------
 # Mixed-flavor quotas are searched too: a model's pipeline may start on big
 # chips and finish on little ones, crossing the flavor seam
-# (hw.seam_link_bw) exactly once -- look for `quota=AxBig+BxLittle` below.
-hw2 = mcm_hetero(64)    # 32 big + 32 little (half the FLOPs, 3/4 the NoP)
-specs2 = parse_mix("resnet50:4,resnet18:1")
-print(f"\nmix resnet50:4,resnet18:1 on {hw2.name} "
-      f"({', '.join(f'{t.chips}x{t.name}' for t in hw2.region_types)})")
-co2 = co_schedule(specs2, hw2)
-for line in describe(co2):
+# (hw.seam_link_bw) exactly once -- look for `quota=AxBig+BxLittle` below,
+# and the validator's seam accounting in the diagnostics.
+co2 = scope.solve(scope.problem("resnet50:4,resnet18:1", "mcm64_hetero"))
+print(f"\nmix resnet50:4,resnet18:1 on {co2.hw.name} "
+      f"({', '.join(f'{t.chips}x{t.name}' for t in co2.hw.region_types)})")
+for line in co2.describe():
     print(line)
-print(f"  modes searched: { {k: round(v) for k, v in co2.meta['mode_rates'].items()} }")
+print(f"  modes searched: "
+      f"{ {k: round(v) for k, v in co2.diagnostics['mode_rates'].items()} }")
+print(f"  seam crossings per model: {co2.diagnostics['seam_crossings']}")
 
 # --- runtime bridge: a mixed-flavor plan end to end ----------------------
 # Co-schedule two tiny LM configs onto a heterogeneous 8-chip model axis,
-# then build their jitted serving steps on a shared host-device mesh.  Each
+# then build their jitted serving steps on a shared host-device mesh.  The
+# workload carries the ModelConfigs, so solve -> deploy is two lines; each
 # plan records which chip flavor serves which pipeline stage
 # (plan.stage_chip_types); a mixed-flavor assignment itemizes its
 # per-flavor chips in meta["chip_quota"].
@@ -72,8 +64,6 @@ from repro.configs import get_smoke_config
 from repro.core.hw import ChipType, tpu_v5e
 from repro.launch.mesh import make_mesh
 from repro.models import init_params
-from repro.runtime.planner import plan_for_multimodel
-from repro.runtime.serve import build_multimodel_steps
 
 MODEL_AXIS = 8
 hw3 = replace(
@@ -85,19 +75,20 @@ hw3 = replace(
     ),
 )
 cfgs = [get_smoke_config("granite-3-8b"), get_smoke_config("granite-20b")]
-mm, plans = plan_for_multimodel(
-    cfgs, seq_len=64, global_batch=8, mesh_axes=("data", "model"),
-    model_axis=MODEL_AXIS, weights=[2.0, 1.0], hw=hw3,
-)
+sol = scope.solve(scope.problem(
+    scope.WorkloadSpec.lm(cfgs, seq_len=64, weights=[2.0, 1.0]), hw3,
+    m_samples=8, include_merged=False,
+))
+dep = sol.deploy(global_batch=8, mesh_axes=("data", "model"))
 print(f"\nruntime bridge on {hw3.name} (4xbig + 4xlittle):")
-for line in describe(mm):
+for line in sol.describe():
     print(line)
-for name, plan in plans.items():
+for name, plan in dep.plans.items():
     print(f"  {name}: p1={plan.p1} p2={plan.p2} "
           f"stages={[(lo, hi, t, c) for lo, hi, t, c in plan.stage_chip_types]}")
 
 mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
-fleet = build_multimodel_steps(cfgs, mesh, plans, with_decode=False)
+fleet = dep.build_steps(mesh, with_decode=False)
 for cfg in cfgs:
     prefill = fleet[cfg.name]["prefill"]
     params = init_params(cfg, jax.random.PRNGKey(0))

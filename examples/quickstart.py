@@ -1,36 +1,35 @@
 """Quickstart: schedule a network with Scope and inspect the result.
 
-Runs the paper's full DSE (Algorithm 1) for ResNet-50 on a 64-chiplet MCM,
-compares it against the three baseline schedulers, and prints the chosen
-segments / clusters / regions / partitions -- the paper's Table I variables.
+Everything goes through the solver facade (``repro.scope``): build a
+declarative Problem, ``solve()`` it (the paper's full DSE, Algorithm 1),
+compare against the three baseline schedulers by just switching the
+strategy, and print the chosen segments / clusters / regions / partitions
+-- the paper's Table I variables.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import FastCostModel, mcm_table_iii
-from repro.core.baselines import ALL_METHODS
-from repro.core.workloads import get_cnn
+from repro import scope
 
 NET, CHIPS = "resnet50", 64
 
-graph = get_cnn(NET)
-hw = mcm_table_iii(CHIPS)
-cost = FastCostModel(hw, m_samples=16)
-
+prob = scope.problem(NET, f"mcm{CHIPS}")
+graph = prob.workload.graph
 print(f"{NET}: {len(graph)} layers, {graph.total_flops / 1e9:.1f} GFLOPs, "
       f"{graph.total_weight_bytes / 1e6:.1f} MB weights on {CHIPS} chiplets\n")
 
-results = {}
-for name, fn in ALL_METHODS.items():
-    sched = fn(graph, cost, CHIPS)
-    ok = sched is not None and sched.latency != float("inf")
-    results[name] = sched if ok else None
-    tp = cost.throughput(graph, sched.latency) if ok else 0.0
-    print(f"{name:14s} {'%8.3f ms' % (sched.latency * 1e3) if ok else '  invalid'}"
-          f"   {tp:8.1f} samples/s")
+solutions = {}
+for name in ("sequential", "full_pipeline", "segmented", "scope"):
+    sol = scope.solve(prob.with_options(strategy=name))
+    solutions[name] = sol if sol.feasible else None
+    print(f"{name:14s} "
+          f"{'%8.3f ms' % (sol.latency * 1e3) if sol.feasible else '  invalid'}"
+          f"   {sol.throughput:8.1f} samples/s")
 
-scope = results["scope"]
-print(f"\nScope schedule ({scope.meta['n_segments']} segments):")
-for i, seg in enumerate(scope.segments):
+best = solutions["scope"]
+sched = best.schedule
+print(f"\nScope schedule ({sched.meta['n_segments']} segments, "
+      f"searched in {best.diagnostics['dse_s']:.2f}s):")
+for i, seg in enumerate(sched.segments):
     print(f"  segment {i}: {seg.n_clusters} clusters")
     for cl, t in zip(seg.clusters, seg.cluster_times):
         kinds = {p for p in cl.partitions}
@@ -38,5 +37,5 @@ for i, seg in enumerate(scope.segments):
               f"region={cl.region_chips:3d} chips  P={'/'.join(sorted(kinds))}"
               f"  beat={t * 1e6:7.1f} us")
 
-speedup = results["segmented"].latency / scope.latency
+speedup = solutions["segmented"].latency / best.latency
 print(f"\nScope vs segmented pipeline: {speedup:.2f}x")

@@ -1,14 +1,14 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests (minus slow markers) + DSE perf smoke budget.
+# CI entry point: tier-1 tests (minus slow markers) + DSE perf smoke budgets.
 #
 #   ./scripts/ci.sh            # full run
 #   CI_SKIP_PERF=1 ./scripts/ci.sh   # tests only
 #
-# The perf smoke asserts a full Scope DSE on resnet50 x 64 finishes under
-# CI_DSE_BUDGET_S seconds (default 10; the fast engine needs ~0.5s, the
-# pre-PR seed needed ~1.7s and the reference engine ~7s) so an evaluation-
-# engine regression fails loudly instead of silently re-inflating every
-# benchmark.
+# Every smoke goes through the solver facade (repro.scope.solve) -- and the
+# mixed-flavor smoke through the actual `python -m repro solve` CLI -- so
+# the one front door the benchmarks/examples use is itself exercised on
+# every run.  Budgets fail loudly on evaluation-engine regressions instead
+# of silently re-inflating every benchmark.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,25 +21,20 @@ if [ "${CI_SKIP_PERF:-0}" != "1" ]; then
   echo "== multi-model co-scheduling smoke budget =="
   python - <<'PY'
 import os
-import time
 
-from repro.core.fastcost import FastCostModel
-from repro.core.hw import mcm_table_iii
-from repro.multimodel import co_schedule, equal_split, parse_mix, time_multiplexed
+from repro import scope
 
 budget = float(os.environ.get("CI_MULTIMODEL_BUDGET_S", "20"))
-specs = parse_mix("alexnet:1,resnet18:1")
-hw = mcm_table_iii(16)
-cost = FastCostModel(hw, m_samples=16)
-t0 = time.time()
-co = co_schedule(specs, hw, m_samples=16, cost=cost)
-dt = time.time() - t0
-eq = equal_split(specs, cost)
-tm = time_multiplexed(specs, cost)
-stats = cost.stats
-assert None not in (co, eq, tm), "co-schedule/baseline infeasible"
+prob = scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16)
+co = scope.solve(prob)
+eq = scope.solve(prob.with_options(strategy="equal-split"))
+tm = scope.solve(prob.with_options(strategy="time-mux"))
+dt = co.diagnostics["dse_s"]
+stats = co.diagnostics["engine_stats"]
+assert co.feasible and eq.feasible and tm.feasible, "co-schedule/baseline infeasible"
+assert co.strategy == "coschedule", co.strategy   # auto-selected by shape
 print(f"2-model x 16 co-schedule: {dt:.2f}s (budget {budget:.0f}s), "
-      f"mode={co.mode}, weighted tp {co.weighted_throughput:.0f}/s "
+      f"mode={co.multi.mode}, weighted tp {co.weighted_throughput:.0f}/s "
       f"(equal-split {eq.weighted_throughput:.0f}, "
       f"time-mux {tm.weighted_throughput:.0f}), engine {stats}")
 assert co.weighted_throughput > 0, "co-schedule infeasible"
@@ -52,81 +47,76 @@ assert dt <= budget, f"multi-model DSE regression: {dt:.2f}s > {budget:.0f}s"
 
 # full 2-model x 64 mix (the acceptance-scale sweep; exhaustive quota grid)
 budget64 = float(os.environ.get("CI_MULTIMODEL64_BUDGET_S", "60"))
-specs64 = parse_mix("resnet50:1,resnet18:1")
-hw64 = mcm_table_iii(64)
-cost64 = FastCostModel(hw64, m_samples=16)
-t0 = time.time()
-co64 = co_schedule(specs64, hw64, m_samples=16, cost=cost64)
-dt64 = time.time() - t0
-s64 = cost64.stats
+co64 = scope.solve(scope.problem("resnet50:1,resnet18:1", "mcm64", m_samples=16))
+dt64 = co64.diagnostics["dse_s"]
+s64 = co64.diagnostics["engine_stats"]
 print(f"2-model x 64 co-schedule: {dt64:.2f}s (budget {budget64:.0f}s), "
-      f"mode={co64.mode}, weighted tp {co64.weighted_throughput:.0f}/s, "
+      f"mode={co64.multi.mode}, weighted tp {co64.weighted_throughput:.0f}/s, "
       f"engine {s64}")
 assert co64.weighted_throughput > 0
 assert s64["segment_evals"] > 3 * s64["cluster_computes"], s64
 assert dt64 <= budget64, f"x64 multi-model DSE: {dt64:.2f}s > {budget64:.0f}s"
 PY
 
-  echo "== mixed-flavor DSE smoke budget =="
+  echo "== mixed-flavor DSE smoke budget (via the python -m repro solve CLI) =="
   python - <<'PY'
+import json
 import os
+import subprocess
+import sys
 import time
 
-from repro.core.costmodel import CostModel
-from repro.core.fastcost import FastCostModel
-from repro.core.hw import mcm_hetero
-from repro.core.search import search, search_mixed
-from repro.core.workloads import get_cnn
+from repro import scope
 
 budget = float(os.environ.get("CI_MIXED_BUDGET_S", "30"))
-g = get_cnn("resnet50")
-hw = mcm_hetero(64)
-cost = FastCostModel(hw, m_samples=16)
+args = ["--mix", "resnet50", "--hw", "mcm64_hetero", "--m-samples", "16"]
 t0 = time.time()
-singles = {
-    t.name: search(g, cost, t.chips, chip_type=t.name)
-    for t in hw.region_types
-}
-mixed = search_mixed(g, cost)
+out = subprocess.run(
+    [sys.executable, "-m", "repro", "solve", *args, "--json"],
+    capture_output=True, text=True, check=True,
+    env={**os.environ, "PYTHONPATH": "src"},
+)
 dt = time.time() - t0
-assert mixed is not None and mixed.latency < float("inf"), "mixed DSE infeasible"
-finite = [s.latency for s in singles.values() if s is not None]
-assert finite, "both single-flavor searches infeasible"
-best_single = min(finite)
-flavors = sorted({cl.chip_type for seg in mixed.segments for cl in seg.clusters})
-print(f"resnet50 x {hw.name} mixed DSE: {dt:.2f}s (budget {budget:.0f}s), "
-      f"mixed latency {mixed.latency:.6g} vs best single-flavor "
-      f"{best_single:.6g} ({best_single / mixed.latency:.2f}x), "
-      f"flavors used {flavors}, stats {cost.stats}")
+cli = json.loads(out.stdout)
+assert cli["strategy"] == "scope-mixed", cli["strategy"]  # auto-selected
+assert cli["feasible"], "mixed DSE infeasible via CLI"
+
+# Facade parity: the in-process solve must reproduce the CLI bit-exactly.
+# (one shared engine memo across the mixed and single-flavor solves)
+hw = scope.PackageSpec.of("mcm64_hetero").resolve()
+shared = scope.SearchOptions(m_samples=16).make_cost(hw)
+prob = scope.problem("resnet50", "mcm64_hetero", m_samples=16, cost=shared)
+sol = scope.solve(prob)
+assert sol.strategy == "scope-mixed", sol.strategy
+assert sol.latency == cli["latency_s"], (sol.latency, cli["latency_s"])
 # the per-cluster flavor dimension strictly generalizes single-flavor search
-assert mixed.latency <= best_single + 1e-12, "mixed lost to single-flavor"
+single = scope.solve(prob.with_options(strategy="scope"))
+best_single = min(single.diagnostics["per_flavor"].values())
 # fast/reference parity on the mixed-flavor winner
-ref = CostModel(hw, m_samples=16)
-ref_lat = sum(ref.segment_time(g, seg.clusters)[0] for seg in mixed.segments)
-assert abs(ref_lat - mixed.latency) <= 1e-9 * ref_lat, (
-    f"mixed-flavor parity violated: ref {ref_lat} vs fast {mixed.latency}")
+sol.verify_reference()
+flavors = sorted({cl.chip_type for seg in sol.schedule.segments
+                  for cl in seg.clusters})
+print(f"resnet50 x mcm64_hetero mixed DSE via CLI: {dt:.2f}s "
+      f"(budget {budget:.0f}s), mixed latency {sol.latency:.6g} vs best "
+      f"single-flavor {best_single:.6g} ({best_single / sol.latency:.2f}x), "
+      f"flavors used {flavors}, seams {sol.diagnostics['seam_crossings']}, "
+      f"engine {sol.diagnostics['engine_stats']}")
+assert sol.latency <= best_single + 1e-12, "mixed lost to single-flavor"
 assert dt <= budget, f"mixed DSE regression: {dt:.2f}s > {budget:.0f}s"
 PY
 
   echo "== DSE search-time smoke budget =="
   python - <<'PY'
 import os
-import time
 
-from repro.core.fastcost import FastCostModel
-from repro.core.baselines import schedule_scope
-from repro.core.hw import mcm_table_iii
-from repro.core.workloads import get_cnn
+from repro import scope
 
 budget = float(os.environ.get("CI_DSE_BUDGET_S", "10"))
-g = get_cnn("resnet50")
-cost = FastCostModel(mcm_table_iii(64), m_samples=16)
-t0 = time.time()
-sched = schedule_scope(g, cost, 64)
-dt = time.time() - t0
+sol = scope.solve(scope.problem("resnet50", "mcm64", m_samples=16))
+dt = sol.diagnostics["dse_s"]
 print(f"resnet50 x 64 full DSE: {dt:.2f}s (budget {budget:.0f}s), "
-      f"latency {sched.latency:.6g}, stats {cost.stats}")
-assert sched is not None and sched.latency < float("inf"), "DSE found no schedule"
+      f"latency {sol.latency:.6g}, stats {sol.diagnostics['engine_stats']}")
+assert sol.feasible, "DSE found no schedule"
 assert dt <= budget, f"DSE perf regression: {dt:.2f}s > {budget:.0f}s budget"
 PY
 fi

@@ -1,0 +1,37 @@
+"""Scope reproduction: merged-pipeline DSE for multi-chip-module accelerators.
+
+The one front door is :mod:`repro.api`, exported as ``repro.scope``::
+
+    from repro import scope
+
+    solution = scope.solve(scope.problem("resnet50", "mcm64"))
+
+Heavy subpackages (kernels, runtime, models -- which import jax) are NOT
+imported here; everything is loaded lazily so ``import repro`` stays cheap
+and dependency-light.
+"""
+from importlib import import_module
+
+__all__ = ["scope", "api", "solve", "problem", "Problem", "Solution"]
+
+_API_NAMES = {
+    "solve", "problem", "Problem", "Solution", "Deployment",
+    "WorkloadSpec", "PackageSpec", "SearchOptions",
+    "register_strategy", "available_strategies",
+}
+
+
+def __getattr__(name):
+    if name in ("scope", "api"):
+        mod = import_module(".api", __name__)
+        globals()["scope"] = globals()["api"] = mod
+        return mod
+    if name in _API_NAMES:
+        value = getattr(import_module(".api", __name__), name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _API_NAMES | {"scope", "api"})

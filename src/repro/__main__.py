@@ -1,0 +1,138 @@
+"""The ``repro`` CLI: one front door over the Scope solver facade.
+
+    PYTHONPATH=src python -m repro solve --mix resnet50:2,alexnet:1 --hw mcm64
+    PYTHONPATH=src python -m repro solve --mix resnet50 --hw mcm64_hetero --json
+    PYTHONPATH=src python -m repro strategies
+
+``solve`` accepts any preset from ``repro.core.hw`` (``--hw``) and a
+``net[:weight]`` mix (``--mix``); a single-entry mix is a single-model DSE
+(strategy auto-selection picks ``scope`` / ``scope-mixed`` /
+``coschedule`` by problem shape -- override with ``--strategy``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .api import SearchOptions, available_strategies, problem, solve
+
+
+def _build_solve_parser(sub) -> argparse.ArgumentParser:
+    ap = sub.add_parser(
+        "solve", help="run the declarative Scope DSE (Problem -> Solution)",
+        description="Solve a workload x package DSE through repro.scope.",
+    )
+    ap.add_argument("--mix", "--workload", dest="mix", required=True,
+                    help="comma list of net[:weight], e.g. resnet50:2,alexnet:1 "
+                         "(a single entry is a single-model DSE)")
+    ap.add_argument("--hw", default="mcm64", help="hardware preset name")
+    ap.add_argument("--strategy", default="auto",
+                    help=f"one of {', '.join(available_strategies())} "
+                         "(default: auto-select by problem shape)")
+    ap.add_argument("--mode", default="free", choices=("free", "uniform"),
+                    help="region allocation mode (uniform = TPU SPMD)")
+    ap.add_argument("--m-samples", type=int, default=16)
+    ap.add_argument("--engine", default="fast", choices=("fast", "reference"))
+    ap.add_argument("--paper-strict", action="store_true",
+                    help="literal Algorithm 1 rebalance semantics")
+    ap.add_argument("--step", type=int, default=1,
+                    help="quota grid step (1 = exhaustive)")
+    ap.add_argument("--refine", action="store_true",
+                    help="coarse-to-fine curves (1D and mixed 2D): re-sample "
+                         "at step 1 around each coarse argmax")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable mixed-flavor (spanning) quotas / "
+                         "per-cluster flavors on heterogeneous packages")
+    ap.add_argument("--mixed-step", type=int, default=None,
+                    help="budget grid step of the mixed-flavor curves "
+                         "(default: quarter of the smaller flavor)")
+    ap.add_argument("--switch-cost", action="store_true",
+                    help="charge time-mux slices for per-slice weight "
+                         "re-deployment")
+    ap.add_argument("--switch-period-s", type=float, default=1.0)
+    ap.add_argument("--samples", type=int, default=10_000,
+                    help="sample count for --strategy random")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--baselines", action="store_true",
+                    help="also report the equal-split and time-mux baselines")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit a machine-readable JSON summary")
+    return ap
+
+
+def _cmd_solve(args) -> None:
+    options = SearchOptions(
+        strategy=args.strategy,
+        mode=args.mode,
+        m_samples=args.m_samples,
+        engine=args.engine,
+        paper_strict=args.paper_strict,
+        step=args.step,
+        refine=args.refine,
+        mixed=not args.no_mixed,
+        mixed_step=args.mixed_step,
+        switch_cost=args.switch_cost,
+        switch_period_s=args.switch_period_s,
+        samples=args.samples,
+        seed=args.seed,
+    )
+    prob = problem(args.mix, args.hw, options=options)
+    sol = solve(prob)
+    if not sol.feasible and sol.strategy != "random":
+        if args.as_json:
+            print(json.dumps(sol.to_json(), indent=1))
+        raise SystemExit(
+            f"no feasible {sol.strategy} solution for {args.mix} on {args.hw}"
+        )
+
+    if args.as_json:
+        out = sol.to_json()
+        if args.baselines:
+            out["baselines"] = _baseline_rates(prob, sol)
+        print(json.dumps(out, indent=1))
+        return
+
+    for line in sol.describe():
+        print(line)
+    if args.baselines:
+        for name, tp in _baseline_rates(prob, sol).items():
+            if tp is None:
+                print(f"{name}: infeasible")
+            else:
+                ratio = (sol.weighted_throughput / tp) if tp else float("inf")
+                print(f"{name}: weighted throughput {tp:.1f} samples/s "
+                      f"({ratio:.2f}x vs solution)")
+
+
+def _baseline_rates(prob, sol) -> dict:
+    """Weighted throughput of the static baselines, through the facade
+    (sharing nothing with the solution's engine so numbers stay honest)."""
+    out = {}
+    for name in ("equal-split", "time-mux"):
+        b = solve(prob.with_options(strategy=name))
+        out[name] = b.weighted_throughput if b.feasible else None
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="command")
+    _build_solve_parser(sub)
+    sub.add_parser("strategies", help="list registered solver strategies")
+    args = ap.parse_args(argv)
+    if args.command == "solve":
+        _cmd_solve(args)
+    elif args.command == "strategies":
+        for name in available_strategies():
+            print(name)
+    else:
+        ap.print_help()
+        sys.exit(2)
+
+
+if __name__ == "__main__":
+    main()

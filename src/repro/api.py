@@ -1,0 +1,825 @@
+"""One front door for the Scope DSE: ``Problem -> solve() -> Solution``.
+
+Three PRs of growth left the entry points sprawled across
+``core.search`` (``search`` / ``search_mixed`` / ``exhaustive_search`` /
+``random_search``), ``core.baselines`` (the paper's three comparison
+schedulers), ``multimodel`` (``co_schedule``, quota/curve searches, the two
+static baselines) and the runtime bridge (``plan_for_cell`` /
+``plan_for_multimodel``), each with its own kwarg dialect.  This module is
+the single declarative facade the benchmarks, CLI, examples and CI all go
+through -- the same shape the multi-tenant DSE literature (SCAR, Odema et
+al.) exposes: one scheduler front end over many underlying strategies.
+
+The model::
+
+    from repro import scope
+
+    problem  = scope.problem("resnet50", "mcm64_hetero")
+    solution = scope.solve(problem)          # auto-picks the strategy
+    print(solution.latency, solution.strategy, solution.diagnostics["dse_s"])
+
+* :class:`WorkloadSpec` -- one or N ``(LayerGraph, traffic_weight)`` models
+  (CNN registry names, a ``"net:w,net:w"`` mix string, raw graphs, or LM
+  configs via :meth:`WorkloadSpec.lm`).
+* :class:`PackageSpec` -- a hardware preset name or a
+  :class:`~repro.core.hw.HardwareModel`, plus optional per-flavor chip caps
+  and seam-model overrides.
+* :class:`SearchOptions` -- strategy selection and every search knob
+  (``mode``, ``paper_strict``, quota ``step``, mixed/refine/switch-cost,
+  engine choice) in one place, with the legacy defaults.
+* :func:`solve` -- dispatches through the strategy registry
+  (``scope``, ``scope-mixed``, ``coschedule``, ``exhaustive``, ``random``,
+  the paper baselines, ``equal-split``, ``time-mux``), auto-selecting by
+  problem shape: 1 model x 1 flavor -> ``scope``; 1 model x N flavors ->
+  ``scope-mixed``; N models -> ``coschedule``.  Every sub-search of one
+  ``solve`` shares a single :class:`~repro.core.fastcost.FastCostModel`
+  memo.
+* :class:`Solution` -- the unified result: the schedule(s), per-strategy
+  diagnostics (``dse_s``, engine stats, candidates, seam crossings), and
+  the :meth:`Solution.deploy` bridge into the runtime
+  (``plan_for_cell`` / ``plan_for_multimodel`` -> :class:`Deployment` ->
+  ``build_multimodel_steps``).
+
+Every legacy entry point remains importable and bit-identical -- the
+strategies here are thin delegating wrappers over them (see the mapping
+table in README.md).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+from .core.baselines import (
+    schedule_full_pipeline,
+    schedule_segmented,
+    schedule_sequential,
+)
+from .core.costmodel import INF, CostModel
+from .core.fastcost import FastCostModel
+from .core.graph import (
+    LayerGraph,
+    MultiModelSchedule,
+    ScopeSchedule,
+    SegmentSchedule,
+    validate_multimodel,
+    validate_schedule,
+)
+from .core.hw import HardwareModel, get_hw, validate_region_types
+from .core.regions import RegionMode
+from .core.search import (
+    build_clusters,
+    exhaustive_search,
+    random_search,
+    search,
+    search_mixed,
+)
+from .core.workloads import get_cnn
+from .multimodel.baselines import equal_split, time_multiplexed
+from .multimodel.coschedule import co_schedule
+from .multimodel.interleave import merged_graph
+from .multimodel.quota import package_flavors
+from .multimodel.spec import ModelSpec, parse_mix
+
+__all__ = [
+    "Deployment",
+    "PackageSpec",
+    "Problem",
+    "SearchOptions",
+    "Solution",
+    "WorkloadSpec",
+    "available_strategies",
+    "problem",
+    "register_strategy",
+    "solve",
+]
+
+
+# ---------------------------------------------------------------------------
+# Problem model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """What to schedule: one or N ``(LayerGraph, traffic_weight)`` models.
+
+    ``cfgs``/``seq_len`` are carried when the workload was exported from LM
+    :class:`~repro.models.config.ModelConfig` objects
+    (:meth:`WorkloadSpec.lm`), so :meth:`Solution.deploy` can derive
+    runtime ShardPlans without re-stating them.
+    """
+    models: tuple[ModelSpec, ...]
+    cfgs: tuple = ()                 # optional ModelConfigs aligned to models
+    seq_len: int | None = None
+
+    def __post_init__(self):
+        if not self.models:
+            raise ValueError("empty workload")
+        names = [m.name for m in self.models]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate model names in workload: {names}")
+
+    @property
+    def n_models(self) -> int:
+        return len(self.models)
+
+    @property
+    def graph(self) -> LayerGraph:
+        if self.n_models != 1:
+            raise ValueError(
+                f"{self.n_models}-model workload has no single graph"
+            )
+        return self.models[0].graph
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def cnn(cls, name: str, weight: float = 1.0) -> "WorkloadSpec":
+        """One CNN from the workload registry (``"resnet50"``...)."""
+        return cls(models=(ModelSpec(get_cnn(name), weight),))
+
+    @classmethod
+    def mix(cls, mix: str) -> "WorkloadSpec":
+        """A traffic mix string: ``"resnet50:2,alexnet:1"``."""
+        return cls(models=tuple(parse_mix(mix)))
+
+    @classmethod
+    def graphs(cls, entries) -> "WorkloadSpec":
+        """Raw ``LayerGraph`` | ``(LayerGraph, weight)`` | ``ModelSpec``."""
+        models = []
+        for e in entries:
+            if isinstance(e, ModelSpec):
+                models.append(e)
+            elif isinstance(e, LayerGraph):
+                models.append(ModelSpec(e, 1.0))
+            else:
+                g, w = e
+                models.append(ModelSpec(g, w))
+        return cls(models=tuple(models))
+
+    @classmethod
+    def lm(cls, cfgs, seq_len: int, weights=None) -> "WorkloadSpec":
+        """LM configs -> exported layer graphs (``lm_graph``), keeping the
+        configs attached for :meth:`Solution.deploy`."""
+        from .core.workloads.lm import lm_graph
+
+        cfgs = tuple(cfgs)
+        weights = list(weights) if weights else [1.0] * len(cfgs)
+        if len(weights) != len(cfgs):
+            raise ValueError(f"{len(weights)} weights for {len(cfgs)} configs")
+        models = tuple(
+            ModelSpec(lm_graph(cfg, seq_len, decode=False), w)
+            for cfg, w in zip(cfgs, weights)
+        )
+        return cls(models=models, cfgs=cfgs, seq_len=seq_len)
+
+    @classmethod
+    def of(cls, workload) -> "WorkloadSpec":
+        """Coerce: WorkloadSpec | graph(s) | ModelSpec(s) | name/mix string."""
+        if isinstance(workload, cls):
+            return workload
+        if isinstance(workload, str):
+            return cls.mix(workload)
+        if isinstance(workload, (LayerGraph, ModelSpec)):
+            return cls.graphs([workload])
+        return cls.graphs(workload)
+
+
+@dataclass(frozen=True)
+class PackageSpec:
+    """Where to schedule: a preset name or an explicit HardwareModel.
+
+    ``flavor_caps`` restricts how many chips of each flavor a (mixed)
+    search may use -- ``((flavor, chips), ...)`` partial budgets, the same
+    convention as ``search_mixed(flavor_budgets=...)``.  ``seam_bw_scale``
+    / ``seam_bw_overrides`` override the package's cross-flavor seam model
+    without rebuilding the HardwareModel by hand.
+    """
+    preset: str | None = None
+    hw: HardwareModel | None = None
+    flavor_caps: tuple[tuple[str | None, int], ...] | None = None
+    seam_bw_scale: float | None = None
+    seam_bw_overrides: tuple[tuple[str, str, float], ...] | None = None
+
+    def __post_init__(self):
+        if (self.preset is None) == (self.hw is None):
+            raise ValueError("specify exactly one of preset / hw")
+
+    def resolve(self) -> HardwareModel:
+        hw = self.hw if self.hw is not None else get_hw(self.preset)
+        if self.seam_bw_scale is not None:
+            hw = replace(hw, seam_bw_scale=self.seam_bw_scale)
+        if self.seam_bw_overrides is not None:
+            hw = replace(hw, seam_bw_overrides=tuple(self.seam_bw_overrides))
+        validate_region_types(hw)
+        return hw
+
+    @classmethod
+    def of(cls, package) -> "PackageSpec":
+        if isinstance(package, cls):
+            return package
+        if isinstance(package, str):
+            return cls(preset=package)
+        if isinstance(package, HardwareModel):
+            return cls(hw=package)
+        raise TypeError(f"cannot interpret package spec: {package!r}")
+
+
+@dataclass(frozen=True)
+class SearchOptions:
+    """Every search knob, with the legacy entry points' defaults."""
+    strategy: str = "auto"
+    mode: RegionMode | str = RegionMode.FREE
+    m_samples: int = 16
+    paper_strict: bool = False
+    ep_for_moe: bool = False
+    segment_counts: tuple[int, ...] | None = None
+    max_clusters: int | None = None
+    chip_type: str | None = None     # pin a single-flavor search to one flavor
+    # multi-model / quota search
+    step: int = 1
+    mixed: bool = True               # spanning quotas / per-cluster flavors
+    mixed_step: int | None = None
+    refine: bool = False             # coarse-to-fine curves (1D and 2D)
+    cut_window: int = 2
+    include_merged: bool = True
+    include_time_mux: bool = True
+    switch_cost: bool = False
+    switch_period_s: float = 1.0
+    # validation searches
+    samples: int = 10_000
+    seed: int = 0
+    # evaluation engine
+    engine: str = "fast"             # "fast" (FastCostModel) | "reference"
+    distributed_weights: bool = True
+    cost: Any = None                 # pre-built CostModel: shared memo across solves
+    validate: bool = True
+
+    @property
+    def region_mode(self) -> RegionMode:
+        if isinstance(self.mode, RegionMode):
+            return self.mode
+        return RegionMode(self.mode)
+
+    def make_cost(self, hw: HardwareModel) -> CostModel:
+        if self.cost is not None:
+            return self.cost
+        cls = {"fast": FastCostModel, "reference": CostModel}[self.engine]
+        return cls(hw, m_samples=self.m_samples,
+                   distributed_weights=self.distributed_weights)
+
+
+@dataclass(frozen=True)
+class Problem:
+    """A declarative DSE problem: workload x package x options."""
+    workload: WorkloadSpec
+    package: PackageSpec
+    options: SearchOptions = SearchOptions()
+
+    def with_options(self, **overrides) -> "Problem":
+        """Same problem, some SearchOptions fields overridden (e.g.
+        ``prob.with_options(strategy="time-mux")``)."""
+        return replace(self, options=replace(self.options, **overrides))
+
+
+def problem(workload, package, options: SearchOptions | None = None,
+            **opts) -> Problem:
+    """Build a :class:`Problem` from loose pieces.
+
+    ``workload``: WorkloadSpec | name/mix string | LayerGraph(s) | ModelSpec(s).
+    ``package``: PackageSpec | preset name | HardwareModel.
+    ``**opts``: SearchOptions field overrides (exclusive with ``options``).
+    """
+    if options is not None and opts:
+        raise ValueError("pass options= or keyword overrides, not both")
+    return Problem(
+        workload=WorkloadSpec.of(workload),
+        package=PackageSpec.of(package),
+        options=options if options is not None else SearchOptions(**opts),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Solution / Deployment
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Solution:
+    """Unified result of :func:`solve`.
+
+    Exactly one of ``schedule`` (single-model strategies) / ``multi``
+    (multi-model strategies) is set, except for sampling strategies
+    (``random``) which only fill ``diagnostics``.  ``diagnostics`` always
+    carries ``dse_s`` and ``engine_stats``; strategy-specific keys include
+    ``mode_rates`` / ``mixed_fallback`` (coschedule), ``per_flavor``
+    (scope on a heterogeneous package), ``population`` (random) and
+    ``seam_crossings`` (filled by validation).
+    """
+    problem: Problem
+    strategy: str
+    hw: HardwareModel
+    schedule: ScopeSchedule | None = None
+    multi: MultiModelSchedule | None = None
+    diagnostics: dict = field(default_factory=dict)
+
+    # ----------------------------------------------------------- accessors
+    @property
+    def feasible(self) -> bool:
+        if self.schedule is not None:
+            return self.schedule.latency < INF
+        if self.multi is not None:
+            return self.multi.weighted_throughput > 0
+        return False
+
+    @property
+    def latency(self) -> float:
+        """End-to-end batch latency (single-model solutions)."""
+        if self.schedule is None:
+            raise ValueError(f"strategy {self.strategy!r} has no single schedule")
+        return self.schedule.latency
+
+    @property
+    def throughput(self) -> float:
+        """Samples/s (single-model: m / latency; multi-model: weighted)."""
+        if self.schedule is not None:
+            lat = self.schedule.latency
+            m = self.diagnostics.get("m_samples",
+                                     self.problem.options.m_samples)
+            return 0.0 if (lat <= 0 or lat == INF) else m / lat
+        if self.multi is not None:
+            return self.multi.weighted_throughput
+        return 0.0
+
+    @property
+    def weighted_throughput(self) -> float:
+        if self.multi is not None:
+            return self.multi.weighted_throughput
+        return self.throughput
+
+    @property
+    def n_segments(self) -> int | None:
+        return len(self.schedule.segments) if self.schedule else None
+
+    # ---------------------------------------------------------- validation
+    def validate(self) -> dict:
+        """Run the schedule validators; returns (and stashes) the seam
+        report (``{"seam_crossings": ...}``, see ``validate_schedule``)."""
+        flavors = dict(package_flavors(self.hw))
+        report: dict = {}
+        if self.multi is not None:
+            graphs = {m.name: m.graph for m in self.problem.workload.models}
+            if self.multi.mode == "merged":
+                mg, _ = merged_graph(list(self.problem.workload.models))
+                graphs[mg.name] = mg
+            report = validate_multimodel(self.multi, graphs, flavors)
+        elif (self.schedule is not None and self.schedule.latency < INF
+              and self.schedule.segments):
+            # (the sequential baseline is segment-free: nothing to validate)
+            caps = flavors if self.hw.region_types else None
+            report = validate_schedule(
+                self.problem.workload.graph, self.schedule,
+                self.schedule.chips, flavor_caps=caps,
+            )
+        if "seam_crossings" in report:
+            self.diagnostics["seam_crossings"] = report["seam_crossings"]
+        return report
+
+    # ------------------------------------------------------------- runtime
+    def verify_reference(self, rtol: float = 1e-9) -> float:
+        """Re-evaluate the winning schedule(s) on a fresh reference
+        :class:`CostModel` and assert engine parity; returns the reference
+        latency (single-model) or 0.0 (nothing to check)."""
+        opts = self.problem.options
+        ref = CostModel(self.hw, m_samples=opts.m_samples,
+                        distributed_weights=opts.distributed_weights)
+        total = 0.0
+        scheds = []
+        if self.schedule is not None and self.schedule.latency < INF:
+            scheds.append((self.problem.workload.graph, self.schedule))
+        if self.multi is not None:
+            graphs = {m.name: m.graph for m in self.problem.workload.models}
+            if self.multi.mode == "merged":
+                mg, _ = merged_graph(list(self.problem.workload.models))
+                graphs[mg.name] = mg
+            for a in self.multi.assignments:
+                scheds.append((graphs[a.schedule.workload], a.schedule))
+        for graph, sched in scheds:
+            lat = sum(
+                ref.segment_time(graph, seg.clusters)[0]
+                for seg in sched.segments
+            )
+            assert abs(lat - sched.latency) <= rtol * max(lat, 1e-30), (
+                "engine parity violated", sched.workload, lat, sched.latency,
+            )
+            total += lat
+        return total
+
+    def deploy(
+        self,
+        cfgs=None,
+        *,
+        seq_len: int | None = None,
+        global_batch: int = 8,
+        mesh_axes: tuple[str, ...] = ("data", "model"),
+        kind: str = "train",
+        step: int = 1,
+        switch_cost: bool = False,
+    ) -> "Deployment":
+        """Bridge into the runtime: derive per-model ShardPlans.
+
+        One config -> ``plan_for_cell``; N configs ->
+        ``plan_for_multimodel`` (reusing this solution's co-schedule when
+        its model names match, so solve-then-deploy never searches twice).
+        ``cfgs``/``seq_len`` default to the ones the workload was built
+        from (:meth:`WorkloadSpec.lm`).
+        """
+        from .runtime.planner import plan_for_cell, plan_for_multimodel
+
+        cfgs = tuple(cfgs) if cfgs is not None else self.problem.workload.cfgs
+        if not cfgs:
+            raise ValueError(
+                "deploy needs ModelConfigs: pass cfgs= or build the workload "
+                "with WorkloadSpec.lm(...)"
+            )
+        seq_len = seq_len or self.problem.workload.seq_len
+        if seq_len is None:
+            raise ValueError("deploy needs seq_len= (or WorkloadSpec.lm)")
+        if len(cfgs) == 1:
+            plan = plan_for_cell(
+                cfgs[0], seq_len, global_batch, mesh_axes,
+                model_axis=self.hw.chips, kind=kind,
+            )
+            return Deployment(cfgs=cfgs, plans={cfgs[0].name: plan},
+                              multi=None, mesh_axes=mesh_axes)
+        wl = self.problem.workload
+        mm = self.multi
+        # Only reuse the solved co-schedule when it was built from these
+        # exact configs at this seq_len (lm-graph names embed both).  A
+        # merged-mode schedule spans the *concatenated* graph and has no
+        # per-model GSPMD execution path: let the planner re-search without
+        # the merged family instead of deriving bogus per-model plans.
+        if mm is not None and (
+            mm.mode == "merged"
+            or seq_len != wl.seq_len
+            or len(wl.cfgs) != len(cfgs)
+            or any(a.name != b.name for a, b in zip(wl.cfgs, cfgs))
+        ):
+            mm = None        # solution doesn't cover these configs: re-plan
+        mm, plans = plan_for_multimodel(
+            list(cfgs), seq_len, global_batch, mesh_axes,
+            model_axis=self.hw.chips,
+            weights=[m.weight for m in self.problem.workload.models],
+            step=step, hw=self.hw, switch_cost=switch_cost, mm=mm,
+        )
+        return Deployment(cfgs=cfgs, plans=plans, multi=mm,
+                          mesh_axes=mesh_axes)
+
+    # ------------------------------------------------------------- display
+    def describe(self) -> list[str]:
+        """Human-readable summary lines (CLI / examples)."""
+        lines = []
+        if self.multi is not None:
+            from .multimodel.coschedule import describe as _describe_mm
+
+            lines += _describe_mm(self.multi)
+        elif self.schedule is not None and self.feasible:
+            s = self.schedule
+            lines.append(
+                f"{s.workload} on {self.hw.name}: latency {s.latency:.6g}s, "
+                f"{self.throughput:.1f} samples/s, "
+                f"{len(s.segments)} segment(s) [{self.strategy}]"
+            )
+            for i, seg in enumerate(s.segments):
+                for cl in seg.clusters:
+                    flavor = f" type={cl.chip_type}" if cl.chip_type else ""
+                    kinds = "/".join(sorted(set(cl.partitions)))
+                    lines.append(
+                        f"  seg{i} layers[{cl.layer_lo}:{cl.layer_hi}] "
+                        f"region={cl.region_chips}{flavor} P={kinds}"
+                    )
+        else:
+            lines.append(f"[{self.strategy}] infeasible on {self.hw.name}")
+        if "dse_s" in self.diagnostics:
+            lines.append(f"  searched in {self.diagnostics['dse_s']:.2f}s; "
+                         f"engine {self.diagnostics.get('engine_stats', {})}")
+        return lines
+
+    def to_json(self) -> dict:
+        """JSON-serializable summary (the CLI's ``--json`` payload)."""
+        out = {
+            "strategy": self.strategy,
+            "hw": self.hw.name,
+            "chips": self.hw.chips,
+            "feasible": self.feasible,
+            "dse_s": self.diagnostics.get("dse_s"),
+            "engine_stats": self.diagnostics.get("engine_stats", {}),
+        }
+        for key in ("seam_crossings", "mixed_fallback", "mode_rates"):
+            if key in self.diagnostics:
+                out[key] = self.diagnostics[key]
+        if self.schedule is not None:
+            out.update(
+                latency_s=self.schedule.latency,
+                throughput=self.throughput,
+                n_segments=self.n_segments,
+                clusters_per_segment=[
+                    s.n_clusters for s in self.schedule.segments
+                ],
+            )
+        if self.multi is not None:
+            out.update(
+                mode=self.multi.mode,
+                mix_rate=self.multi.mix_rate,
+                weighted_throughput=self.multi.weighted_throughput,
+                assignments=[
+                    {
+                        "model": a.model, "weight": a.weight,
+                        "chips": a.chips, "chip_type": a.chip_type,
+                        "chip_quota": [[t, c] for t, c in a.chip_quota],
+                        "throughput": a.throughput,
+                        "time_share": a.time_share,
+                        "samples_per_beat": a.samples_per_beat,
+                    }
+                    for a in self.multi.assignments
+                ],
+            )
+        if "population" in self.diagnostics:
+            pop = self.diagnostics["population"]
+            out["samples"] = len(pop)
+            out["best_sampled_s"] = min(pop) if pop else None
+        return out
+
+
+@dataclass
+class Deployment:
+    """Runtime-facing view of a solution: per-model ShardPlans.
+
+    ``build_steps`` jits the serving steps on a mesh
+    (:func:`repro.runtime.serve.build_multimodel_steps`).
+    """
+    cfgs: tuple
+    plans: dict
+    multi: MultiModelSchedule | None
+    mesh_axes: tuple[str, ...]
+
+    def plan(self, name: str):
+        return self.plans[name]
+
+    def build_steps(self, mesh, batch: int | None = None,
+                    max_len: int | None = None, with_decode: bool = True):
+        from .runtime.serve import build_multimodel_steps
+
+        return build_multimodel_steps(
+            list(self.cfgs), mesh, self.plans,
+            batch=batch, max_len=max_len, with_decode=with_decode,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+_STRATEGIES: dict[str, Callable[[Problem, HardwareModel, CostModel], Solution]] = {}
+
+
+def register_strategy(name: str):
+    """Register ``fn(problem, hw, cost) -> Solution`` under ``name``."""
+    def deco(fn):
+        _STRATEGIES[name] = fn
+        return fn
+    return deco
+
+
+def available_strategies() -> list[str]:
+    return sorted(_STRATEGIES)
+
+
+def _lookup(name: str) -> tuple[str, Callable]:
+    for cand in (name, name.replace("_", "-"), name.replace("-", "_")):
+        if cand in _STRATEGIES:
+            return cand, _STRATEGIES[cand]
+    raise KeyError(
+        f"unknown strategy {name!r}; available: {available_strategies()}"
+    )
+
+
+def _auto_strategy(prob: Problem, hw: HardwareModel) -> str:
+    """1 model x 1 flavor -> scope; 1 model x N flavors -> scope-mixed;
+    N models -> coschedule."""
+    if prob.workload.n_models > 1:
+        return "coschedule"
+    if len(hw.region_types) > 1 and prob.options.mixed:
+        return "scope-mixed"
+    return "scope"
+
+
+def _single_graph(prob: Problem, strategy: str) -> LayerGraph:
+    if prob.workload.n_models != 1:
+        raise ValueError(
+            f"strategy {strategy!r} schedules a single model; this workload "
+            f"has {prob.workload.n_models} (use strategy='coschedule')"
+        )
+    return prob.workload.graph
+
+
+def _flavor_budgets(prob: Problem, hw: HardwareModel):
+    if prob.package.flavor_caps is not None:
+        return [list(t) for t in prob.package.flavor_caps]
+    return None
+
+
+@register_strategy("scope")
+def _solve_scope(prob: Problem, hw: HardwareModel, cost: CostModel) -> Solution:
+    """Paper Algorithm 1 (``core.search.search``).  On a heterogeneous
+    package: the best *single-flavor* schedule across flavors (pin one with
+    ``options.chip_type``)."""
+    g = _single_graph(prob, "scope")
+    o = prob.options
+    kw = dict(mode=o.region_mode, ep_for_moe=o.ep_for_moe,
+              segment_counts=list(o.segment_counts) if o.segment_counts else None,
+              max_clusters=o.max_clusters, paper_strict=o.paper_strict)
+    diagnostics: dict = {}
+    if not hw.region_types or o.chip_type is not None:
+        chips = hw.chips if o.chip_type is None else hw.chip_type(o.chip_type).chips
+        sched = search(g, cost, chips, chip_type=o.chip_type, **kw)
+    else:
+        sched, per_flavor = None, {}
+        budgets = _flavor_budgets(prob, hw) or package_flavors(hw)
+        for ctype, cap in budgets:
+            s = search(g, cost, cap, chip_type=ctype, **kw)
+            per_flavor[ctype] = s.latency if s is not None else INF
+            if s is not None and (sched is None or s.latency < sched.latency):
+                sched = s
+        diagnostics["per_flavor"] = per_flavor
+    return Solution(problem=prob, strategy="scope", hw=hw, schedule=sched,
+                    diagnostics=diagnostics)
+
+
+@register_strategy("scope-mixed")
+def _solve_scope_mixed(prob: Problem, hw: HardwareModel,
+                       cost: CostModel) -> Solution:
+    """Mixed-flavor DSE (``core.search.search_mixed``): per-cluster chip
+    flavors under per-flavor budgets; never worse than the best single
+    flavor."""
+    g = _single_graph(prob, "scope-mixed")
+    o = prob.options
+    sched = search_mixed(
+        g, cost, flavor_budgets=_flavor_budgets(prob, hw),
+        mode=o.region_mode, ep_for_moe=o.ep_for_moe,
+        segment_counts=list(o.segment_counts) if o.segment_counts else None,
+        max_clusters=o.max_clusters, paper_strict=o.paper_strict,
+        cut_window=o.cut_window,
+    )
+    return Solution(problem=prob, strategy="scope-mixed", hw=hw,
+                    schedule=sched)
+
+
+@register_strategy("coschedule")
+def _solve_coschedule(prob: Problem, hw: HardwareModel,
+                      cost: CostModel) -> Solution:
+    """Multi-model co-scheduling (``multimodel.co_schedule``): best of
+    partitioned / spanning / merged / time-mux for N >= 1 models."""
+    o = prob.options
+    mm = co_schedule(
+        list(prob.workload.models), hw, m_samples=o.m_samples, step=o.step,
+        include_merged=o.include_merged, include_time_mux=o.include_time_mux,
+        include_mixed=o.mixed, paper_strict=o.paper_strict, cost=cost,
+        validate=False,                 # solve() validates and keeps the report
+        curve_refine=o.refine, mixed_step=o.mixed_step,
+        switch_cost=o.switch_cost, switch_period_s=o.switch_period_s,
+    )
+    diagnostics: dict = {}
+    if mm is not None:
+        for key in ("mode_rates", "mixed_fallback"):
+            if key in mm.meta:
+                diagnostics[key] = mm.meta[key]
+    return Solution(problem=prob, strategy="coschedule", hw=hw, multi=mm,
+                    diagnostics=diagnostics)
+
+
+@register_strategy("sequential")
+def _solve_sequential(prob, hw, cost) -> Solution:
+    g = _single_graph(prob, "sequential")
+    sched = schedule_sequential(g, cost, hw.chips)
+    return Solution(problem=prob, strategy="sequential", hw=hw, schedule=sched)
+
+
+@register_strategy("full_pipeline")
+def _solve_full_pipeline(prob, hw, cost) -> Solution:
+    g = _single_graph(prob, "full_pipeline")
+    sched = schedule_full_pipeline(g, cost, hw.chips)
+    return Solution(problem=prob, strategy="full_pipeline", hw=hw,
+                    schedule=sched)
+
+
+@register_strategy("segmented")
+def _solve_segmented(prob, hw, cost) -> Solution:
+    g = _single_graph(prob, "segmented")
+    o = prob.options
+    sched = schedule_segmented(
+        g, cost, hw.chips,
+        segment_counts=list(o.segment_counts) if o.segment_counts else None,
+    )
+    return Solution(problem=prob, strategy="segmented", hw=hw, schedule=sched)
+
+
+@register_strategy("equal-split")
+def _solve_equal_split(prob, hw, cost) -> Solution:
+    mm = equal_split(list(prob.workload.models), cost)
+    return Solution(problem=prob, strategy="equal-split", hw=hw, multi=mm)
+
+
+@register_strategy("time-mux")
+def _solve_time_mux(prob, hw, cost) -> Solution:
+    o = prob.options
+    mm = time_multiplexed(
+        list(prob.workload.models), cost,
+        switch_cost=o.switch_cost, switch_period_s=o.switch_period_s,
+    )
+    return Solution(problem=prob, strategy="time-mux", hw=hw, multi=mm)
+
+
+@register_strategy("exhaustive")
+def _solve_exhaustive(prob, hw, cost) -> Solution:
+    """Brute force over one segment (``core.search.exhaustive_search``);
+    tiny cases only -- the Fig. 8 optimality oracle."""
+    g = _single_graph(prob, "exhaustive")
+    lat, clustering, regions, partitions = next(
+        exhaustive_search(cost, g, hw.chips)
+    )
+    sched = None
+    if clustering is not None and lat < INF:
+        clusters = build_clusters(0, clustering, partitions, list(regions))
+        _, times = cost.segment_time(g, clusters)
+        sched = ScopeSchedule(
+            workload=g.name, chips=hw.chips,
+            segments=(SegmentSchedule(clusters, lat, tuple(times)),),
+            latency=lat, meta={"method": "exhaustive"},
+        )
+    return Solution(problem=prob, strategy="exhaustive", hw=hw,
+                    schedule=sched)
+
+
+@register_strategy("random")
+def _solve_random(prob, hw, cost) -> Solution:
+    """Uniform random sampling of the space (``core.search.random_search``);
+    the population lands in ``diagnostics["population"]`` (Fig. 8
+    histograms)."""
+    g = _single_graph(prob, "random")
+    o = prob.options
+    pop = random_search(cost, g, hw.chips, samples=o.samples, seed=o.seed)
+    return Solution(
+        problem=prob, strategy="random", hw=hw,
+        diagnostics={"population": pop,
+                     "best_sampled_s": min(pop) if pop else INF},
+    )
+
+
+# ---------------------------------------------------------------------------
+# solve(): the front door
+# ---------------------------------------------------------------------------
+
+def solve(prob: Problem | None = None, *, workload=None, package=None,
+          options: SearchOptions | None = None, **opts) -> Solution:
+    """Solve a declarative Scope DSE problem.
+
+    Either pass a :class:`Problem`, or the pieces::
+
+        solve(problem("resnet50:2,alexnet:1", "mcm64", step=1))
+        solve(workload="resnet50", package="mcm64_hetero", mode="uniform")
+
+    Dispatches through the strategy registry (``options.strategy``;
+    ``"auto"`` selects by problem shape), builds one shared evaluation
+    engine for every sub-search, validates the result (seam accounting
+    included) and stamps ``dse_s`` / ``engine_stats`` diagnostics.
+    """
+    if prob is None:
+        if workload is None or package is None:
+            raise ValueError("solve() needs a Problem or workload= + package=")
+        prob = problem(workload, package, options=options, **opts)
+    elif workload is not None or package is not None or options is not None or opts:
+        raise ValueError("pass a Problem or loose pieces, not both")
+
+    hw = prob.package.resolve()
+    o = prob.options
+    if o.cost is not None and o.cost.hw != hw:
+        raise ValueError(
+            f"options.cost was built for {o.cost.hw.name}, but this problem "
+            f"resolves to {hw.name}: sharing the engine would evaluate "
+            "against the wrong hardware"
+        )
+    cost = o.make_cost(hw)
+    name = o.strategy
+    if name in ("auto", "", None):
+        name = _auto_strategy(prob, hw)
+    name, fn = _lookup(name)
+
+    t0 = time.time()
+    sol = fn(prob, hw, cost)
+    sol.strategy = name
+    sol.diagnostics.setdefault("dse_s", time.time() - t0)
+    sol.diagnostics.setdefault("m_samples", cost.m)
+    sol.diagnostics.setdefault("engine_stats",
+                               dict(getattr(cost, "stats", {})))
+    if o.validate and sol.feasible:
+        sol.validate()
+    return sol

@@ -231,19 +231,25 @@ def validate_multimodel(
     sched: MultiModelSchedule,
     graphs: dict[str, LayerGraph],
     type_capacity: dict[str | None, int],
-) -> None:
+) -> dict:
     """Invariants of a co-schedule.
 
     * every assignment's underlying ScopeSchedule is itself valid for its
-      (merged-mode: shared) graph and chip budget;
+      (merged-mode: shared) graph and chip budget -- including the seam
+      accounting of :func:`validate_schedule`;
     * partitioned quotas are disjoint: per chip type, dedicated chips sum to
       at most the flavor's capacity (mixed-flavor quotas are itemized via
       ``chip_quota`` and accounted per flavor);
     * time-multiplexed shares sum to at most 1;
     * mix_rate / weighted_throughput are consistent with the assignments.
+
+    Returns a report: ``{"seam_crossings": {model: total_crossings}}`` --
+    how many cross-flavor seams each model's pipeline hands activations
+    through (0 for every single-flavor assignment).
     """
     assert sched.mode in MM_MODES, sched.mode
     assert sched.assignments, "empty co-schedule"
+    seam_by_model: dict[str, int] = {}
     for a in sched.assignments:
         assert a.weight > 0, f"{a.model}: non-positive traffic weight"
         assert a.chips >= 1
@@ -258,7 +264,9 @@ def validate_multimodel(
         # share one schedule over the concatenated graph) validate against
         # the merged graph, not the per-model one.
         graph = graphs[a.schedule.workload]
-        validate_schedule(graph, a.schedule, a.chips)
+        caps = dict(a.chip_quota) if a.chip_quota else None
+        report = validate_schedule(graph, a.schedule, a.chips, flavor_caps=caps)
+        seam_by_model[a.model] = report["seam_crossings"]
     if sched.mode == MM_PARTITIONED:
         used: dict[str | None, int] = {}
         for a in sched.assignments:
@@ -281,6 +289,7 @@ def validate_multimodel(
     total_w = sum(a.weight for a in sched.assignments)
     expect = lam * total_w
     assert abs(expect - sched.weighted_throughput) <= 1e-9 * max(1.0, expect)
+    return {"seam_crossings": seam_by_model}
 
 
 def validate_schedule(
@@ -288,16 +297,26 @@ def validate_schedule(
     sched: ScopeSchedule,
     chips: int,
     flavor_caps: dict[str | None, int] | None = None,
-) -> None:
+) -> dict:
     """Invariants: contiguous cover of all layers; regions fit the package.
 
     ``flavor_caps`` (mixed-flavor schedules) additionally bounds each
     segment's per-flavor chip usage by that flavor's budget.
+
+    Seam accounting (mixed-flavor pipelines): within a segment the clusters'
+    chip flavors must form *contiguous runs* -- flavors occupy contiguous
+    areas of the mesh, so a placement like big, little, big would tear the
+    big region apart and cross the flavor seam twice where the link model
+    (``HardwareModel.seam_link_bw``) charges it once.  Non-contiguous runs
+    are rejected; the returned report counts the seam crossings:
+    ``{"seam_crossings": total, "seam_crossings_per_segment": [...]}``.
     """
     cursor = 0
+    seam_per_segment: list[int] = []
     for seg in sched.segments:
         used = 0
         by_type: dict[str | None, int] = {}
+        flavor_runs: list[str | None] = []
         for cl in seg.clusters:
             assert cl.layer_lo == cursor, (cl.layer_lo, cursor)
             assert cl.layer_hi > cl.layer_lo
@@ -305,8 +324,15 @@ def validate_schedule(
             assert cl.region_chips >= 1
             used += cl.region_chips
             by_type[cl.chip_type] = by_type.get(cl.chip_type, 0) + cl.region_chips
+            if not flavor_runs or flavor_runs[-1] != cl.chip_type:
+                flavor_runs.append(cl.chip_type)
             cursor = cl.layer_hi
         assert used <= chips, f"segment uses {used} > {chips} chips"
+        assert len(flavor_runs) == len(set(flavor_runs)), (
+            f"non-contiguous flavor runs {flavor_runs}: a flavor's clusters "
+            "must occupy one contiguous stretch of the pipeline"
+        )
+        seam_per_segment.append(max(0, len(flavor_runs) - 1))
         if flavor_caps is not None:
             for ctype, n in by_type.items():
                 cap = flavor_caps.get(ctype)
@@ -315,6 +341,10 @@ def validate_schedule(
                     f"segment uses {n} chips of type {ctype!r} > {cap}"
                 )
     assert cursor == len(graph), f"schedule covers {cursor}/{len(graph)} layers"
+    return {
+        "seam_crossings": sum(seam_per_segment),
+        "seam_crossings_per_segment": seam_per_segment,
+    }
 
 
 def geomean(vals) -> float:

@@ -236,6 +236,35 @@ def mcm_hetero(
     return hw
 
 
+def mcm_hetero3(
+    chips: int = 48,
+    flops_scales: tuple[float, float, float] = (1.0, 0.6, 0.3),
+    nop_scales: tuple[float, float, float] = (1.0, 0.85, 0.7),
+) -> HardwareModel:
+    """Table III package with three chiplet flavors (big / mid / little).
+
+    Exercises the 3+-flavor regime: the per-cluster mixed DSE handles any
+    flavor count, but the multimodel *spanning-quota* enumeration covers
+    exactly two flavors and falls back to single-flavor quotas here
+    (explicitly -- ``co_schedule`` warns and records
+    ``meta["mixed_fallback"]``).
+    """
+    third = chips // 3
+    counts = (chips - 2 * third, third, third)
+    hw = replace(
+        mcm_table_iii(chips),
+        name=f"mcm{chips}_hetero3",
+        region_types=tuple(
+            ChipType(name, n, flops_scale=f, nop_bw_scale=b)
+            for name, n, f, b in zip(
+                ("big", "mid", "little"), counts, flops_scales, nop_scales
+            )
+        ),
+    )
+    validate_region_types(hw)
+    return hw
+
+
 # Convenience preset registry used by benchmarks / CLI.
 PRESETS = {
     "mcm16": lambda: mcm_table_iii(16),
@@ -245,6 +274,7 @@ PRESETS = {
     "tpu_v5e_512": lambda: tpu_v5e(512, (16, 32)),
     "mcm64_hetero": lambda: mcm_hetero(64),
     "mcm16_hetero": lambda: mcm_hetero(16),
+    "mcm48_hetero3": lambda: mcm_hetero3(48),
 }
 
 

@@ -1,69 +1,31 @@
-"""CLI: co-schedule a model mix onto an MCM package.
+"""Legacy CLI shim: forwards to the general solver front door.
 
     PYTHONPATH=src python -m repro.multimodel.cli \
         --mix resnet50:1,alexnet:1 --hw mcm16 [--step 1] [--baselines]
 
-``--hw`` accepts any preset from repro.core.hw (including ``mcm64_hetero``).
+is now exactly
+
+    PYTHONPATH=src python -m repro solve --strategy coschedule \
+        --mix resnet50:1,alexnet:1 --hw mcm16 [--step 1] [--baselines]
+
+(every historical flag is accepted by ``repro solve`` under the same name;
+the pinned strategy preserves this CLI's historical behavior of always
+running ``co_schedule``, even for single-entry mixes where ``repro
+solve``'s auto-selection would pick the single-model DSE).  Kept so
+existing invocations keep working; new code should call ``python -m repro
+solve`` or :func:`repro.api.solve` directly.
 """
 from __future__ import annotations
 
-import argparse
-
-from ..core.fastcost import FastCostModel
-from ..core.hw import get_hw
-from .baselines import equal_split, time_multiplexed
-from .coschedule import co_schedule, describe
-from .spec import parse_mix
+import sys
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--mix", required=True,
-                    help="comma list of net[:weight], e.g. resnet50:2,alexnet:1")
-    ap.add_argument("--hw", default="mcm64", help="hardware preset name")
-    ap.add_argument("--m-samples", type=int, default=16)
-    ap.add_argument("--step", type=int, default=1,
-                    help="quota grid step (1 = exhaustive)")
-    ap.add_argument("--refine", action="store_true",
-                    help="coarse-to-fine curves: re-sample at step 1 around "
-                         "each coarse argmax")
-    ap.add_argument("--no-mixed", action="store_true",
-                    help="disable mixed-flavor (spanning) quotas on "
-                         "heterogeneous packages")
-    ap.add_argument("--mixed-step", type=int, default=None,
-                    help="budget grid step of the mixed-flavor curves "
-                         "(default: quarter of the smaller flavor)")
-    ap.add_argument("--switch-cost", action="store_true",
-                    help="charge time-mux slices for per-slice weight "
-                         "re-deployment")
-    ap.add_argument("--baselines", action="store_true",
-                    help="also report equal-split and time-mux baselines")
-    args = ap.parse_args(argv)
+    from ..__main__ import main as repro_main
 
-    specs = parse_mix(args.mix)
-    hw = get_hw(args.hw)
-    cost = FastCostModel(hw, m_samples=args.m_samples)
-    sched = co_schedule(specs, hw, m_samples=args.m_samples, step=args.step,
-                        cost=cost, include_mixed=not args.no_mixed,
-                        curve_refine=args.refine, mixed_step=args.mixed_step,
-                        switch_cost=args.switch_cost)
-    if sched is None:
-        raise SystemExit(f"no feasible co-schedule for {args.mix} on {args.hw}")
-    for line in describe(sched):
-        print(line)
-    print(f"  searched in {sched.meta['dse_s']:.2f}s; "
-          f"engine {sched.meta['engine_stats']}")
-    if args.baselines:
-        for name, fn in (("equal_split", equal_split),
-                         ("time_multiplexed", time_multiplexed)):
-            b = fn(specs, cost)
-            if b is None:
-                print(f"{name}: infeasible")
-                continue
-            print(f"{name}: weighted throughput "
-                  f"{b.weighted_throughput:.1f} samples/s "
-                  f"({sched.weighted_throughput / b.weighted_throughput:.2f}x "
-                  "vs co-schedule)")
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # First so an explicit user --strategy (argparse last-wins) overrides.
+    repro_main(["solve", "--strategy", "coschedule", *argv])
 
 
 if __name__ == "__main__":

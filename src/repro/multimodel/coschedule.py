@@ -10,6 +10,7 @@ is by construction at least as good as either fig11 baseline.
 from __future__ import annotations
 
 import time
+import warnings
 
 from ..core.costmodel import CostModel
 from ..core.fastcost import FastCostModel
@@ -41,12 +42,14 @@ def co_schedule(
     """Jointly schedule ``specs`` onto one package.
 
     ``step`` coarsens the quota grid (1 = exhaustive; ``curve_refine``
-    re-samples the coarse curves at step 1 around each argmax); ``cost``
-    lets callers supply a pre-warmed engine (its memo then carries over
-    between calls).  On two-flavor heterogeneous packages ``include_mixed``
-    also searches quotas that span flavors (one model's pipeline on big
-    *and* little chips); ``switch_cost`` charges the time-mux mode for
-    per-slice weight re-deployment (see ``baselines.time_multiplexed``).
+    re-samples the coarse curves -- 1D *and* mixed 2D -- around each
+    argmax); ``cost`` lets callers supply a pre-warmed engine (its memo
+    then carries over between calls).  On two-flavor heterogeneous packages
+    ``include_mixed`` also searches quotas that span flavors (one model's
+    pipeline on big *and* little chips); packages with 3+ flavors fall
+    back to single-flavor quotas with a warning and
+    ``meta["mixed_fallback"]``.  ``switch_cost`` charges the time-mux mode
+    for per-slice weight re-deployment (see ``baselines.time_multiplexed``).
     """
     validate_region_types(hw)
     names = [s.name for s in specs]
@@ -60,16 +63,32 @@ def co_schedule(
                           refine=curve_refine)
 
     candidates: list[tuple[str, MultiModelSchedule]] = []
+    mixed_fallback = None
     part = search_partitioned(specs, cost, step, paper_strict, curves=curves)
     if part is not None:
         candidates.append((part.mode, part))
     if include_mixed and len(flavors) == 2:
         mixed = search_partitioned_mixed(
             specs, cost, step, paper_strict, curves=curves,
-            mixed_step=mixed_step,
+            mixed_step=mixed_step, mixed_refine=curve_refine,
         )
         if mixed is not None:
             candidates.append(("partitioned:mixed", mixed))
+    elif include_mixed and len(flavors) > 2:
+        # Spanning quotas cover exactly the big/little pair today; don't let
+        # a 3+-flavor package silently degrade to single-flavor quotas.
+        mixed_fallback = {
+            "n_flavors": len(flavors),
+            "flavors": [t for t, _ in flavors],
+            "reason": "spanning quotas support exactly two flavors; "
+                      "falling back to single-flavor quotas",
+        }
+        warnings.warn(
+            f"{hw.name}: {len(flavors)}-flavor package -- "
+            f"{mixed_fallback['reason']} (the per-cluster mixed DSE itself "
+            "handles any flavor count; only the quota enumeration is 2-flavor)",
+            stacklevel=2,
+        )
     if include_merged and len(specs) > 1:
         for ctype, _cap in flavors:
             merged = search_merged(specs, cost, chip_type=ctype,
@@ -94,6 +113,8 @@ def co_schedule(
             label: c.weighted_throughput for label, c in candidates
         },
     })
+    if mixed_fallback is not None:
+        best.meta["mixed_fallback"] = mixed_fallback
     if validate:
         graphs = {s.name: s.graph for s in specs}
         if best.mode == "merged":

@@ -200,6 +200,23 @@ class MixedCurve:
         return table
 
 
+# Refinement cell budget: a window sampled at step 1 may hold at most this
+# many budget pairs; larger windows are walked with a coarser stride first
+# (successive halving), so refinement cost stays bounded on big packages
+# where a full step-1 cell would be (2*step-1)^2 mixed DSEs.
+_MAX_REFINE_CELL = 81
+
+
+def _refine_grid(center: int, span: int, cap: int, stride: int) -> list[int]:
+    """Stride-spaced budgets covering ``center +- span``, clipped to [1, cap]
+    (both window edges always included so the cell is fully bracketed)."""
+    lo, hi = max(1, center - span), min(cap, center + span)
+    pts = list(range(lo, hi + 1, stride))
+    if pts[-1] != hi:
+        pts.append(hi)
+    return pts
+
+
 def mixed_throughput_curve(
     cost: CostModel,
     graph: LayerGraph,
@@ -207,6 +224,7 @@ def mixed_throughput_curve(
     step: int = 1,
     paper_strict: bool = False,
     cut_window: int = 2,
+    refine: bool = False,
 ) -> MixedCurve:
     """Sample mixed-flavor DSEs over the two flavors' budget grid.
 
@@ -214,13 +232,21 @@ def mixed_throughput_curve(
     covered by the 1D curves, and :meth:`MixedCurve.envelope` merges both.
     ``step`` walks the same coarse grid as the 1D curves (a point's budget
     pair is a *cap*, so coarse points stay valid under the envelope).
+
+    ``refine=True`` is the 2D analogue of the 1D coarse-to-fine curves:
+    after the coarse grid, the one-coarse-cell neighborhood of the argmax
+    budget pair is re-sampled down to step 1.  Small cells are filled
+    exactly (mirroring the 1D pass); cells larger than
+    ``_MAX_REFINE_CELL`` pairs are narrowed by successive halving --
+    re-sample the window at a quarter of the current stride around the
+    running argmax until stride 1 -- so the pass stays a bounded multiple
+    of the coarse grid even at 512-chip flavors.
     """
     assert len(flavors) == 2, "mixed curves span exactly two flavors"
     (ta, cap_a), (tb, cap_b) = flavors
     curve = MixedCurve(graph.name, (ta, tb))
-    for qa, qb in itertools.product(
-        candidate_counts(cap_a, step), candidate_counts(cap_b, step)
-    ):
+
+    def sample(qa: int, qb: int) -> None:
         sched = search_mixed(
             graph, cost, [(ta, qa), (tb, qb)],
             paper_strict=paper_strict, cut_window=cut_window,
@@ -228,9 +254,33 @@ def mixed_throughput_curve(
         )
         if sched is None or sched.latency == INF:
             curve.points[(qa, qb)] = MixedPoint((qa, qb), INF, 0.0, None)
-            continue
+            return
         sched.meta["m_samples"] = cost.m
         curve.points[(qa, qb)] = MixedPoint(
             (qa, qb), sched.latency, cost.m / sched.latency, sched
         )
+
+    for qa, qb in itertools.product(
+        candidate_counts(cap_a, step), candidate_counts(cap_b, step)
+    ):
+        sample(qa, qb)
+
+    s = step
+    while refine and s > 1:
+        best = max(
+            (p for p in curve.points.values() if p.schedule is not None),
+            key=lambda p: p.throughput,
+            default=None,
+        )
+        if best is None:
+            break
+        span = s - 1
+        stride = 1 if (2 * span + 1) ** 2 <= _MAX_REFINE_CELL else max(2, s // 4)
+        for qa in _refine_grid(best.quota[0], span, cap_a, stride):
+            for qb in _refine_grid(best.quota[1], span, cap_b, stride):
+                if (qa, qb) not in curve.points:
+                    sample(qa, qb)
+        if stride == 1:
+            break
+        s = stride
     return curve

@@ -190,15 +190,19 @@ def search_partitioned_mixed(
     mixed_curves=None,
     mixed_step: int | None = None,
     cut_window: int = 2,
+    mixed_refine: bool = False,
 ) -> MultiModelSchedule | None:
     """Partitioned quotas where a model's quota may span two chip flavors.
 
     Requires a heterogeneous package with exactly two flavors (the
     big/little setting of SCAR / Odema et al.; more flavors fall back to
-    ``search_partitioned``'s single-flavor quotas).  ``mixed_step`` walks
-    the mixed curves' budget grid (default: quarter-capacity steps -- each
-    point is a full mixed DSE, so the grid is deliberately coarser than
-    the single-flavor curves').
+    ``search_partitioned``'s single-flavor quotas -- ``co_schedule`` makes
+    that fallback explicit with a warning and result meta).  ``mixed_step``
+    walks the mixed curves' budget grid (default: quarter-capacity steps --
+    each point is a full mixed DSE, so the grid is deliberately coarser
+    than the single-flavor curves'); ``mixed_refine`` adds the 2D
+    coarse-to-fine pass around each curve's argmax
+    (:func:`~.curves.mixed_throughput_curve`).
     """
     hw = cost.hw
     flavors = package_flavors(hw)
@@ -214,6 +218,7 @@ def search_partitioned_mixed(
             spec.name: mixed_throughput_curve(
                 cost, spec.graph, flavors, step=mixed_step,
                 paper_strict=paper_strict, cut_window=cut_window,
+                refine=mixed_refine,
             )
             for spec in specs
         }
@@ -285,6 +290,7 @@ def search_partitioned_mixed(
             "quota_step": quota_step,
             "mixed_points": sum(len(c.points) for c in mixed_curves.values()),
             "mixed_step": mixed_step,
+            "mixed_refine": mixed_refine,
         },
     )
 

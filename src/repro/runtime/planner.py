@@ -115,6 +115,7 @@ def plan_for_multimodel(
     step: int = 1,
     hw=None,
     switch_cost: bool = False,
+    mm=None,
 ):
     """Co-schedule several LM configs onto one model axis.
 
@@ -128,6 +129,11 @@ def plan_for_multimodel(
     which chip flavor serves each pipeline stage -- on a heterogeneous
     package (pass ``hw``) one model's stages may span flavors, and
     ``meta["chip_quota"]`` itemizes the per-flavor chips.
+
+    ``mm`` skips the search and derives the plans from an already-solved
+    :class:`~repro.core.graph.MultiModelSchedule` (the facade's
+    ``Solution.deploy`` passes its own result through, so solve-then-deploy
+    never searches twice); it must cover every config by name.
 
     Returns ``(MultiModelSchedule, {cfg.name: ShardPlan})``.
     """
@@ -148,13 +154,15 @@ def plan_for_multimodel(
         hw = tpu_v5e(model_axis, (1, model_axis))
     elif hw.chips != model_axis:
         raise ValueError(f"hw has {hw.chips} chips != model_axis {model_axis}")
-    cost = FastCostModel(hw, m_samples=max(2, global_batch),
-                         distributed_weights=True)
-    # Merged interleaving has no GSPMD execution path (one jitted fn serves
-    # one config), so the runtime bridge searches partitioned + time-mux.
-    mm = co_schedule(specs, hw, m_samples=max(2, global_batch), step=step,
-                     include_merged=False, cost=cost,
-                     switch_cost=switch_cost)
+    if mm is None:
+        cost = FastCostModel(hw, m_samples=max(2, global_batch),
+                             distributed_weights=True)
+        # Merged interleaving has no GSPMD execution path (one jitted fn
+        # serves one config), so the runtime bridge searches partitioned +
+        # time-mux.
+        mm = co_schedule(specs, hw, m_samples=max(2, global_batch), step=step,
+                         include_merged=False, cost=cost,
+                         switch_cost=switch_cost)
     if mm is None:
         return None, {}
     plans: dict[str, ShardPlan] = {}

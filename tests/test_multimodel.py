@@ -17,13 +17,24 @@ from repro.core.costmodel import INF, CostModel
 from repro.core.fastcost import FastCostModel
 from repro.core.graph import (
     MM_PARTITIONED,
+    ClusterAssignment,
     LayerNode,
     ModelAssignment,
     MultiModelSchedule,
+    ScopeSchedule,
+    SegmentSchedule,
     chain,
     validate_multimodel,
+    validate_schedule,
 )
-from repro.core.hw import ChipType, mcm_hetero, mcm_table_iii, validate_region_types
+from repro.core.hw import (
+    ChipType,
+    get_hw,
+    mcm_hetero,
+    mcm_hetero3,
+    mcm_table_iii,
+    validate_region_types,
+)
 from repro.core.regions import rebalance
 from repro.core.search import evaluate_segment, search, search_mixed, search_segment
 from repro.core.workloads import get_cnn
@@ -285,6 +296,45 @@ class TestMixedQuota:
         assert alloc[:2] == [4, 4]          # bottleneck pool equalized
         assert lat == 10.0 / 4
 
+    def test_mixed_curve_2d_refine(self):
+        """The 2D coarse-to-fine pass: a refined coarse mixed curve adds
+        points only around the argmax and recovers the exhaustive grid's
+        peak (small cells are filled exactly, mirroring the 1D pass)."""
+        from repro.multimodel.curves import mixed_throughput_curve
+
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.5)
+        g = get_cnn("alexnet")
+        flavors = package_flavors(hw)
+        cost = FastCostModel(hw, m_samples=16)
+        peak = lambda c: max(p.throughput for p in c.points.values())
+        exact = mixed_throughput_curve(cost, g, flavors, step=1)
+        coarse = mixed_throughput_curve(cost, g, flavors, step=2)
+        refined = mixed_throughput_curve(cost, g, flavors, step=2,
+                                         refine=True)
+        assert len(coarse.points) < len(refined.points) <= len(exact.points)
+        assert peak(refined) >= peak(coarse)
+        assert peak(refined) <= peak(exact) * (1 + 1e-12)
+        # step=2 cells are tiny -> filled at stride 1: exact peak recovery
+        assert math.isclose(peak(refined), peak(exact), rel_tol=1e-9)
+        # refined coarse points are a superset of the plain coarse grid
+        assert set(coarse.points) <= set(refined.points)
+
+    def test_mixed_refine_threads_through_quota_search(self):
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.5)
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 2.0), 1.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        base = search_partitioned_mixed(specs, cost, mixed_step=2)
+        refined = search_partitioned_mixed(specs, cost, mixed_step=2,
+                                           mixed_refine=True)
+        assert refined is not None and refined.meta["mixed_refine"]
+        # refinement only adds candidate points: never worse
+        assert (refined.weighted_throughput
+                >= base.weighted_throughput * (1 - 1e-12))
+        assert refined.meta["mixed_points"] >= base.meta["mixed_points"]
+
     def test_coarse_to_fine_refine(self):
         """refine=True fills the argmax neighborhood: the refined coarse
         curve recovers the exhaustive curve's peak with far fewer points."""
@@ -456,6 +506,119 @@ class TestPaperStrict:
         loose = search_segment(cost, g, 0, len(g), 16)
         strict = search_segment(cost, g, 0, len(g), 16, paper_strict=True)
         assert strict.latency >= loose.latency - 1e-12
+
+
+# ---------------------------------------------------- seam accounting
+
+def _typed_schedule(types, chips_each=1):
+    """A 1-segment schedule over len(types) single-layer clusters, cluster
+    i on flavor types[i]."""
+    g = tiny_graph("t", L=len(types))
+    clusters = tuple(
+        ClusterAssignment(
+            layer_lo=i, layer_hi=i + 1, region_chips=chips_each,
+            partitions=("ISP",), chip_type=t,
+        )
+        for i, t in enumerate(types)
+    )
+    sched = ScopeSchedule(
+        workload="t", chips=chips_each * len(types),
+        segments=(SegmentSchedule(clusters, 1.0, (1.0,) * len(types)),),
+        latency=1.0,
+    )
+    return g, sched
+
+
+class TestSeamAccounting:
+    def test_homogeneous_counts_zero(self):
+        g, sched = _typed_schedule([None, None, None])
+        report = validate_schedule(g, sched, 3)
+        assert report["seam_crossings"] == 0
+        assert report["seam_crossings_per_segment"] == [0]
+
+    def test_contiguous_runs_counted(self):
+        g, sched = _typed_schedule(["big", "big", "little"])
+        report = validate_schedule(g, sched, 3)
+        assert report["seam_crossings"] == 1
+
+    def test_non_contiguous_runs_rejected(self):
+        g, sched = _typed_schedule(["big", "little", "big"])
+        with pytest.raises(AssertionError, match="non-contiguous"):
+            validate_schedule(g, sched, 3)
+
+    def test_searched_mixed_schedules_validate(self):
+        """Every schedule the mixed DSE emits passes the seam validator
+        (its flavor-run layer builds contiguous runs by construction)."""
+        hw = mcm_hetero(8, big_fraction=0.5, little_flops_scale=0.5)
+        cost = FastCostModel(hw, m_samples=16)
+        g = get_cnn("alexnet")
+        sched = search_mixed(g, cost)
+        caps = dict(package_flavors(hw))
+        report = validate_schedule(g, sched, hw.chips, flavor_caps=caps)
+        flavors_used = {
+            cl.chip_type for seg in sched.segments for cl in seg.clusters
+        }
+        if len(flavors_used) > 1:
+            assert report["seam_crossings"] >= 1
+
+    def test_multimodel_reports_per_model(self):
+        hw = mcm_table_iii(16)
+        specs = parse_mix("alexnet:1,resnet18:1")
+        co = co_schedule(specs, hw)
+        graphs = {s.name: s.graph for s in specs}
+        if co.mode == "merged":
+            mg, _ = merged_graph(specs)
+            graphs[mg.name] = mg
+        report = validate_multimodel(co, graphs, {None: hw.chips})
+        assert set(report["seam_crossings"]) == {s.name for s in specs}
+        assert all(v == 0 for v in report["seam_crossings"].values())
+
+
+# ------------------------------------------------- 3+ flavor fallback
+
+class TestThreeFlavorFallback:
+    def test_preset_registered_and_valid(self):
+        hw = get_hw("mcm48_hetero3")
+        assert [t.name for t in hw.region_types] == ["big", "mid", "little"]
+        assert sum(t.chips for t in hw.region_types) == 48
+
+    def test_fallback_warns_and_records_meta(self):
+        hw = mcm_hetero3(6)    # 2 chips per flavor: tiny regression case
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 2.0), 1.0),
+        ]
+        cost = FastCostModel(hw, m_samples=16)
+        with pytest.warns(UserWarning, match="single-flavor quotas"):
+            co = co_schedule(specs, hw, cost=cost)
+        assert co is not None
+        assert co.meta["mixed_fallback"]["n_flavors"] == 3
+        # the spanning family never ran: no partitioned:mixed mode rate
+        assert "partitioned:mixed" not in co.meta["mode_rates"]
+        # and search_partitioned_mixed's own fallback stays explicit (None)
+        assert search_partitioned_mixed(specs, cost) is None
+
+    def test_no_warning_when_mixed_disabled(self):
+        import warnings as _warnings
+
+        hw = mcm_hetero3(6)
+        specs = [ModelSpec(tiny_graph("a", 1.0), 1.0)]
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("error")
+            co = co_schedule(specs, hw, include_mixed=False)
+        assert co is not None and "mixed_fallback" not in co.meta
+
+    def test_facade_surfaces_fallback(self):
+        from repro import scope
+
+        hw = mcm_hetero3(6)
+        g1, g2 = tiny_graph("a", 1.0), tiny_graph("b", 2.0)
+        with pytest.warns(UserWarning, match="single-flavor quotas"):
+            sol = scope.solve(scope.problem(
+                scope.WorkloadSpec.graphs([g1, g2]), hw,
+                strategy="coschedule",
+            ))
+        assert sol.diagnostics["mixed_fallback"]["n_flavors"] == 3
 
 
 # ------------------------------------------------------ batched seed fill
