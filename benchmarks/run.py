@@ -9,6 +9,7 @@ Sections:
          + resnet152 at 512/1024 (fast-engine sweep)
   fig10  ResNet-152 x 256 case study + energy        (paper Fig. 10)
   fig11  multi-model co-scheduling vs baselines      (beyond-paper)
+  serving executor: goodput/p95 under load + autoscale drift (beyond-paper)
   search DSE wall-time table                         (paper SSV-B(1))
   kernels micro-bench CSV
   roofline LM-arch dry-run aggregation               (SSRoofline)
@@ -60,6 +61,11 @@ def main() -> None:
     section("fig11_multimodel", fig11_multimodel.report(r11))
 
     if not args.quick:
+        from . import serving_bench
+
+        rsv = serving_bench.run(refresh=args.refresh)
+        section("serving_bench", serving_bench.report(rsv))
+
         r9l = fig9_scalability.run_large(refresh=args.refresh)
         section("fig9_scalability_large", fig9_scalability.report(r9l))
 

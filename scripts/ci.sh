@@ -105,6 +105,47 @@ assert sol.latency <= best_single + 1e-12, "mixed lost to single-flavor"
 assert dt <= budget, f"mixed DSE regression: {dt:.2f}s > {budget:.0f}s"
 PY
 
+  echo "== serving executor smoke (via the python -m repro serve CLI) =="
+  python - <<'PY'
+import json
+import os
+import subprocess
+import sys
+import time
+
+budget = float(os.environ.get("CI_SERVE_BUDGET_S", "60"))
+args = ["--mix", "alexnet:1,resnet18:1", "--hw", "mcm16",
+        "--requests", "1000", "--rate-scale", "0.95", "--seed", "0",
+        "--baselines", "--json"]
+t0 = time.time()
+out = subprocess.run(
+    [sys.executable, "-m", "repro", "serve", *args],
+    capture_output=True, text=True, check=True,
+    env={**os.environ, "PYTHONPATH": "src"},
+)
+dt = time.time() - t0
+payload = json.loads(out.stdout)
+co = payload["serving"]
+eq = payload["baselines"]["equal-split"]
+tm = payload["baselines"]["time-mux"]
+# request conservation on every replay of the same trace
+for name, rep in (("co", co), ("equal-split", eq), ("time-mux", tm)):
+    assert rep["conserved"], f"{name}: requests not conserved"
+    assert rep["total_arrived"] == co["total_arrived"], f"{name}: trace mismatch"
+print(f"serving smoke: {dt:.2f}s (budget {budget:.0f}s), "
+      f"{co['total_completed']}/{co['total_arrived']} requests conserved; "
+      f"goodput co {co['goodput']:.0f}/s vs equal-split {eq['goodput']:.0f} "
+      f"vs time-mux {tm['goodput']:.0f}; "
+      f"p95 co {co['latency_p95_s']*1e3:.2f}ms vs "
+      f"equal-split {eq['latency_p95_s']*1e3:.2f}ms")
+# the DSE winner must also win under simulated load
+assert co["latency_p95_s"] <= eq["latency_p95_s"] + 1e-12, \
+    "co-schedule p95 worse than equal-split"
+assert co["goodput"] >= eq["goodput"] - 1e-9, "co-schedule below equal-split"
+assert co["goodput"] >= tm["goodput"] - 1e-9, "co-schedule below time-mux"
+assert dt <= budget, f"serving smoke regression: {dt:.2f}s > {budget:.0f}s"
+PY
+
   echo "== DSE search-time smoke budget =="
   python - <<'PY'
 import os

@@ -12,12 +12,12 @@ and dependency-light.
 """
 from importlib import import_module
 
-__all__ = ["scope", "api", "solve", "problem", "Problem", "Solution"]
+__all__ = ["scope", "api", "serving", "solve", "problem", "Problem", "Solution"]
 
 _API_NAMES = {
     "solve", "problem", "Problem", "Solution", "Deployment",
-    "WorkloadSpec", "PackageSpec", "SearchOptions",
-    "register_strategy", "available_strategies",
+    "WorkloadSpec", "PackageSpec", "SearchOptions", "SolutionCache",
+    "register_strategy", "available_strategies", "solve_many",
 }
 
 
@@ -25,6 +25,10 @@ def __getattr__(name):
     if name in ("scope", "api"):
         mod = import_module(".api", __name__)
         globals()["scope"] = globals()["api"] = mod
+        return mod
+    if name == "serving":
+        mod = import_module(".serving", __name__)
+        globals()["serving"] = mod
         return mod
     if name in _API_NAMES:
         value = getattr(import_module(".api", __name__), name)
@@ -34,4 +38,4 @@ def __getattr__(name):
 
 
 def __dir__():
-    return sorted(set(globals()) | _API_NAMES | {"scope", "api"})
+    return sorted(set(globals()) | _API_NAMES | {"scope", "api", "serving"})

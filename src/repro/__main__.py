@@ -2,12 +2,19 @@
 
     PYTHONPATH=src python -m repro solve --mix resnet50:2,alexnet:1 --hw mcm64
     PYTHONPATH=src python -m repro solve --mix resnet50 --hw mcm64_hetero --json
+    PYTHONPATH=src python -m repro serve --mix resnet50:1,alexnet:1 --hw mcm16 \
+        --requests 1000 --baselines --json
     PYTHONPATH=src python -m repro strategies
 
 ``solve`` accepts any preset from ``repro.core.hw`` (``--hw``) and a
-``net[:weight]`` mix (``--mix``); a single-entry mix is a single-model DSE
-(strategy auto-selection picks ``scope`` / ``scope-mixed`` /
-``coschedule`` by problem shape -- override with ``--strategy``).
+``net[:weight[:slo_ms]]`` mix (``--mix``); a single-entry mix is a
+single-model DSE (strategy auto-selection picks ``scope`` /
+``scope-mixed`` / ``coschedule`` by problem shape -- override with
+``--strategy``).  ``serve`` solves and then *runs* the deployment under
+synthetic traffic (:mod:`repro.serving`): seeded open-loop arrivals,
+per-model batching queues, quota/slice enforcement, and a serving report
+(goodput, latency percentiles, SLO attainment); ``--baselines`` replays
+the exact same trace against the equal-split and time-mux deployments.
 """
 from __future__ import annotations
 
@@ -59,6 +66,91 @@ def _build_solve_parser(sub) -> argparse.ArgumentParser:
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit a machine-readable JSON summary")
     return ap
+
+
+def _build_serve_parser(sub) -> argparse.ArgumentParser:
+    ap = sub.add_parser(
+        "serve",
+        help="solve, then run the deployment under synthetic traffic",
+        description="Solve a workload x package DSE and simulate serving "
+                    "it (repro.serving).",
+    )
+    ap.add_argument("--mix", "--workload", dest="mix", required=True,
+                    help="comma list of net[:weight[:slo_ms]]")
+    ap.add_argument("--hw", default="mcm64", help="hardware preset name")
+    ap.add_argument("--strategy", default="auto",
+                    help="solver strategy (default: auto-select)")
+    ap.add_argument("--m-samples", type=int, default=16)
+    ap.add_argument("--step", type=int, default=1)
+    ap.add_argument("--switch-cost", action="store_true",
+                    help="charge time-mux slices for weight re-deployment")
+    ap.add_argument("--requests", type=int, default=1000,
+                    help="approximate number of simulated requests")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate-scale", type=float, default=0.8,
+                    help="offered load as a fraction of solved capacity")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="batcher size cap (default: the DSE batch)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="batcher queue-delay cap")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the online re-solve hook")
+    ap.add_argument("--baselines", action="store_true",
+                    help="replay the same trace on equal-split and time-mux")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    return ap
+
+
+def _cmd_serve(args) -> None:
+    options = SearchOptions(
+        strategy=args.strategy, m_samples=args.m_samples, step=args.step,
+        switch_cost=args.switch_cost,
+    )
+    prob = problem(args.mix, args.hw, options=options)
+    # One SolutionCache for the primary solve, the baselines and any
+    # autoscale re-solves: every DSE shares one evaluation-engine memo.
+    from .api import SolutionCache
+
+    cache = SolutionCache()
+    sol = cache.solve(prob)
+    if not sol.feasible:
+        raise SystemExit(f"no feasible solution for {args.mix} on {args.hw}")
+    # One trace for every deployment: the offered load is fixed by the
+    # primary solution's capacity, so --baselines replays are like-for-like.
+    from .serving import request_trace
+
+    traffic, horizon = sol.offered_traffic(args.rate_scale, args.requests)
+    trace = request_trace(traffic, horizon, seed=args.seed)
+    serve_kw = dict(
+        trace=trace, horizon_s=horizon, seed=args.seed,
+        max_delay_s=args.max_delay_ms / 1e3, max_batch=args.max_batch,
+    )
+    report = sol.serve(autoscale=args.autoscale, cache=cache, **serve_kw)
+    out = {"solution": sol.to_json(), "serving": report.to_json()}
+    if args.baselines:
+        out["baselines"] = {}
+        for name in ("equal-split", "time-mux"):
+            b = cache.solve(prob.with_options(strategy=name))
+            if not b.feasible:
+                out["baselines"][name] = None
+                continue
+            out["baselines"][name] = b.serve(**serve_kw).to_json()
+    if args.as_json:
+        print(json.dumps(out, indent=1))
+        return
+    for line in sol.describe():
+        print(line)
+    print()
+    for line in report.describe():
+        print(line)
+    for name, rep in out.get("baselines", {}).items():
+        if rep is None:
+            print(f"{name}: infeasible")
+        else:
+            print(f"{name}: goodput {rep['goodput']:.1f}/s "
+                  f"(vs {report.goodput:.1f}), p95 "
+                  f"{rep['latency_p95_s'] * 1e3:.2f}ms "
+                  f"(vs {report.latency_p95_s * 1e3:.2f})")
 
 
 def _cmd_solve(args) -> None:
@@ -122,10 +214,13 @@ def main(argv=None) -> None:
     )
     sub = ap.add_subparsers(dest="command")
     _build_solve_parser(sub)
+    _build_serve_parser(sub)
     sub.add_parser("strategies", help="list registered solver strategies")
     args = ap.parse_args(argv)
     if args.command == "solve":
         _cmd_solve(args)
+    elif args.command == "serve":
+        _cmd_serve(args)
     elif args.command == "strategies":
         for name in available_strategies():
             print(name)

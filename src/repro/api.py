@@ -58,10 +58,13 @@ from .core.baselines import (
 from .core.costmodel import INF, CostModel
 from .core.fastcost import FastCostModel
 from .core.graph import (
+    MM_PARTITIONED,
     LayerGraph,
+    ModelAssignment,
     MultiModelSchedule,
     ScopeSchedule,
     SegmentSchedule,
+    mix_rate,
     validate_multimodel,
     validate_schedule,
 )
@@ -87,11 +90,14 @@ __all__ = [
     "Problem",
     "SearchOptions",
     "Solution",
+    "SolutionCache",
     "WorkloadSpec",
     "available_strategies",
     "problem",
+    "problem_fingerprint",
     "register_strategy",
     "solve",
+    "solve_many",
 ]
 
 
@@ -473,6 +479,211 @@ class Solution:
         return Deployment(cfgs=cfgs, plans=plans, multi=mm,
                           mesh_axes=mesh_axes)
 
+    # -------------------------------------------------------------- serving
+    def as_multimodel(self) -> MultiModelSchedule:
+        """This solution as a co-schedule: ``multi`` when set, otherwise the
+        single-model schedule wrapped as a one-assignment partitioned
+        deployment (the serving executor's input shape)."""
+        if self.multi is not None:
+            return self.multi
+        if self.schedule is None or not self.feasible:
+            raise ValueError(f"[{self.strategy}] nothing deployable to serve")
+        sched = self.schedule
+        sched.meta.setdefault(
+            "m_samples",
+            self.diagnostics.get("m_samples", self.problem.options.m_samples),
+        )
+        # Concurrent per-flavor footprint: the max over segments (segments
+        # run sequentially; clusters within one run concurrently).
+        by_flavor: dict[str | None, int] = {}
+        for seg in sched.segments:
+            seg_use: dict[str | None, int] = {}
+            for cl in seg.clusters:
+                seg_use[cl.chip_type] = (
+                    seg_use.get(cl.chip_type, 0) + cl.region_chips
+                )
+            for f, c in seg_use.items():
+                by_flavor[f] = max(by_flavor.get(f, 0), c)
+        order = [f for f, _ in package_flavors(self.hw)]
+        quota = tuple(
+            (f, by_flavor[f]) for f in order if by_flavor.get(f)
+        )
+        spec = self.problem.workload.models[0]
+        a = ModelAssignment(
+            model=sched.workload,
+            weight=spec.weight,
+            chips=sum(by_flavor.values()),
+            schedule=sched,
+            chip_type=quota[0][0] if len(quota) == 1 else None,
+            chip_quota=quota if len(quota) > 1 else (),
+        )
+        lam = mix_rate((a,))
+        return MultiModelSchedule(
+            package=self.hw.name, chips=self.hw.chips, mode=MM_PARTITIONED,
+            assignments=(a,), mix_rate=lam,
+            weighted_throughput=lam * a.weight,
+            meta={"wrapped_single_model": True},
+        )
+
+    def offered_traffic(
+        self, rate_scale: float = 0.8, n_requests: int = 1000
+    ) -> tuple[dict[str, float], float]:
+        """The default offered load: per-model Poisson rates at
+        ``rate_scale`` times the solved capacity (``mix_rate * weight``),
+        with the horizon sized so ~``n_requests`` arrive.  Returns
+        ``(traffic, horizon_s)`` -- the single source the CLI and the
+        serving bench use to replay identical traces across deployments."""
+        mm = self.as_multimodel()
+        lam = mm.mix_rate * rate_scale
+        traffic = {a.model: lam * a.weight for a in mm.assignments}
+        total = sum(traffic.values())
+        if total <= 0:
+            raise ValueError(f"[{self.strategy}] zero solved capacity")
+        return traffic, n_requests / total
+
+    def serve(
+        self,
+        traffic=None,
+        *,
+        trace=None,
+        n_requests: int = 1000,
+        horizon_s: float | None = None,
+        seed: int = 0,
+        rate_scale: float = 0.8,
+        max_batch: int | None = None,
+        max_delay_s: float = 2e-3,
+        max_queue: int | None = None,
+        slos: dict[str, float] | None = None,
+        autoscale=None,
+        cache: "SolutionCache | None" = None,
+        measure: bool = False,
+        mesh=None,
+        seq_len: int = 16,
+    ):
+        """Run this solution under synthetic traffic
+        (:class:`repro.serving.ServingExecutor`); returns a
+        :class:`~repro.serving.ServingReport`.
+
+        ``traffic`` maps model -> arrival process (or requests/s); default
+        is per-model Poisson at ``rate_scale`` times the solved capacity
+        (``mix_rate * weight``), sized so ~``n_requests`` arrive.  Pass a
+        pre-built ``trace`` to serve the exact same arrivals across
+        deployments (the benchmark's like-for-like comparison).
+        ``max_batch`` defaults to the DSE batch, which makes a saturated
+        simulated server reproduce the DSE throughput figure exactly.
+
+        ``autoscale`` (an :class:`~repro.serving.AutoscalePolicy`, or
+        ``True`` for defaults) turns on the online re-solve hook: observed
+        mix drift re-plans through a shared :class:`SolutionCache`
+        (``cache``), charging each redeploy as weight-reload dead time.
+        ``measure=True`` calibrates service times from the real jitted
+        steps (``deploy()`` + ``build_multimodel_steps`` on ``mesh``).
+        """
+        from .serving import (
+            AutoscalePolicy,
+            Autoscaler,
+            BatchingPolicy,
+            ServingExecutor,
+            measure_service_models,
+            request_trace,
+        )
+
+        mm = self.as_multimodel()
+        hw = self.hw
+        weights = {a.model: a.weight for a in mm.assignments}
+        if traffic is not None and trace is not None:
+            raise ValueError("pass traffic= or trace=, not both")
+        if trace is None:
+            if traffic is None:
+                traffic, default_horizon = self.offered_traffic(
+                    rate_scale, n_requests)
+                if horizon_s is None:
+                    horizon_s = default_horizon
+            if horizon_s is None:
+                total_rate = sum(
+                    (spec if isinstance(spec, (int, float))
+                     else getattr(spec, "mean_rate", 0.0))
+                    for spec in traffic.values()
+                )
+                if total_rate <= 0:
+                    raise ValueError(
+                        "cannot derive a horizon from rate-free traffic: "
+                        "pass horizon_s="
+                    )
+                horizon_s = n_requests / total_rate
+            trace = request_trace(traffic, horizon_s, seed=seed)
+        elif horizon_s is None:
+            horizon_s = trace[-1].t_arrive if trace else 0.0
+
+        if max_batch is None:
+            max_batch = max(
+                1, int(self.diagnostics.get("m_samples",
+                                            self.problem.options.m_samples))
+            )
+        batching = BatchingPolicy(max_batch=max_batch,
+                                  max_delay_s=max_delay_s,
+                                  max_queue_samples=max_queue)
+        if slos is None:
+            slos = {
+                m.name: m.slo_s for m in self.problem.workload.models
+                if getattr(m, "slo_s", None)
+            }
+        reload_s = {
+            m.name: m.graph.total_weight_bytes / hw.dram_bw_total
+            for m in self.problem.workload.models
+        }
+
+        autoscaler = None
+        if autoscale:
+            if self.multi is None or len(mm.assignments) < 2:
+                raise ValueError("autoscale needs a multi-model deployment")
+            policy = (autoscale if isinstance(autoscale, AutoscalePolicy)
+                      else AutoscalePolicy())
+            cache = cache or SolutionCache()
+            base = self.problem
+
+            def resolve_fn(new_weights: dict[str, float]):
+                models = tuple(
+                    replace(m, weight=new_weights[m.name])
+                    for m in base.workload.models
+                )
+                prob = replace(base,
+                               workload=replace(base.workload, models=models))
+                sol = cache.solve(prob)
+                info = {
+                    "dse_s": sol.diagnostics.get("dse_s"),
+                    "cache_hit": cache.last_hit,
+                    "engine_stats": sol.diagnostics.get("engine_stats", {}),
+                    "solve_cache": dict(cache.stats),
+                }
+                return (sol.multi, info)
+
+            autoscaler = Autoscaler(policy, resolve_fn, weights)
+
+        service_override = None
+        if measure:
+            dep = self.deploy()
+            if mesh is None:
+                import jax
+
+                from .launch.mesh import make_mesh
+
+                mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+            service_override = measure_service_models(dep, mesh,
+                                                      seq_len=seq_len)
+
+        ex = ServingExecutor(
+            mm, hw, batching=batching, slos=slos, autoscaler=autoscaler,
+            service_override=service_override, reload_s=reload_s, seed=seed,
+        )
+        report = ex.run(trace, horizon_s=horizon_s)
+        report.meta.update(
+            strategy=self.strategy,
+            solved_mix_rate=mm.mix_rate,
+            solved_weighted_throughput=mm.weighted_throughput,
+        )
+        return report
+
     # ------------------------------------------------------------- display
     def describe(self) -> list[str]:
         """Human-readable summary lines (CLI / examples)."""
@@ -823,3 +1034,124 @@ def solve(prob: Problem | None = None, *, workload=None, package=None,
     if o.validate and sol.feasible:
         sol.validate()
     return sol
+
+
+# ---------------------------------------------------------------------------
+# solve_many / SolutionCache: repeated solves sharing one engine memo
+# ---------------------------------------------------------------------------
+
+def _hw_fingerprint(hw: HardwareModel) -> HardwareModel:
+    # HardwareModel is a frozen dataclass of scalars and tuples: the value
+    # itself is the key, so no perf field can be forgotten from a summary.
+    return hw
+
+
+def problem_fingerprint(prob: Problem, hw: HardwareModel | None = None) -> tuple:
+    """Hashable identity of a Problem's *solution*: workload graphs (by
+    name/size/volume), traffic weights, the resolved hardware (the full
+    frozen HardwareModel), flavor caps, and every result-affecting
+    SearchOptions field.  Two problems with equal fingerprints solve to
+    the same Solution, so :class:`SolutionCache` may return the cached
+    one."""
+    if hw is None:
+        hw = prob.package.resolve()
+    wl = prob.workload
+    models = tuple(
+        (m.name, round(m.weight, 9), len(m.graph),
+         round(m.graph.total_flops, 3),
+         round(m.graph.total_weight_bytes, 3),
+         getattr(m, "slo_s", None))
+        for m in wl.models
+    )
+    o = prob.options
+    opts = (
+        o.strategy, o.region_mode.value, o.m_samples, o.paper_strict,
+        o.ep_for_moe,
+        tuple(o.segment_counts) if o.segment_counts else None,
+        o.max_clusters, o.chip_type,
+        o.step, o.mixed, o.mixed_step, o.refine, o.cut_window,
+        o.include_merged, o.include_time_mux, o.switch_cost,
+        o.switch_period_s, o.samples, o.seed, o.engine,
+        o.distributed_weights,
+    )
+    caps = (tuple(tuple(c) for c in prob.package.flavor_caps)
+            if prob.package.flavor_caps is not None else None)
+    return (models, wl.seq_len, _hw_fingerprint(hw), caps, opts)
+
+
+class SolutionCache:
+    """Memoized :func:`solve`: one shared evaluation engine per (hardware,
+    engine-options) pair across *all* solves, plus a whole-``Solution``
+    cache keyed by :func:`problem_fingerprint`.
+
+    This is the serving autoscaler's solver (repeated re-solves of similar
+    mixes are near-free: the engine memo carries cluster costs across
+    mixes, and a mix seen before is a solution hit) and the backing store
+    of :func:`solve_many`.  ``stats`` records the hit rates.
+    """
+
+    def __init__(self):
+        self._engines: dict[tuple, CostModel] = {}
+        self._solutions: dict[tuple, Solution] = {}
+        self.hits = 0
+        self.misses = 0
+        self.last_hit = False
+
+    def engine_for(self, prob: Problem, hw: HardwareModel) -> CostModel:
+        o = prob.options
+        if o.cost is not None:
+            return o.cost
+        key = (_hw_fingerprint(hw), o.engine, o.m_samples,
+               o.distributed_weights)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self._engines[key] = o.make_cost(hw)
+        return eng
+
+    def solve(self, prob: Problem) -> Solution:
+        if prob.options.cost is not None:
+            # A caller-supplied engine is outside the declarative problem
+            # identity the fingerprint captures: solve directly, uncached
+            # (neither reusing nor poisoning default-engine entries).
+            self.misses += 1
+            self.last_hit = False
+            return solve(prob)
+        hw = prob.package.resolve()
+        key = problem_fingerprint(prob, hw)
+        sol = self._solutions.get(key)
+        if sol is not None:
+            self.hits += 1
+            self.last_hit = True
+            return sol
+        self.misses += 1
+        self.last_hit = False
+        cost = self.engine_for(prob, hw)
+        sol = solve(replace(prob, options=replace(prob.options, cost=cost)))
+        # Keep the caller's cost-free Problem as the solution's identity:
+        # downstream re-solves derived from sol.problem (the autoscaler's
+        # resolve_fn) must take the cached path, not the cost bypass above.
+        sol.problem = prob
+        sol.diagnostics["solve_cache"] = dict(self.stats)
+        self._solutions[key] = sol
+        return sol
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "solution_hits": self.hits,
+            "solution_misses": self.misses,
+            "solutions": len(self._solutions),
+            "engines": len(self._engines),
+        }
+
+
+def solve_many(
+    problems, cache: SolutionCache | None = None
+) -> list[Solution]:
+    """Solve a batch of problems through one :class:`SolutionCache`: every
+    sub-search of every problem shares one ``FastCostModel`` memo per
+    hardware, and duplicate problems are whole-solution hits.  Each
+    returned Solution's ``diagnostics["solve_cache"]`` snapshots the hit
+    rates at its solve time."""
+    cache = cache or SolutionCache()
+    return [cache.solve(p) for p in problems]

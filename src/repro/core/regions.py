@@ -47,25 +47,156 @@ def uniform_allocate(n_regions: int, chips: int) -> list[int] | None:
     return [chips // n_regions] * n_regions
 
 
-def zigzag_placement(region_sizes: list[int], mesh_shape: tuple[int, int]) -> list[list[tuple[int, int]]]:
-    """Assign chip coordinates to regions walking the mesh boustrophedon.
-
-    Keeps each region spatially contiguous, as validated by prior work
-    ([17] Tangram) -- consecutive regions share a seam, which is what the
-    cost model's cross-region boundary term assumes.
-    """
+def zigzag_order(mesh_shape: tuple[int, int]) -> list[tuple[int, int]]:
+    """The boustrophedon walk of the mesh: the 1D chip order every placement
+    (and every flavor zone of a heterogeneous package) is carved from."""
     rows, cols = mesh_shape
     order = []
     for r in range(rows):
         rng = range(cols) if r % 2 == 0 else range(cols - 1, -1, -1)
         order.extend((r, c) for c in rng)
-    if sum(region_sizes) > len(order):
-        raise ValueError("regions exceed mesh capacity")
-    out, cursor = [], 0
-    for size in region_sizes:
-        out.append(order[cursor : cursor + size])
-        cursor += size
-    return out
+    return order
+
+
+def flavor_zones(
+    flavor_counts: list[tuple[str | None, int]],
+    mesh_shape: tuple[int, int],
+) -> dict[str | None, list[tuple[int, int]]]:
+    """Physical home of each chip flavor: consecutive slices of the zigzag
+    walk, in ``flavor_counts`` (= ``HardwareModel.region_types``) order.
+
+    Adjacent zones share the package's physical flavor seam -- the boundary
+    the cost model prices via ``HardwareModel.seam_link_bw``.
+    """
+    order = zigzag_order(mesh_shape)
+    if sum(c for _, c in flavor_counts) > len(order):
+        raise ValueError("flavor zones exceed mesh capacity")
+    zones, cursor = {}, 0
+    for flavor, c in flavor_counts:
+        if flavor in zones:
+            raise ValueError(f"duplicate flavor {flavor!r}")
+        zones[flavor] = order[cursor : cursor + c]
+        cursor += c
+    return zones
+
+
+def zigzag_placement(
+    region_sizes: list[int],
+    mesh_shape: tuple[int, int],
+    region_flavors: list[str | None] | None = None,
+    flavor_counts: list[tuple[str | None, int]] | None = None,
+) -> list[list[tuple[int, int]]]:
+    """Assign chip coordinates to regions walking the mesh boustrophedon.
+
+    Keeps each region spatially contiguous, as validated by prior work
+    ([17] Tangram) -- consecutive regions share a seam, which is what the
+    cost model's cross-region boundary term assumes.
+
+    ``region_flavors`` (mixed-flavor pipelines) makes the placement
+    flavor-aware: each region is pinned inside its flavor's physical zone
+    (:func:`flavor_zones` over ``flavor_counts``), and each flavor *run* is
+    aligned against the zone edge facing the neighboring run's zone, so the
+    pipeline's cross-flavor hand-off happens across the physical seam the
+    cost model charges.  Region flavors must form contiguous runs -- a
+    placement like ``big, little, big`` would tear the big zone apart and
+    straddle the seam twice; it raises ``ValueError``.
+    """
+    if region_flavors is None:
+        order = zigzag_order(mesh_shape)
+        if sum(region_sizes) > len(order):
+            raise ValueError("regions exceed mesh capacity")
+        out, cursor = [], 0
+        for size in region_sizes:
+            out.append(order[cursor : cursor + size])
+            cursor += size
+        return out
+
+    if flavor_counts is None:
+        raise ValueError("region_flavors requires flavor_counts")
+    if len(region_flavors) != len(region_sizes):
+        raise ValueError(
+            f"{len(region_flavors)} flavors for {len(region_sizes)} regions"
+        )
+    zone_index = {f: k for k, (f, _) in enumerate(flavor_counts)}
+    for f in region_flavors:
+        if f not in zone_index:
+            raise ValueError(f"region flavor {f!r} not in {list(zone_index)}")
+    # Group regions into contiguous same-flavor runs.
+    runs: list[tuple[str | None, list[int]]] = []
+    for i, f in enumerate(region_flavors):
+        if runs and runs[-1][0] == f:
+            runs[-1][1].append(i)
+        else:
+            runs.append((f, [i]))
+    seen = [f for f, _ in runs]
+    if len(set(seen)) != len(seen):
+        raise ValueError(
+            f"non-contiguous flavor runs {seen}: a flavor's regions must "
+            "occupy one contiguous stretch of the pipeline (the placement "
+            "would straddle the physical seam)"
+        )
+    zones = flavor_zones(flavor_counts, mesh_shape)
+    out: list[list[tuple[int, int]] | None] = [None] * len(region_sizes)
+    for k, (f, idxs) in enumerate(runs):
+        need = sum(region_sizes[i] for i in idxs)
+        zone = zones[f]
+        if need > len(zone):
+            raise ValueError(
+                f"flavor {f!r} regions need {need} > {len(zone)} chips"
+            )
+        # Pin the run against the seam shared with its neighboring run
+        # (successor preferred: that is where the activations hand off).
+        neighbor = (runs[k + 1][0] if k + 1 < len(runs)
+                    else runs[k - 1][0] if k > 0 else None)
+        start = (len(zone) - need
+                 if neighbor is not None and zone_index[neighbor] > zone_index[f]
+                 else 0)
+        cursor = start
+        for i in idxs:
+            out[i] = zone[cursor : cursor + region_sizes[i]]
+            cursor += region_sizes[i]
+    return out  # type: ignore[return-value]
+
+
+def check_schedule_placement(
+    schedule,
+    mesh_shape: tuple[int, int],
+    flavor_counts: list[tuple[str | None, int]],
+) -> list[list[list[tuple[int, int]]]]:
+    """Flavor-aware placement of every segment of a ``ScopeSchedule``.
+
+    Segments run sequentially, so each places independently; within a
+    segment the clusters' flavors must form contiguous runs inside their
+    zones (:func:`zigzag_placement` raises otherwise).  This is the one
+    placement validator behind both the runtime planner and the serving
+    executor; returns per-segment region coordinates.
+    """
+    return [
+        zigzag_placement(
+            [cl.region_chips for cl in seg.clusters],
+            mesh_shape,
+            region_flavors=[cl.chip_type for cl in seg.clusters],
+            flavor_counts=flavor_counts,
+        )
+        for seg in schedule.segments
+    ]
+
+
+def check_assignments_placement(
+    assignments,
+    mesh_shape: tuple[int, int],
+    flavor_counts: list[tuple[str | None, int]],
+) -> None:
+    """Run :func:`check_schedule_placement` over a co-schedule's
+    assignments, deduplicating shared schedules (merged mode carries one
+    schedule on every assignment) -- the one wrapper behind both the
+    runtime planner's and the serving executor's placement enforcement."""
+    seen: set[int] = set()
+    for a in assignments:
+        if id(a.schedule) in seen:
+            continue
+        seen.add(id(a.schedule))
+        check_schedule_placement(a.schedule, mesh_shape, flavor_counts)
 
 
 def rebalance(

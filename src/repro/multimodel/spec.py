@@ -14,9 +14,14 @@ class ModelSpec:
     ``weight`` is the relative request rate of this model in the traffic
     mix (weights only matter relative to each other): the co-scheduler
     maximizes the sustainable rate of the weighted mix unit.
+
+    ``slo_s`` (optional) is the model's serving latency objective: the DSE
+    ignores it, but the serving executor reports per-model SLO attainment
+    and counts only SLO-satisfying samples toward goodput.
     """
     graph: LayerGraph
     weight: float = 1.0
+    slo_s: float | None = None
 
     @property
     def name(self) -> str:
@@ -25,12 +30,16 @@ class ModelSpec:
     def __post_init__(self):
         if self.weight <= 0:
             raise ValueError(f"{self.graph.name}: weight must be > 0")
+        if self.slo_s is not None and self.slo_s <= 0:
+            raise ValueError(f"{self.graph.name}: slo_s must be > 0")
 
 
 def parse_mix(mix: str) -> list[ModelSpec]:
     """``"resnet50:2,alexnet:1"`` -> ModelSpecs (weight defaults to 1).
 
-    Names resolve through the CNN workload registry; duplicate names get a
+    A third ``:``-field is the model's serving SLO in milliseconds
+    (``"resnet50:2:50"`` = weight 2, 50 ms latency objective).  Names
+    resolve through the CNN workload registry; duplicate names get a
     ``#k`` suffix so per-model results stay distinguishable.
     """
     specs: list[ModelSpec] = []
@@ -39,13 +48,19 @@ def parse_mix(mix: str) -> list[ModelSpec]:
         part = part.strip()
         if not part:
             continue
-        name, _, w = part.partition(":")
+        fields = part.split(":")
+        if len(fields) > 3:
+            raise ValueError(f"mix entry {part!r}: name[:weight[:slo_ms]]")
+        name = fields[0]
+        weight = float(fields[1]) if len(fields) > 1 and fields[1] else 1.0
+        slo_s = (float(fields[2]) / 1e3
+                 if len(fields) > 2 and fields[2] else None)
         graph = get_cnn(name)
         count = seen.get(name, 0)
         seen[name] = count + 1
         if count:
             graph = LayerGraph(f"{name}#{count + 1}", graph.layers)
-        specs.append(ModelSpec(graph, float(w) if w else 1.0))
+        specs.append(ModelSpec(graph, weight, slo_s=slo_s))
     if not specs:
         raise ValueError(f"empty mix: {mix!r}")
     return specs

@@ -105,6 +105,33 @@ def schedule_stages(schedule) -> tuple[tuple[int, int, str | None, int], ...]:
     )
 
 
+def check_stage_placement(
+    stage_chip_types: tuple[tuple[int, int, str | None, int], ...],
+    hw,
+) -> list[list[tuple[int, int]]]:
+    """Tie a plan's per-stage chip flavors to mesh coordinates.
+
+    Places each stage's region inside its flavor's physical zone of the
+    package mesh (flavor-aware :func:`~repro.core.regions.zigzag_placement`)
+    and returns the per-stage coordinate lists.  Raises ``ValueError`` when
+    the plan's flavor runs straddle the seam non-contiguously (a flavor
+    appearing in two separate runs would tear its zone apart) or overflow a
+    flavor's chips -- the placement-level completion of the
+    ``validate_schedule`` seam accounting.
+    """
+    from ..core.regions import zigzag_placement
+    from ..multimodel.quota import package_flavors
+
+    if not stage_chip_types:
+        return []
+    return zigzag_placement(
+        [chips for _, _, _, chips in stage_chip_types],
+        hw.mesh_shape,
+        region_flavors=[ctype for _, _, ctype, _ in stage_chip_types],
+        flavor_counts=package_flavors(hw),
+    )
+
+
 def plan_for_multimodel(
     cfgs: list[ModelConfig],
     seq_len: int,
@@ -165,6 +192,14 @@ def plan_for_multimodel(
                          switch_cost=switch_cost)
     if mm is None:
         return None, {}
+    if hw.region_types:
+        # Placement-level seam check: every assignment's stage flavors must
+        # map onto contiguous zone coordinates (per segment).
+        from ..core.regions import check_assignments_placement
+        from ..multimodel.quota import package_flavors
+
+        check_assignments_placement(mm.assignments, hw.mesh_shape,
+                                    package_flavors(hw))
     plans: dict[str, ShardPlan] = {}
     for cfg, graph, spec in zip(cfgs, graphs, specs):
         a = mm.assignment(spec.name)

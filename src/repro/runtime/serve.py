@@ -108,11 +108,11 @@ def build_multimodel_steps(
     ``meta["time_share"]`` were chosen jointly by the co-scheduler.  Every
     model gets its own jitted prefill (and decode) step on the *shared*
     mesh, which executes a time-multiplexed co-schedule directly (dispatch
-    each model for its ``time_share``).  For ``co_mode == "partitioned"``
-    these steps are the bridge, not the destination: true concurrent
-    execution needs per-quota sub-meshes (jitting each model against a
-    ``quota_chips``-sized mesh slice), which is the serving-executor item
-    tracked in ROADMAP.md.
+    each model for its ``time_share``).  The request scheduler that drives
+    these steps under load -- queueing, batching, quota sub-meshes, slice
+    windows -- is :mod:`repro.serving`; its ``measure=True`` path times the
+    steps built here to calibrate the simulator's service model
+    (:func:`repro.serving.measure_service_models`).
 
     Returns ``{cfg.name: {"prefill": fn, "param_specs": specs,
     "decode": fn, "cache_specs": specs, "plan": plan}}``.

@@ -1,0 +1,58 @@
+"""Serving executor: run a solved Deployment under synthetic traffic.
+
+The pieces, in data-flow order:
+
+* :mod:`.traffic` -- seeded open-loop request generators (Poisson, bursty
+  MMPP, diurnal ramp) producing the merged arrival trace;
+* :mod:`.executor` -- the discrete-event engine: per-model FIFO queues, a
+  max-batch/max-delay batcher, and servers that enforce exactly the
+  resources the co-schedule granted (quota sub-meshes, time-mux slice
+  windows with switch cost, merged interleave rates);
+* :mod:`.metrics` -- goodput, latency percentiles, queue depths, chip
+  utilization, SLO attainment (:class:`~.metrics.ServingReport`);
+* :mod:`.autoscale` -- the online re-solve hook (sliding-window mix drift
+  -> re-plan through the facade's cached solver).
+
+Front doors: :meth:`repro.api.Solution.serve` and
+``python -m repro serve``.
+"""
+from .autoscale import AutoscalePolicy, Autoscaler
+from .executor import (
+    BatchingPolicy,
+    ServiceModel,
+    ServingExecutor,
+    allocate_submeshes,
+    measure_service_models,
+    service_from_assignment,
+    simulate,
+)
+from .metrics import ModelMetrics, ServingReport, percentile
+from .traffic import (
+    MMPP,
+    Diurnal,
+    Poisson,
+    Request,
+    phased_trace,
+    request_trace,
+)
+
+__all__ = [
+    "AutoscalePolicy",
+    "Autoscaler",
+    "BatchingPolicy",
+    "Diurnal",
+    "MMPP",
+    "ModelMetrics",
+    "Poisson",
+    "Request",
+    "ServiceModel",
+    "ServingExecutor",
+    "ServingReport",
+    "allocate_submeshes",
+    "measure_service_models",
+    "percentile",
+    "phased_trace",
+    "request_trace",
+    "service_from_assignment",
+    "simulate",
+]

@@ -1,0 +1,599 @@
+"""Discrete-event serving executor: run a solved co-schedule under load.
+
+The DSE (PRs 1-4) answers *what to deploy*; this engine answers *what that
+deployment does to requests*: it admits a seeded open-loop trace
+(:mod:`.traffic`), batches per-model FIFO queues (max batch size + max
+queue delay), and executes batches on servers whose capacity is exactly
+what the solved :class:`~repro.core.graph.MultiModelSchedule` granted:
+
+* **partitioned** quotas run concurrently, each on its own chip sub-mesh
+  carved from the package's flavor zones
+  (:func:`repro.core.regions.flavor_zones`) -- spanning quotas
+  (``chip_quota``) get the seam-adjacent slice of each flavor zone, and
+  every assignment's stage flavor runs are re-checked against mesh
+  coordinates (:func:`repro.core.regions.zigzag_placement`);
+* **time-mux** assignments serialize on the whole package inside periodic
+  slice windows, with the PR 3 switch cost as dead reload time at each
+  slice start (``meta["reload_s"]`` / ``gross_shares``);
+* **merged** pipelines interleave at their solved per-model weighted rates
+  (``samples_per_beat``).
+
+Service times come from the solved schedule's cost model: a schedule with
+``S`` pipeline stages and latency ``L`` for the DSE batch ``m`` is a serial
+batch server with beat ``L / (S - 1 + m)`` and service
+``(S - 1 + b / samples_per_beat) * beat`` for a ``b``-sample batch -- so a
+saturated server reproduces the DSE's throughput figure exactly (batches of
+``m`` samples complete every ``L`` seconds).  An optional measured path
+(:func:`measure_service_models`) calibrates the service law by timing the
+real jitted steps from ``build_multimodel_steps`` instead.
+
+The engine is wall-clock-free and fully deterministic under the trace seed.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+from ..core.graph import (
+    MM_MERGED,
+    MM_PARTITIONED,
+    MM_TIME_MUX,
+    ModelAssignment,
+    MultiModelSchedule,
+)
+from ..core.hw import HardwareModel
+from ..core.regions import check_assignments_placement, flavor_zones
+from ..multimodel.quota import package_flavors
+from .metrics import ServingReport, summarize
+from .traffic import Request
+
+INF = float("inf")
+_EPS = 1e-12
+
+__all__ = [
+    "BatchingPolicy",
+    "ServiceModel",
+    "ServingExecutor",
+    "allocate_submeshes",
+    "measure_service_models",
+    "service_from_assignment",
+    "simulate",
+]
+
+
+@dataclass(frozen=True)
+class BatchingPolicy:
+    """Queue -> batch policy: dispatch when ``max_batch`` samples are
+    waiting or the oldest request has queued for ``max_delay_s``.
+
+    ``max_batch`` is in *beats*: a merged-mode model whose
+    ``samples_per_beat`` is k dispatches up to ``max_batch * k`` samples
+    per batch (k = 1 everywhere else), so a saturated server of any mode
+    reproduces its DSE throughput when ``max_batch`` equals the DSE batch.
+    """
+    max_batch: int = 16
+    max_delay_s: float = 2e-3
+    max_queue_samples: int | None = None    # admission cap (None = unbounded)
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch {self.max_batch} < 1")
+        if self.max_delay_s < 0:
+            raise ValueError(f"max_delay_s {self.max_delay_s} < 0")
+
+
+@dataclass(frozen=True)
+class ServiceModel:
+    """Batch service law ``overhead + (stages - 1 + b / spb) * beat``."""
+    beat: float
+    stages: int = 1
+    samples_per_beat: float = 1.0
+    overhead_s: float = 0.0
+
+    def service_s(self, samples: int) -> float:
+        return self.overhead_s + (
+            self.stages - 1 + samples / self.samples_per_beat
+        ) * self.beat
+
+
+def service_from_assignment(a: ModelAssignment) -> ServiceModel:
+    """Service law of one assignment, from its solved schedule.
+
+    ``beat = latency / (S - 1 + m)`` inverts the pipeline fill model the
+    cost evaluator uses, so a server saturated with ``m``-sample batches
+    serves exactly the schedule's ``m / latency`` samples/s (times the
+    merged-mode ``samples_per_beat`` weighting).
+    """
+    sched = a.schedule
+    if sched.latency <= 0 or sched.latency == INF:
+        raise ValueError(f"{a.model}: infeasible schedule cannot serve")
+    m = sched.meta.get("m_samples", 1)
+    stages = sum(len(seg.clusters) for seg in sched.segments) or 1
+    beat = sched.latency / (stages - 1 + m)
+    return ServiceModel(beat=beat, stages=stages,
+                        samples_per_beat=a.samples_per_beat)
+
+
+@dataclass
+class _Server:
+    """One model's execution resource: a serial batch server, optionally
+    gated by periodic time-mux availability windows."""
+    model: str
+    chips: int
+    service: ServiceModel
+    window: tuple[float, float, float] | None = None   # (offset, span, period)
+    free_at: float = 0.0
+
+    def advance(self, t: float, work: float) -> float:
+        """Absolute completion time of ``work`` busy-seconds started at
+        ``t``, walking this server's availability windows."""
+        if self.window is None:
+            return t + work
+        off, span, period = self.window
+        if span <= _EPS:
+            raise ValueError(f"{self.model}: zero-width time-mux slice")
+        # Walk period indices monotonically (a float-exact boundary time
+        # must not re-derive the same index and spin).
+        k = math.floor((t - off) / period) - 1
+        while True:
+            w_start = off + k * period
+            w_end = w_start + span
+            if w_end - _EPS <= t:
+                k += 1
+                continue
+            cur = max(t, w_start)
+            avail = w_end - cur
+            if work <= avail + _EPS:
+                return cur + min(work, avail)
+            work -= avail
+            k += 1
+
+    def window_time(self, a: float, b: float) -> float:
+        """Seconds of ``[a, b]`` inside availability windows (== ``b - a``
+        for always-on servers); the slice-enforcement invariant's oracle."""
+        if self.window is None:
+            return max(0.0, b - a)
+        off, span, period = self.window
+        total = 0.0
+        k = math.floor((a - off) / period) - 1
+        while True:
+            w_start = off + k * period
+            if w_start >= b:
+                return total
+            total += max(0.0, min(b, w_start + span) - max(a, w_start))
+            k += 1
+
+
+# ---------------------------------------------------------------------------
+# Sub-mesh allocation (quota enforcement on mesh coordinates)
+# ---------------------------------------------------------------------------
+
+def allocate_submeshes(
+    mm: MultiModelSchedule, hw: HardwareModel
+) -> dict[str, dict[str | None, list[tuple[int, int]]]]:
+    """Carve each partitioned assignment's chip sub-mesh out of the
+    package's flavor zones; returns ``{model: {flavor: coords}}``.
+
+    Single-flavor quotas fill their zone front to back; spanning quotas
+    (``chip_quota``) take the seam-adjacent end of the earlier zone and the
+    seam-adjacent front of the later one, so a pipeline that crosses the
+    flavor seam physically straddles it exactly once.  Overcommitted zones
+    raise -- this is the executor's quota-enforcement check.  Time-mux and
+    merged deployments share the whole package (every model sees all
+    zones).
+    """
+    counts = package_flavors(hw)
+    zones = flavor_zones(counts, hw.mesh_shape)
+    if mm.mode != MM_PARTITIONED:
+        return {a.model: {f: list(z) for f, z in zones.items()}
+                for a in mm.assignments}
+    front = {f: 0 for f, _ in counts}
+    back = {f: len(zones[f]) for f, _ in counts}
+    out: dict[str, dict[str | None, list[tuple[int, int]]]] = {}
+    for a in mm.assignments:
+        needs = list(a.chip_quota) if a.chip_quota else [(a.chip_type, a.chips)]
+        live = [n for n in needs if n[1] > 0]
+        spanning = len(live) > 1
+        got: dict[str | None, list[tuple[int, int]]] = {}
+        for idx, (f, c) in enumerate(live):
+            if f not in zones:
+                raise ValueError(f"{a.model}: unknown chip flavor {f!r}")
+            zone = zones[f]
+            if front[f] + c > back[f]:
+                raise ValueError(
+                    f"{a.model}: quota overcommits flavor {f!r} "
+                    f"({c} chips requested, "
+                    f"{back[f] - front[f]} free of {len(zone)})"
+                )
+            if spanning and idx == 0:
+                got[f] = zone[back[f] - c:back[f]]      # seam side (zone end)
+                back[f] -= c
+            else:
+                got[f] = zone[front[f]:front[f] + c]    # zone front
+                front[f] += c
+        out[a.model] = got
+    return out
+
+
+def check_stage_contiguity(mm: MultiModelSchedule, hw: HardwareModel) -> None:
+    """Re-check every assignment's per-segment stage flavors against mesh
+    coordinates: flavor runs must place contiguously inside their zones
+    (raises via :func:`check_assignments_placement` otherwise)."""
+    check_assignments_placement(mm.assignments, hw.mesh_shape,
+                                package_flavors(hw))
+
+
+# ---------------------------------------------------------------------------
+# Server construction
+# ---------------------------------------------------------------------------
+
+def build_servers(
+    mm: MultiModelSchedule,
+    hw: HardwareModel,
+    origin: float = 0.0,
+    switch_period_s: float | None = None,
+    service_override: dict[str, ServiceModel] | None = None,
+) -> dict[str, _Server]:
+    """One server per assignment.  Time-mux deployments get periodic
+    windows laid out back to back over the scheduling period, each slice's
+    useful span starting after its reload time (the PR 3 switch cost)."""
+    servers: dict[str, _Server] = {}
+    n = len(mm.assignments)
+    if mm.mode == MM_TIME_MUX:
+        period = switch_period_s or mm.meta.get("switch_period_s", 1.0)
+        reloads = mm.meta.get("reload_s", [0.0] * n)
+        gross = mm.meta.get("gross_shares") or [
+            a.time_share for a in mm.assignments
+        ]
+        off = 0.0
+        for a, g, r in zip(mm.assignments, gross, reloads):
+            service = (service_override or {}).get(a.model) \
+                or service_from_assignment(a)
+            span = a.time_share * period
+            servers[a.model] = _Server(
+                model=a.model, chips=a.chips, service=service,
+                window=(origin + off + r, span, period), free_at=origin,
+            )
+            off += g * period
+        if off > period * (1 + 1e-9):
+            raise ValueError(
+                f"time-mux slices overflow the period: {off} > {period}"
+            )
+    else:
+        for a in mm.assignments:
+            service = (service_override or {}).get(a.model) \
+                or service_from_assignment(a)
+            servers[a.model] = _Server(model=a.model, chips=a.chips,
+                                       service=service, free_at=origin)
+    return servers
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+_ARRIVE, _TIMER, _DONE, _CHECK = 0, 1, 2, 3
+
+
+class ServingExecutor:
+    """Event-driven simulation of one deployment under one request trace.
+
+    ``autoscaler`` (optional, see :mod:`.autoscale`) is polled on periodic
+    check events; when it returns a re-solved schedule the executor swaps
+    the server fleet, charging ``redeploy_s`` (weight reload through DRAM)
+    as dead time before the new servers accept work -- in-flight batches
+    finish on the old fleet.
+    """
+
+    def __init__(
+        self,
+        mm: MultiModelSchedule,
+        hw: HardwareModel,
+        batching: BatchingPolicy | None = None,
+        slos: dict[str, float | None] | None = None,
+        autoscaler=None,
+        service_override: dict[str, ServiceModel] | None = None,
+        switch_period_s: float | None = None,
+        reload_s: dict[str, float] | None = None,
+        seed: int = 0,
+    ):
+        self.mm = mm
+        self.hw = hw
+        self.batching = batching or BatchingPolicy()
+        self.slos = slos or {}
+        self.autoscaler = autoscaler
+        self.service_override = service_override
+        self.switch_period_s = switch_period_s
+        self.reload_s = reload_s or {}
+        self.seed = seed
+        check_stage_contiguity(mm, hw)
+        self.placement = allocate_submeshes(mm, hw)
+        self.servers = build_servers(mm, hw, 0.0, switch_period_s,
+                                     service_override)
+        # per-model accounting (survives autoscale fleet swaps)
+        models = list(self.servers)
+        self.queues: dict[str, deque[Request]] = {m: deque() for m in models}
+        self.queued_samples = {m: 0 for m in models}
+        self.arrived = {m: [0, 0] for m in models}
+        self.dropped = {m: [0, 0] for m in models}
+        self.latencies: dict[str, list[float]] = {m: [] for m in models}
+        self.req_samples: dict[str, list[int]] = {m: [] for m in models}
+        self.batches = {m: 0 for m in models}
+        self.busy_s = {m: 0.0 for m in models}
+        self.queue_traces: dict[str, list[tuple[float, int]]] = {
+            m: [] for m in models
+        }
+        # per-batch log: (t_start, t_done, work_s, samples, window) -- the
+        # slice-enforcement invariant's evidence
+        self.batch_log: dict[str, list[tuple]] = {m: [] for m in models}
+        self.redeploys: list[dict] = []
+        self._heap: list[tuple] = []
+        self._seq = 0
+        self._makespan = 0.0
+        self._timer_at: dict[str, float] = {}   # pending batch-delay timer
+
+    # ------------------------------------------------------------- plumbing
+    def _push(self, t: float, kind: int, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, kind, self._seq, payload))
+
+    def _trace_queue(self, t: float, model: str) -> None:
+        tr = self.queue_traces[model]
+        depth = self.queued_samples[model]
+        if tr and tr[-1][0] == t:
+            tr[-1] = (t, depth)
+        else:
+            tr.append((t, depth))
+
+    # ------------------------------------------------------------- dispatch
+    def _try_dispatch(self, model: str, t: float) -> None:
+        q = self.queues[model]
+        srv = self.servers[model]
+        if not q or srv.free_at > t + _EPS:
+            return                      # retried when the server frees up
+        total = self.queued_samples[model]
+        age = t - q[0].t_arrive
+        pol = self.batching
+        max_batch = max(
+            1, round(pol.max_batch * srv.service.samples_per_beat))
+        if total < max_batch and age < pol.max_delay_s - _EPS:
+            deadline = q[0].t_arrive + pol.max_delay_s
+            # one pending timer per model is enough: later arrivals only
+            # move the deadline later, and a fired timer re-evaluates
+            if self._timer_at.get(model, INF) > deadline + _EPS:
+                self._timer_at[model] = deadline
+                self._push(deadline, _TIMER, model)
+            return
+        batch: list[Request] = []
+        samples = 0
+        while q and samples < max_batch:
+            r = q[0]
+            if batch and samples + r.samples > max_batch:
+                break
+            batch.append(q.popleft())
+            samples += r.samples
+        self.queued_samples[model] -= samples
+        self._trace_queue(t, model)
+        start = max(t, srv.free_at)
+        work = srv.service.service_s(samples)
+        done = srv.advance(start, work)
+        srv.free_at = done
+        self.busy_s[model] += work
+        self.batches[model] += 1
+        self.batch_log[model].append((start, done, work, samples, srv.window))
+        self._push(done, _DONE, (model, batch, id(srv)))
+
+    # ------------------------------------------------------------ autoscale
+    def _apply_autoscale(self, t: float) -> None:
+        out = self.autoscaler.maybe_resolve(t)
+        if out is None:
+            return
+        new_mm, event = out
+        check_stage_contiguity(new_mm, self.hw)
+        redeploy = sum(
+            self.reload_s.get(a.model, 0.0) for a in new_mm.assignments
+        )
+        old = self.servers
+        origin = t + redeploy
+        self.servers = build_servers(new_mm, self.hw, origin,
+                                     self.switch_period_s,
+                                     self.service_override)
+        if set(self.servers) != set(old):
+            raise ValueError(
+                f"autoscale changed the model set: {sorted(old)} -> "
+                f"{sorted(self.servers)} (re-solves may only move chips)"
+            )
+        for m, srv in self.servers.items():
+            # let in-flight batches drain on the old fleet first
+            srv.free_at = max(srv.free_at, old[m].free_at)
+        self.mm = new_mm
+        self.placement = allocate_submeshes(new_mm, self.hw)
+        event = dict(event, redeploy_s=redeploy)
+        self.redeploys.append(event)
+        for m, srv in self.servers.items():
+            # wake every queue when its new server starts accepting work --
+            # without this, a model with no in-flight batch and no further
+            # arrivals would strand its queued requests forever
+            self._push(max(t, srv.free_at), _TIMER, m)
+            self._try_dispatch(m, t)
+
+    # ------------------------------------------------------------------ run
+    def run(self, trace: list[Request], horizon_s: float | None = None
+            ) -> ServingReport:
+        if horizon_s is None:
+            horizon_s = trace[-1].t_arrive if trace else 0.0
+        for r in trace:
+            if r.model not in self.servers:
+                raise ValueError(
+                    f"request for {r.model!r}: deployment serves "
+                    f"{sorted(self.servers)}"
+                )
+            self._push(r.t_arrive, _ARRIVE, r)
+        if self.autoscaler is not None and trace:
+            step = self.autoscaler.policy.check_every_s
+            t = step
+            while t <= horizon_s + _EPS:
+                self._push(t, _CHECK, None)
+                t += step
+        pol = self.batching
+        while self._heap:
+            t, kind, _, payload = heapq.heappop(self._heap)
+            self._makespan = max(self._makespan, t)
+            if kind == _ARRIVE:
+                r: Request = payload
+                self.arrived[r.model][0] += 1
+                self.arrived[r.model][1] += r.samples
+                cap = pol.max_queue_samples
+                if cap is not None and \
+                        self.queued_samples[r.model] + r.samples > cap:
+                    self.dropped[r.model][0] += 1
+                    self.dropped[r.model][1] += r.samples
+                    continue
+                if self.autoscaler is not None:
+                    self.autoscaler.observe(t, r.model, r.samples)
+                self.queues[r.model].append(r)
+                self.queued_samples[r.model] += r.samples
+                self._trace_queue(t, r.model)
+                self._try_dispatch(r.model, t)
+            elif kind == _TIMER:
+                if self._timer_at.get(payload, -INF) <= t + _EPS:
+                    self._timer_at.pop(payload, None)
+                self._try_dispatch(payload, t)
+            elif kind == _DONE:
+                model, batch, _srv_id = payload
+                for r in batch:
+                    self.latencies[model].append(t - r.t_arrive)
+                    self.req_samples[model].append(r.samples)
+                self._try_dispatch(model, t)
+            elif kind == _CHECK:
+                self._apply_autoscale(t)
+        return self._report(horizon_s)
+
+    # --------------------------------------------------------------- report
+    def _report(self, horizon_s: float) -> ServingReport:
+        autoscale = None
+        if self.autoscaler is not None:
+            autoscale = {
+                "events": self.redeploys,
+                "checks": self.autoscaler.checks,
+                "solve_cache": self.autoscaler.cache_stats(),
+            }
+        mode = self.mm.mode
+        meta = {
+            "batching": {
+                "max_batch": self.batching.max_batch,
+                "max_delay_s": self.batching.max_delay_s,
+            },
+        }
+        if self.mm.mode == MM_TIME_MUX:
+            meta["switch_period_s"] = (
+                self.switch_period_s or self.mm.meta.get("switch_period_s", 1.0)
+            )
+        busy_chip_s = None
+        if self.mm.mode == MM_MERGED:
+            # every merged assignment is a slot share of ONE pipeline over
+            # the same chips: the pipeline ticks whenever any model has a
+            # batch in flight (idle models' slots go empty but the wave
+            # still runs), so the package's busy time is the union of the
+            # per-model in-flight intervals, not their sum
+            pipeline_chips = max(s.chips for s in self.servers.values())
+            intervals = sorted(
+                (start, done)
+                for log in self.batch_log.values()
+                for (start, done, *_rest) in log
+            )
+            union = cur_lo = cur_hi = 0.0
+            for lo, hi in intervals:
+                if lo > cur_hi:
+                    union += cur_hi - cur_lo
+                    cur_lo, cur_hi = lo, hi
+                else:
+                    cur_hi = max(cur_hi, hi)
+            union += cur_hi - cur_lo
+            busy_chip_s = union * pipeline_chips
+            meta["merged_graph"] = self.mm.meta.get("merged_graph")
+        return summarize(
+            mode=mode,
+            package=self.hw.name,
+            chips=self.hw.chips,
+            seed=self.seed,
+            horizon_s=horizon_s,
+            makespan_s=max(self._makespan, horizon_s),
+            arrived={m: tuple(v) for m, v in self.arrived.items()},
+            dropped={m: tuple(v) for m, v in self.dropped.items()},
+            latencies=self.latencies,
+            request_samples=self.req_samples,
+            batches=self.batches,
+            busy_s=self.busy_s,
+            model_chips={m: s.chips for m, s in self.servers.items()},
+            queue_traces=self.queue_traces,
+            slos={m: self.slos.get(m) for m in self.servers},
+            placement=self.placement,
+            autoscale=autoscale,
+            meta=meta,
+            package_busy_chip_s=busy_chip_s,
+        )
+
+
+def simulate(
+    mm: MultiModelSchedule,
+    hw: HardwareModel,
+    trace: list[Request],
+    batching: BatchingPolicy | None = None,
+    horizon_s: float | None = None,
+    **kw,
+) -> ServingReport:
+    """One-call wrapper: build a :class:`ServingExecutor` and run it."""
+    return ServingExecutor(mm, hw, batching=batching, **kw).run(
+        trace, horizon_s=horizon_s
+    )
+
+
+# ---------------------------------------------------------------------------
+# Measured path: calibrate the service law from the real jitted steps
+# ---------------------------------------------------------------------------
+
+def measure_service_models(
+    deployment,
+    mesh,
+    seq_len: int = 16,
+    batches: tuple[int, int] = (1, 4),
+    iters: int = 3,
+) -> dict[str, ServiceModel]:
+    """Time the real jitted prefill steps from ``build_multimodel_steps``
+    on host devices and fit ``service = overhead + b * beat`` per model.
+
+    The two-point fit at batch sizes ``batches`` separates the fixed
+    per-batch overhead from the per-sample slope; the returned models plug
+    into ``ServingExecutor(service_override=...)`` so the simulation runs
+    on measured instead of modeled service times.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..models import init_params
+
+    b_lo, b_hi = batches
+    if not (0 < b_lo < b_hi):
+        raise ValueError(f"need 0 < b_lo < b_hi, got {batches}")
+    fleet = deployment.build_steps(mesh, with_decode=False)
+    out: dict[str, ServiceModel] = {}
+    for cfg in deployment.cfgs:
+        prefill = fleet[cfg.name]["prefill"]
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        timed = {}
+        for b in (b_lo, b_hi):
+            toks = jnp.ones((b, seq_len), jnp.int32)
+            jax.block_until_ready(prefill(params, toks))      # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(prefill(params, toks))
+            timed[b] = (time.perf_counter() - t0) / iters
+        beat = max(_EPS, (timed[b_hi] - timed[b_lo]) / (b_hi - b_lo))
+        overhead = max(0.0, timed[b_lo] - beat * b_lo)
+        out[cfg.name] = ServiceModel(beat=beat, stages=1, overhead_s=overhead)
+    return out

@@ -1,0 +1,234 @@
+"""Serving metrics: latency percentiles, goodput, queues, utilization, SLOs.
+
+The executor feeds per-request completion records and per-server counters
+into :func:`summarize`, which produces a :class:`ServingReport` -- the JSON
+payload of ``python -m repro serve --json`` and the rows of
+``BENCH_serving.json``.
+
+Definitions (per model and aggregated):
+
+* **throughput** -- completed samples / makespan (arrival start to last
+  completion);
+* **goodput** -- SLO-satisfying completed samples / makespan (== throughput
+  when the model has no SLO);
+* **latency** -- request sojourn time, arrival to batch completion
+  (p50/p95/p99 by nearest-rank on the exact sorted latencies);
+* **queue depth** -- time-weighted mean and max of queued samples;
+* **utilization** -- busy chip-seconds / (quota chips x makespan); the
+  aggregate weights each model by its chip quota, so idle chips of the
+  package count against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["ModelMetrics", "ServingReport", "percentile", "summarize"]
+
+
+def percentile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    k = max(1, int(-(-q * len(sorted_vals) // 100)))   # ceil without floats
+    return sorted_vals[min(k, len(sorted_vals)) - 1]
+
+
+def _queue_stats(trace: list[tuple[float, int]], t_end: float) -> tuple[float, int]:
+    """Time-weighted mean + max of a step trace ``[(t, depth), ...]``.
+
+    The mean is over the whole run (time 0 to ``t_end``; the queue is
+    empty before its first event), so per-model values in one report share
+    a denominator."""
+    if not trace:
+        return 0.0, 0
+    area, peak = 0.0, 0
+    for (t, d), (t_next, _) in zip(trace, trace[1:] + [(t_end, 0)]):
+        area += d * max(0.0, t_next - t)
+        peak = max(peak, d)
+    return area / max(1e-12, t_end), peak
+
+
+@dataclass
+class ModelMetrics:
+    model: str
+    chips: int
+    arrived_requests: int = 0
+    arrived_samples: int = 0
+    completed_requests: int = 0
+    completed_samples: int = 0
+    dropped_requests: int = 0
+    dropped_samples: int = 0
+    batches: int = 0
+    throughput: float = 0.0
+    goodput: float = 0.0
+    latency_mean_s: float = 0.0
+    latency_p50_s: float = 0.0
+    latency_p95_s: float = 0.0
+    latency_p99_s: float = 0.0
+    latency_max_s: float = 0.0
+    queue_mean: float = 0.0
+    queue_max: int = 0
+    utilization: float = 0.0
+    busy_s: float = 0.0
+    slo_s: float | None = None
+    slo_attainment: float = 1.0    # completed requests meeting the SLO
+
+    def to_json(self) -> dict:
+        return dict(self.__dict__)
+
+
+@dataclass
+class ServingReport:
+    """Everything one simulated serving run produced."""
+    mode: str                       # co-schedule mode the deployment ran
+    package: str
+    chips: int
+    seed: int
+    horizon_s: float                # arrival window
+    makespan_s: float               # last completion (drain included)
+    per_model: dict[str, ModelMetrics] = field(default_factory=dict)
+    # aggregates
+    total_arrived: int = 0
+    total_completed: int = 0
+    total_dropped: int = 0
+    throughput: float = 0.0         # completed samples/s over the makespan
+    goodput: float = 0.0            # SLO-satisfying samples/s
+    latency_p95_s: float = 0.0      # over all requests
+    slo_attainment: float = 1.0
+    utilization: float = 0.0        # busy chip-seconds / (package x makespan)
+    placement: dict = field(default_factory=dict)   # model -> per-flavor coords
+    autoscale: dict | None = None
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def conserved(self) -> bool:
+        """Open-loop conservation: every admitted sample completed."""
+        return self.total_arrived == self.total_completed + self.total_dropped
+
+    def to_json(self) -> dict:
+        out = {
+            k: v for k, v in self.__dict__.items()
+            if k not in ("per_model", "placement", "autoscale", "meta")
+        }
+        out["conserved"] = self.conserved
+        out["per_model"] = {m: mm.to_json() for m, mm in self.per_model.items()}
+        out["placement"] = {
+            m: {str(f): len(coords) for f, coords in zones.items()}
+            for m, zones in self.placement.items()
+        }
+        if self.autoscale is not None:
+            out["autoscale"] = self.autoscale
+        out["meta"] = self.meta
+        return out
+
+    def describe(self) -> list[str]:
+        lines = [
+            f"{self.package} [{self.mode}] seed={self.seed}: "
+            f"{self.total_completed}/{self.total_arrived} samples in "
+            f"{self.makespan_s:.3f}s -> goodput {self.goodput:.1f}/s "
+            f"(throughput {self.throughput:.1f}/s), p95 "
+            f"{self.latency_p95_s * 1e3:.2f}ms, util {self.utilization:.0%}"
+        ]
+        for m in self.per_model.values():
+            slo = (f" slo {m.slo_attainment:.0%}@{m.slo_s * 1e3:g}ms"
+                   if m.slo_s else "")
+            lines.append(
+                f"  {m.model:12s} {m.chips:3d} chips  "
+                f"{m.completed_samples:6d} done  {m.goodput:8.1f}/s  "
+                f"p95 {m.latency_p95_s * 1e3:7.2f}ms  q~{m.queue_mean:.1f}"
+                f"{slo}"
+            )
+        if self.autoscale is not None:
+            ev = self.autoscale.get("events", [])
+            lines.append(
+                f"  autoscale: {len(ev)} re-solve(s), "
+                f"cache {self.autoscale.get('solve_cache', {})}"
+            )
+        return lines
+
+
+def summarize(
+    *,
+    mode: str,
+    package: str,
+    chips: int,
+    seed: int,
+    horizon_s: float,
+    makespan_s: float,
+    arrived: dict[str, tuple[int, int]],          # model -> (requests, samples)
+    dropped: dict[str, tuple[int, int]],
+    latencies: dict[str, list[float]],            # per completed *request*
+    request_samples: dict[str, list[int]],        # aligned with latencies
+    batches: dict[str, int],
+    busy_s: dict[str, float],
+    model_chips: dict[str, int],
+    queue_traces: dict[str, list[tuple[float, int]]],
+    slos: dict[str, float | None],
+    placement: dict,
+    autoscale: dict | None = None,
+    meta: dict | None = None,
+    package_busy_chip_s: float | None = None,
+) -> ServingReport:
+    span = max(makespan_s, 1e-12)
+    rep = ServingReport(mode=mode, package=package, chips=chips, seed=seed,
+                        horizon_s=horizon_s, makespan_s=makespan_s,
+                        placement=placement, autoscale=autoscale,
+                        meta=meta or {})
+    all_lat: list[float] = []
+    good_total = busy_chip_s = 0.0
+    slo_met = slo_reqs = 0
+    for model in sorted(arrived):
+        a_req, a_smp = arrived[model]
+        d_req, d_smp = dropped.get(model, (0, 0))
+        lats = sorted(latencies.get(model, []))
+        smps = request_samples.get(model, [])
+        done_req = len(smps)
+        done_smp = sum(smps)
+        slo = slos.get(model)
+        good = done_smp
+        met = done_req
+        if slo is not None:
+            good = sum(s for lat, s in zip(latencies[model], smps)
+                       if lat <= slo)
+            met = sum(1 for lat in latencies[model] if lat <= slo)
+        q_mean, q_max = _queue_stats(queue_traces.get(model, []), makespan_s)
+        chips_m = model_chips.get(model, 0)
+        busy = busy_s.get(model, 0.0)
+        mm = ModelMetrics(
+            model=model, chips=chips_m,
+            arrived_requests=a_req, arrived_samples=a_smp,
+            completed_requests=done_req, completed_samples=done_smp,
+            dropped_requests=d_req, dropped_samples=d_smp,
+            batches=batches.get(model, 0),
+            throughput=done_smp / span,
+            goodput=good / span,
+            latency_mean_s=sum(lats) / done_req if done_req else 0.0,
+            latency_p50_s=percentile(lats, 50),
+            latency_p95_s=percentile(lats, 95),
+            latency_p99_s=percentile(lats, 99),
+            latency_max_s=lats[-1] if lats else 0.0,
+            queue_mean=q_mean, queue_max=q_max,
+            utilization=busy / span if chips_m else 0.0,
+            busy_s=busy, slo_s=slo,
+            slo_attainment=met / done_req if done_req else 1.0,
+        )
+        rep.per_model[model] = mm
+        rep.total_arrived += a_smp
+        rep.total_completed += done_smp
+        rep.total_dropped += d_smp
+        all_lat.extend(lats)
+        good_total += good
+        busy_chip_s += busy * chips_m
+        slo_met += met
+        slo_reqs += done_req
+    all_lat.sort()
+    rep.throughput = rep.total_completed / span
+    rep.goodput = good_total / span
+    rep.latency_p95_s = percentile(all_lat, 95)
+    rep.slo_attainment = slo_met / slo_reqs if slo_reqs else 1.0
+    # callers whose servers share one physical resource (merged pipelines)
+    # pass the de-duplicated busy chip-seconds explicitly
+    if package_busy_chip_s is not None:
+        busy_chip_s = package_busy_chip_s
+    rep.utilization = busy_chip_s / (max(1, chips) * span)
+    return rep

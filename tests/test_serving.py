@@ -1,0 +1,590 @@
+"""Serving executor tests: determinism, conservation, resource enforcement,
+autoscale, the solve_many/SolutionCache facade, placement checks, and the
+Deployment edge cases the executor exercises."""
+from __future__ import annotations
+
+import json
+from dataclasses import replace
+
+import pytest
+
+from repro import scope
+from repro.core.graph import MM_TIME_MUX
+from repro.core.hw import get_hw, mcm_hetero
+from repro.core.regions import flavor_zones, zigzag_placement
+from repro.serving import (
+    MMPP,
+    AutoscalePolicy,
+    BatchingPolicy,
+    Diurnal,
+    Poisson,
+    ServingExecutor,
+    allocate_submeshes,
+    phased_trace,
+    request_trace,
+    service_from_assignment,
+)
+
+
+@pytest.fixture(scope="module")
+def co16():
+    """A 2-model co-schedule on mcm16 (partitioned mode) + its solution."""
+    prob = scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16)
+    sol = scope.solve(prob)
+    assert sol.feasible and sol.multi.mode == "partitioned"
+    return sol
+
+
+@pytest.fixture(scope="module")
+def hetero_co():
+    """Big/little co-schedule on a heterogeneous package."""
+    prob = scope.problem("resnet50:4,resnet18:1", "mcm16_hetero",
+                         m_samples=16)
+    sol = scope.solve(prob)
+    assert sol.feasible
+    return sol
+
+
+@pytest.fixture(scope="module")
+def spanning_co():
+    """A co-schedule whose winning quota spans both flavors (chip_quota):
+    a model whose weights overflow either flavor alone (the
+    test_multimodel spanning construction)."""
+    from repro.core.fastcost import FastCostModel
+    from repro.core.graph import LayerNode, chain
+    from repro.core.hw import mcm_table_iii
+    from repro.multimodel import ModelSpec
+    from repro.multimodel.coschedule import co_schedule
+
+    cap = mcm_table_iii(4).weight_capacity_per_chip
+    layers = [
+        LayerNode(
+            name=f"l{i}", kind="conv", flops=1e9,
+            weight_bytes=1.5 * cap, in_bytes=32e3, out_bytes=24e3,
+            wsp_parallel=28.0, isp_parallel=128.0,
+        )
+        for i in range(2)
+    ]
+    g = chain("fat", layers)
+    hw = mcm_hetero(4, big_fraction=0.5,
+                    little_flops_scale=0.9, little_nop_scale=0.9)
+    mm = co_schedule([ModelSpec(g, 1.0)], hw,
+                     cost=FastCostModel(hw, m_samples=16))
+    assert mm is not None
+    assert any(a.chip_quota for a in mm.assignments)
+    return mm, hw
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+class TestTraffic:
+    def test_trace_deterministic_and_sorted(self):
+        traffic = {"a": Poisson(500.0), "b": MMPP(200.0, 2000.0),
+                   "c": Diurnal(800.0, 100.0, period_s=0.5)}
+        t1 = request_trace(traffic, 1.0, seed=7)
+        t2 = request_trace(traffic, 1.0, seed=7)
+        assert t1 == t2
+        assert t1 != request_trace(traffic, 1.0, seed=8)
+        assert all(x.t_arrive <= y.t_arrive for x, y in zip(t1, t1[1:]))
+        assert {r.model for r in t1} == {"a", "b", "c"}
+
+    def test_streams_independent_of_other_models(self):
+        """Removing one model must not perturb another's arrivals."""
+        both = request_trace({"a": Poisson(300.0), "b": Poisson(300.0)},
+                             1.0, seed=3)
+        alone = request_trace({"a": Poisson(300.0)}, 1.0, seed=3)
+        assert [r.t_arrive for r in both if r.model == "a"] == \
+            [r.t_arrive for r in alone]
+
+    def test_phased_trace_flips_mix(self):
+        trace = phased_trace(
+            [({"a": 400.0, "b": 100.0}, 1.0), ({"a": 100.0, "b": 400.0}, 1.0)],
+            seed=0,
+        )
+        p1 = [r for r in trace if r.t_arrive < 1.0]
+        p2 = [r for r in trace if r.t_arrive >= 1.0]
+        assert sum(r.model == "a" for r in p1) > 2 * sum(r.model == "b" for r in p1)
+        assert sum(r.model == "b" for r in p2) > 2 * sum(r.model == "a" for r in p2)
+
+
+# ---------------------------------------------------------------------------
+# executor core
+# ---------------------------------------------------------------------------
+
+class TestExecutor:
+    def test_seed_deterministic_report(self, co16):
+        a = co16.serve(n_requests=400, seed=5)
+        b = co16.serve(n_requests=400, seed=5)
+        assert json.dumps(a.to_json(), sort_keys=True) == \
+            json.dumps(b.to_json(), sort_keys=True)
+        c = co16.serve(n_requests=400, seed=6)
+        assert json.dumps(b.to_json(), sort_keys=True) != \
+            json.dumps(c.to_json(), sort_keys=True)
+
+    def test_request_conservation(self, co16):
+        rep = co16.serve(n_requests=500, seed=1)
+        assert rep.conserved
+        assert rep.total_dropped == 0
+        assert rep.total_arrived == rep.total_completed
+        for m in rep.per_model.values():
+            assert m.arrived_samples == m.completed_samples
+
+    def test_admission_cap_drops_are_accounted(self, co16):
+        rep = co16.serve(n_requests=500, seed=1, rate_scale=2.0, max_queue=8)
+        assert rep.total_dropped > 0
+        assert rep.conserved      # arrived == completed + dropped
+
+    def test_saturated_server_matches_dse_throughput(self, co16):
+        """The service law's whole point: a saturated simulated server
+        reproduces the solved schedule's samples/s."""
+        mm = co16.multi
+        for a in mm.assignments:
+            svc = service_from_assignment(a)
+            m = a.schedule.meta["m_samples"]
+            batch_rate = m / svc.service_s(m)
+            assert batch_rate == pytest.approx(
+                a.throughput / a.time_share, rel=1e-9)
+
+    def test_overload_goodput_caps_at_capacity(self, co16):
+        rep = co16.serve(n_requests=800, seed=2, rate_scale=1.6)
+        assert rep.conserved
+        solved = rep.meta["solved_weighted_throughput"]
+        assert rep.goodput <= solved * 1.02
+        assert rep.goodput >= solved * 0.75   # drain tail only, not collapse
+
+    def test_queue_and_latency_metrics_populated(self, co16):
+        rep = co16.serve(n_requests=400, seed=3)
+        for m in rep.per_model.values():
+            assert m.latency_p50_s <= m.latency_p95_s <= m.latency_p99_s \
+                <= m.latency_max_s
+            assert m.batches >= 1
+            assert 0 < m.utilization <= 1.0
+        assert 0 < rep.utilization <= 1.0
+
+    def test_single_model_solution_serves(self):
+        sol = scope.solve(scope.problem("resnet18", "mcm16", m_samples=16))
+        rep = sol.serve(n_requests=200, seed=0)
+        assert rep.conserved and rep.total_completed > 0
+        mm = sol.as_multimodel()
+        assert mm.meta["wrapped_single_model"]
+        assert mm.assignments[0].chips <= sol.hw.chips
+
+    def test_slo_gates_goodput(self):
+        # third mix field = SLO in ms; an absurdly tight SLO zeroes goodput
+        sol = scope.solve(
+            scope.problem("alexnet:1:0.0001,resnet18:1", "mcm16",
+                          m_samples=16))
+        rep = sol.serve(n_requests=300, seed=0)
+        alex = rep.per_model["alexnet"]
+        assert alex.slo_s == pytest.approx(1e-7)
+        assert alex.slo_attainment == 0.0
+        assert alex.goodput == 0.0
+        assert rep.goodput < rep.throughput
+
+
+# ---------------------------------------------------------------------------
+# resource enforcement
+# ---------------------------------------------------------------------------
+
+class TestEnforcement:
+    def test_partitioned_submeshes_disjoint_and_sized(self, co16):
+        mm, hw = co16.multi, co16.hw
+        placement = allocate_submeshes(mm, hw)
+        seen = set()
+        for a in mm.assignments:
+            coords = [c for zone in placement[a.model].values() for c in zone]
+            assert len(coords) == a.chips
+            assert not (set(coords) & seen)
+            seen |= set(coords)
+        assert len(seen) <= hw.chips
+
+    def test_spanning_quota_gets_seam_adjacent_slices(self, spanning_co):
+        mm, hw = spanning_co
+        spanning = [a for a in mm.assignments if a.chip_quota]
+        assert spanning, "fixture must contain a flavor-spanning quota"
+        placement = allocate_submeshes(mm, hw)
+        zones = flavor_zones([(t.name, t.chips) for t in hw.region_types],
+                             hw.mesh_shape)
+        for a in spanning:
+            got = placement[a.model]
+            for (f, c) in a.chip_quota:
+                if c:
+                    assert len(got[f]) == c
+            # earlier flavor's slice must touch its zone end (the seam)
+            first_flavor = a.chip_quota[0][0]
+            if a.chip_quota[0][1]:
+                assert got[first_flavor][-1] == zones[first_flavor][-1]
+            # later flavor's slice starts at its zone front (the seam)
+            second_flavor = a.chip_quota[1][0]
+            if a.chip_quota[1][1]:
+                assert got[second_flavor][0] == zones[second_flavor][0]
+
+    def test_overcommitted_quota_rejected(self, co16):
+        mm, hw = co16.multi, co16.hw
+        bloated = replace(
+            mm,
+            assignments=tuple(
+                replace(a, chips=hw.chips) for a in mm.assignments
+            ),
+        )
+        with pytest.raises(ValueError, match="overcommit"):
+            allocate_submeshes(bloated, hw)
+
+    def test_time_mux_batches_run_inside_slices(self, co16):
+        """Slice-enforcement invariant: every batch's busy time lies inside
+        its model's periodic windows, and windows of different models never
+        overlap."""
+        tm = scope.solve(
+            co16.problem.with_options(strategy="time-mux",
+                                      switch_cost=True))
+        assert tm.multi.mode == MM_TIME_MUX
+        mm = tm.as_multimodel()
+        ex = ServingExecutor(mm, tm.hw, seed=0)
+        trace = request_trace(
+            {a.model: 0.5 * mm.mix_rate * a.weight for a in mm.assignments},
+            0.5, seed=0)
+        rep = ex.run(trace)
+        assert rep.conserved
+        for model, log in ex.batch_log.items():
+            srv = ex.servers[model]
+            assert srv.window is not None
+            for (start, done, work, _samples, _window) in log:
+                in_window = srv.window_time(start, done)
+                assert in_window == pytest.approx(work, rel=1e-6, abs=1e-9)
+        # pairwise window disjointness within the period (useful spans
+        # start after each slice's reload time)
+        windows = [s.window for s in ex.servers.values()]
+        period = windows[0][2]
+        spans = sorted((off % period, off % period + span)
+                       for off, span, _ in windows)
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0 + 1e-9
+        # switch cost charged: useful spans + reloads fit the period
+        reloads = tm.multi.meta["reload_s"]
+        assert sum(r for r in reloads) > 0
+        assert sum(s[1] - s[0] for s in spans) + sum(reloads) \
+            <= period * (1 + 1e-9)
+
+    def test_merged_mode_interleaves_at_weighted_rates(self):
+        from repro.multimodel.interleave import search_merged
+        from repro.multimodel.spec import parse_mix
+
+        specs = parse_mix("alexnet:2,resnet18:1")
+        from repro.core.fastcost import FastCostModel
+
+        hw = get_hw("mcm16")
+        mm = search_merged(specs, FastCostModel(hw, m_samples=16))
+        assert mm is not None and mm.mode == "merged"
+        ex = ServingExecutor(mm, hw, seed=0)
+        trace = request_trace(
+            {a.model: 0.5 * mm.mix_rate * a.weight for a in mm.assignments},
+            0.2, seed=0)
+        rep = ex.run(trace)
+        assert rep.conserved
+        # the heavier-weighted model is served at a proportionally faster
+        # per-sample rate (its samples_per_beat scales the service law)
+        svc = {a.model: service_from_assignment(a) for a in mm.assignments}
+        spb = {a.model: a.samples_per_beat for a in mm.assignments}
+        assert spb["alexnet"] > spb["resnet18"]
+        assert svc["alexnet"].service_s(8) < svc["resnet18"].service_s(8)
+        # saturation consistency: a batch of m * spb samples reproduces
+        # each model's DSE throughput exactly (max_batch is in beats, so
+        # the default batcher actually reaches this operating point)
+        for a in mm.assignments:
+            m = a.schedule.meta["m_samples"]
+            b = m * a.samples_per_beat
+            rate = b / svc[a.model].service_s(b)
+            assert rate == pytest.approx(a.throughput, rel=1e-9)
+        # at 0.95x solved load the merged deployment must keep up
+        traffic, horizon = {}, 1.0
+        lam = mm.mix_rate * 0.95
+        traffic = {a.model: lam * a.weight for a in mm.assignments}
+        rep2 = ServingExecutor(mm, hw, seed=1).run(
+            request_trace(traffic, 1.0, seed=1), horizon_s=1.0)
+        assert rep2.conserved
+        assert rep2.goodput >= 0.85 * mm.weighted_throughput
+        assert rep2.utilization <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# flavor-aware placement
+# ---------------------------------------------------------------------------
+
+class TestFlavorPlacement:
+    COUNTS = [("big", 8), ("little", 8)]
+
+    def test_zones_partition_the_mesh(self):
+        zones = flavor_zones(self.COUNTS, (4, 4))
+        assert len(zones["big"]) == 8 and len(zones["little"]) == 8
+        assert not (set(zones["big"]) & set(zones["little"]))
+
+    def test_flavorless_placement_unchanged(self):
+        legacy = zigzag_placement([5, 7, 4], (4, 4))
+        assert sum(len(r) for r in legacy) == 16
+
+    def test_runs_pinned_to_seam(self):
+        zones = flavor_zones(self.COUNTS, (4, 4))
+        regions = zigzag_placement(
+            [2, 3, 4], (4, 4),
+            region_flavors=["big", "big", "little"],
+            flavor_counts=self.COUNTS,
+        )
+        # big run right-aligned against the seam, little run starts at it
+        assert regions[1][-1] == zones["big"][-1]
+        assert regions[2][0] == zones["little"][0]
+        for r, f in zip(regions, ["big", "big", "little"]):
+            assert set(r) <= set(zones[f])
+
+    def test_non_contiguous_flavor_runs_rejected(self):
+        with pytest.raises(ValueError, match="non-contiguous"):
+            zigzag_placement(
+                [2, 2, 2], (4, 4),
+                region_flavors=["big", "little", "big"],
+                flavor_counts=self.COUNTS,
+            )
+
+    def test_zone_overflow_rejected(self):
+        with pytest.raises(ValueError, match="need"):
+            zigzag_placement(
+                [9], (4, 4),
+                region_flavors=["big"],
+                flavor_counts=self.COUNTS,
+            )
+
+    def test_check_stage_placement_on_plans(self, hetero_co):
+        from repro.runtime.planner import check_stage_placement, \
+            schedule_stages
+
+        hw = hetero_co.hw
+        for a in hetero_co.multi.assignments:
+            for seg in a.schedule.segments:
+                stages = tuple(
+                    (cl.layer_lo, cl.layer_hi, cl.chip_type, cl.region_chips)
+                    for cl in seg.clusters
+                )
+                coords = check_stage_placement(stages, hw)
+                assert [len(c) for c in coords] == \
+                    [cl.region_chips for cl in seg.clusters]
+        bad = ((0, 1, "big", 2), (1, 2, "little", 2), (2, 3, "big", 2))
+        with pytest.raises(ValueError, match="non-contiguous"):
+            check_stage_placement(bad, hw)
+
+
+# ---------------------------------------------------------------------------
+# autoscale + solve_many / SolutionCache
+# ---------------------------------------------------------------------------
+
+class TestAutoscale:
+    POLICY = AutoscalePolicy(window_s=0.05, check_every_s=0.01,
+                             drift_threshold=0.5, min_requests=12,
+                             min_dwell_s=0.02, weight_quantum=0.25)
+
+    def _drift_trace(self, sol, flips=2):
+        mm = sol.multi
+        lam = mm.mix_rate * 0.6
+        w = {a.model: a.weight for a in mm.assignments}
+        a_name, b_name = sorted(w)
+        hot = {a_name: 0.85, b_name: 0.15}
+        cold = {a_name: 0.15, b_name: 0.85}
+        total = lam * sum(w.values())
+        phases = []
+        for i in range(flips + 1):
+            mix = hot if i % 2 == 0 else cold
+            phases.append(({m: total * s for m, s in mix.items()}, 0.12))
+        return phased_trace(phases, seed=0)
+
+    def test_drift_triggers_resolve_and_cache_hits(self, co16):
+        cache = scope.SolutionCache()
+        # Solve the base deployment THROUGH the cache (the bench/CLI flow):
+        # the returned Solution must keep its cost-free problem identity so
+        # autoscale re-solves derived from it take the cached path.
+        sol = cache.solve(co16.problem)
+        assert sol.problem.options.cost is None
+        trace = self._drift_trace(sol, flips=3)
+        rep = sol.serve(trace=trace, autoscale=self.POLICY, cache=cache,
+                        max_delay_s=5e-4)
+        assert rep.conserved
+        events = rep.autoscale["events"]
+        assert len(events) >= 2, "mix flips must trigger re-solves"
+        for e in events:
+            assert e["drift"] >= self.POLICY.drift_threshold
+            assert e["redeploy_s"] > 0          # switch-cost event charged
+        # a mix seen before is a whole-solution cache hit
+        assert any(e["cache_hit"] for e in events[1:])
+        stats = rep.autoscale["solve_cache"]
+        assert stats["solution_hits"] >= 1
+        assert stats["engines"] == 1            # one shared FastCostModel
+
+    def test_no_resolve_without_drift(self, co16):
+        rep = co16.serve(n_requests=300, seed=0, autoscale=self.POLICY)
+        assert rep.autoscale["events"] == []
+        assert rep.autoscale["checks"] > 0
+
+    def test_autoscale_requires_multimodel(self):
+        sol = scope.solve(scope.problem("resnet18", "mcm16", m_samples=16))
+        with pytest.raises(ValueError, match="multi-model"):
+            sol.serve(n_requests=50, autoscale=True)
+
+
+class TestSolveMany:
+    def test_duplicate_problems_hit_cache(self):
+        probs = [
+            scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16),
+            scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16),
+            scope.problem("alexnet:2,resnet18:1", "mcm16", m_samples=16),
+        ]
+        cache = scope.SolutionCache()
+        sols = scope.solve_many(probs, cache=cache)
+        assert sols[0] is sols[1]               # whole-solution hit
+        assert sols[2] is not sols[0]
+        assert cache.stats == {
+            "solution_hits": 1, "solution_misses": 2,
+            "solutions": 2, "engines": 1,
+        }
+        # the shared engine memo makes the second distinct solve cheaper:
+        # it answers evaluations without recomputing cluster costs
+        stats = sols[2].diagnostics["engine_stats"]
+        assert stats["segment_evals"] > 3 * stats["cluster_computes"]
+
+    def test_fingerprint_distinguishes_options_and_weights(self):
+        base = scope.problem("alexnet:1,resnet18:1", "mcm16")
+        fp = scope.problem_fingerprint
+        assert fp(base) == fp(scope.problem("alexnet:1,resnet18:1", "mcm16"))
+        assert fp(base) != fp(scope.problem("alexnet:2,resnet18:1", "mcm16"))
+        assert fp(base) != fp(base.with_options(step=2))
+        assert fp(base) != fp(
+            scope.problem("alexnet:1,resnet18:1", "mcm64"))
+
+    def test_fingerprint_distinguishes_hw_perf_and_flavor_caps(self):
+        """Hardware differing only in a perf field (same name/chips) or in
+        PackageSpec.flavor_caps must not collide in the cache."""
+        hw = get_hw("mcm16")
+        slower = replace(hw, flops_per_chip=hw.flops_per_chip / 4)
+        fp = scope.problem_fingerprint
+        assert fp(scope.problem("resnet18", hw)) != \
+            fp(scope.problem("resnet18", slower))
+        cache = scope.SolutionCache()
+        fast_sol = cache.solve(scope.problem("resnet18", hw))
+        slow_sol = cache.solve(scope.problem("resnet18", slower))
+        assert not cache.last_hit
+        assert slow_sol.latency > fast_sol.latency
+        het = scope.PackageSpec.of("mcm16_hetero")
+        capped = replace(het, flavor_caps=(("big", 4), ("little", 4)))
+        assert fp(scope.Problem(scope.WorkloadSpec.cnn("resnet18"), het)) != \
+            fp(scope.Problem(scope.WorkloadSpec.cnn("resnet18"), capped))
+
+    def test_shared_cost_rejected_on_wrong_hw(self):
+        hw16 = scope.PackageSpec.of("mcm16").resolve()
+        shared = scope.SearchOptions(m_samples=16).make_cost(hw16)
+        with pytest.raises(ValueError, match="wrong hardware"):
+            scope.solve(scope.problem("alexnet", "mcm64", cost=shared))
+
+
+# ---------------------------------------------------------------------------
+# Deployment / build_multimodel_steps edge cases (the executor's inputs)
+# ---------------------------------------------------------------------------
+
+class TestDeploymentEdgeCases:
+    @pytest.fixture(scope="class")
+    def lm_setup(self):
+        from repro.configs import get_smoke_config
+        from repro.core.hw import tpu_v5e
+
+        cfgs = (get_smoke_config("granite-3-8b"),
+                get_smoke_config("granite-20b"))
+        return cfgs, tpu_v5e(8, (1, 8))
+
+    def test_single_model_multimodel_plan(self, lm_setup):
+        from repro.runtime.planner import plan_for_multimodel
+
+        cfgs, hw = lm_setup
+        mm, plans = plan_for_multimodel(
+            [cfgs[0]], 64, 8, ("data", "model"), model_axis=8, hw=hw,
+        )
+        assert mm is not None and mm.n_models == 1
+        assert set(plans) == {cfgs[0].name}
+        plan = plans[cfgs[0].name]
+        assert plan.meta["quota_chips"] <= 8
+        assert plan.meta["co_mode"] == "partitioned"
+
+    def test_zero_quota_idle_chips_assignment(self, lm_setup):
+        """An assignment may use fewer chips than the axis (idle chips, the
+        curves' monotone-envelope case): plans must still build and the
+        executor must still serve it."""
+        from repro.runtime.planner import plan_for_multimodel
+
+        cfgs, hw = lm_setup
+        mm, plans = plan_for_multimodel(
+            [cfgs[0]], 64, 8, ("data", "model"), model_axis=8, hw=hw,
+        )
+        a = mm.assignments[0]
+        idle = replace(
+            mm,
+            assignments=(replace(a, chips=max(1, a.chips // 2),
+                                 schedule=a.schedule),),
+        )
+        mm2, plans2 = plan_for_multimodel(
+            [cfgs[0]], 64, 8, ("data", "model"), model_axis=8, hw=hw,
+            mm=idle,
+        )
+        assert mm2 is idle
+        assert plans2[cfgs[0].name].meta["quota_chips"] == idle.assignments[0].chips
+        ex = ServingExecutor(idle, hw, seed=0)
+        served = idle.assignments[0]             # keyed by the graph name
+        lam = max(1.0, served.throughput * 0.5)
+        rep = ex.run(request_trace({served.model: lam},
+                                   min(0.5, 50 / lam), seed=0))
+        assert rep.conserved
+
+    def test_time_mux_switch_cost_plans(self, lm_setup):
+        """switch_cost=True time-mux co-schedules must thread gross shares
+        and reloads into plans and the executor's slice windows."""
+        from repro.core.fastcost import FastCostModel
+        from repro.multimodel import ModelSpec
+        from repro.multimodel.baselines import time_multiplexed
+        from repro.core.workloads.lm import lm_graph
+        from repro.runtime.planner import plan_for_multimodel
+
+        cfgs, hw = lm_setup
+        graphs = [lm_graph(c, 64, decode=False) for c in cfgs]
+        specs = [ModelSpec(g, w) for g, w in zip(graphs, [2.0, 1.0])]
+        cost = FastCostModel(hw, m_samples=8)
+        mm = time_multiplexed(specs, cost, switch_cost=True,
+                              switch_period_s=0.5)
+        assert mm is not None and mm.mode == MM_TIME_MUX
+        assert mm.meta["switch_cost"] and sum(mm.meta["reload_s"]) > 0
+        mm2, plans = plan_for_multimodel(
+            list(cfgs), 64, 8, ("data", "model"), model_axis=8, hw=hw,
+            mm=mm,
+        )
+        assert mm2 is mm
+        for cfg in cfgs:
+            assert plans[cfg.name].meta["time_share"] < 1.0
+        ex = ServingExecutor(mm, hw, seed=0)
+        for srv in ex.servers.values():
+            assert srv.window is not None and srv.window[2] == 0.5
+
+    @pytest.mark.slow
+    def test_single_model_plan_builds_jitted_steps(self, lm_setup):
+        import jax
+
+        from repro.launch.mesh import make_mesh
+        from repro.models import init_params
+        from repro.runtime.planner import plan_for_multimodel
+        from repro.runtime.serve import build_multimodel_steps
+
+        cfgs, hw = lm_setup
+        _, plans = plan_for_multimodel(
+            [cfgs[0]], 64, 8, ("data", "model"), model_axis=8, hw=hw,
+        )
+        mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+        fleet = build_multimodel_steps([cfgs[0]], mesh, plans,
+                                       with_decode=False)
+        import jax.numpy as jnp
+
+        params = init_params(cfgs[0], jax.random.PRNGKey(0))
+        logits = fleet[cfgs[0].name]["prefill"](params,
+                                               jnp.ones((2, 16), jnp.int32))
+        assert logits.shape[0] == 2
