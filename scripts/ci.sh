@@ -146,6 +146,49 @@ assert co["goodput"] >= tm["goodput"] - 1e-9, "co-schedule below time-mux"
 assert dt <= budget, f"serving smoke regression: {dt:.2f}s > {budget:.0f}s"
 PY
 
+  echo "== chaos smoke: zone failure + degraded re-solve (serve --faults) =="
+  python - <<'PY'
+import json
+import os
+import subprocess
+import sys
+import time
+
+budget = float(os.environ.get("CI_CHAOS_BUDGET_S", "90"))
+args = ["--mix", "alexnet:1:500,resnet18:1:500", "--hw", "mcm16_hetero",
+        "--requests", "8000", "--rate-scale", "0.75", "--seed", "0",
+        "--faults", "zone:little@35%:65%", "--json"]
+t0 = time.time()
+out = subprocess.run(
+    [sys.executable, "-m", "repro", "serve", *args],
+    capture_output=True, text=True, check=True,
+    env={**os.environ, "PYTHONPATH": "src"},
+)
+dt = time.time() - t0
+rep = json.loads(out.stdout)["serving"]
+f = rep["faults"]
+# strict conservation: arrived == completed + dropped(by cause) + queued
+assert rep["conserved"], "requests not conserved through the failure"
+for m, mm in rep["per_model"].items():
+    by_cause = sum(s for _, s in mm["drop_causes"].values())
+    assert by_cause == mm["dropped_samples"], f"{m}: unattributed drops"
+# the failure must actually kill a server and be recovered by a re-solve
+kills = [e for e in f["log"] if e["kind"] == "fail" and e["killed"]]
+assert kills, "zone failure killed no server"
+assert f["recoveries"] and all(r["resolved"] for r in f["recoveries"]), \
+    "no recorded degraded-re-solve recovery"
+assert f["unrecovered"] == 0
+pre, post = f["goodput_pre_fault"], f["goodput_post_recovery"]
+assert post >= 0.9 * pre, \
+    f"post-recovery goodput {post:.0f}/s < 90% of pre-failure {pre:.0f}/s"
+print(f"chaos smoke: {dt:.2f}s (budget {budget:.0f}s), "
+      f"{len(kills)} kill(s) -> {len(f['recoveries'])} recovery(ies), "
+      f"mean TTR {f['mean_ttr_s']*1e3:.2f}ms, "
+      f"availability {f['availability']:.4f}, goodput pre {pre:.0f}/s -> "
+      f"post {post:.0f}/s, in-window {f['goodput_in_failure'] or 0:.0f}/s")
+assert dt <= budget, f"chaos smoke regression: {dt:.2f}s > {budget:.0f}s"
+PY
+
   echo "== DSE search-time smoke budget =="
   python - <<'PY'
 import os

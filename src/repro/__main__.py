@@ -95,6 +95,22 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
                     help="batcher queue-delay cap")
     ap.add_argument("--autoscale", action="store_true",
                     help="enable the online re-solve hook")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="scripted fault scenario: ';'-separated "
+                         "target@t0[:t1] with chip:R,C / zone:FLAVOR / "
+                         "seam:A+B targets; times in seconds or %% of the "
+                         "horizon (e.g. 'zone:little@35%%:65%%')")
+    ap.add_argument("--fault-seed", type=int, default=None, metavar="N",
+                    help="random chaos: seed a FaultInjector on top of any "
+                         "--faults script (uses --chip-mtbf etc.)")
+    ap.add_argument("--chip-mtbf", type=float, default=None, metavar="S",
+                    help="per-chip mean time between failures (random chaos)")
+    ap.add_argument("--chip-mttr", type=float, default=1.0, metavar="S")
+    ap.add_argument("--zone-mtbf", type=float, default=None, metavar="S")
+    ap.add_argument("--zone-mttr", type=float, default=2.0, metavar="S")
+    ap.add_argument("--fault-static", action="store_true",
+                    help="disable the degraded re-solve: down servers stay "
+                         "down until repair (the static-degraded baseline)")
     ap.add_argument("--baselines", action="store_true",
                     help="replay the same trace on equal-split and time-mux")
     ap.add_argument("--json", action="store_true", dest="as_json")
@@ -125,7 +141,26 @@ def _cmd_serve(args) -> None:
         trace=trace, horizon_s=horizon, seed=args.seed,
         max_delay_s=args.max_delay_ms / 1e3, max_batch=args.max_batch,
     )
-    report = sol.serve(autoscale=args.autoscale, cache=cache, **serve_kw)
+    faults = None
+    if args.faults or args.fault_seed is not None:
+        # scripted specs may use %-of-horizon times, so build the schedule
+        # here where the horizon is known
+        from .serving import FaultInjector, parse_faults
+
+        scripted = (parse_faults(args.faults, sol.hw, horizon)
+                    if args.faults else ())
+        if args.fault_seed is not None:
+            faults = FaultInjector(
+                sol.hw, seed=args.fault_seed,
+                chip_mtbf_s=args.chip_mtbf, chip_mttr_s=args.chip_mttr,
+                zone_mtbf_s=args.zone_mtbf, zone_mttr_s=args.zone_mttr,
+                scripted=scripted, horizon_hint_s=horizon,
+            )
+        else:
+            faults = scripted
+    report = sol.serve(autoscale=args.autoscale, cache=cache,
+                       faults=faults,
+                       fault_recovery=not args.fault_static, **serve_kw)
     out = {"solution": sol.to_json(), "serving": report.to_json()}
     if args.baselines:
         out["baselines"] = {}

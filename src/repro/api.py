@@ -556,6 +556,8 @@ class Solution:
         slos: dict[str, float] | None = None,
         autoscale=None,
         cache: "SolutionCache | None" = None,
+        faults=None,
+        fault_recovery: bool = True,
         measure: bool = False,
         mesh=None,
         seq_len: int = 16,
@@ -578,6 +580,18 @@ class Solution:
         (``cache``), charging each redeploy as weight-reload dead time.
         ``measure=True`` calibrates service times from the real jitted
         steps (``deploy()`` + ``build_multimodel_steps`` on ``mesh``).
+
+        ``faults`` injects chip/zone/seam failures: a
+        :class:`~repro.serving.FaultInjector`, a list of
+        :class:`~repro.serving.FaultEvent`, or a scenario string for
+        :func:`~repro.serving.parse_faults` (``"zone:little@2:6"``).  With
+        ``fault_recovery=True`` (the default) every failure and repair
+        triggers a re-solve on the degraded package through the shared
+        ``cache`` -- the dead-chip set is part of the problem fingerprint,
+        so a repeat of the same failure is a whole-solution cache hit --
+        and the executor swaps fleets charging redeploy dead time.
+        ``fault_recovery=False`` runs the static-degraded baseline: down
+        models just queue until their chips are repaired.
         """
         from .serving import (
             AutoscalePolicy,
@@ -585,6 +599,7 @@ class Solution:
             BatchingPolicy,
             ServingExecutor,
             measure_service_models,
+            parse_faults,
             request_trace,
         )
 
@@ -633,6 +648,45 @@ class Solution:
             for m in self.problem.workload.models
         }
 
+        fault_resolver = None
+        if faults is not None:
+            if isinstance(faults, str):
+                faults = parse_faults(faults, hw, horizon_s)
+            if fault_recovery:
+                cache = cache or SolutionCache()
+                # The degraded re-solve rebuilds this problem on the
+                # surviving package.  flavor_caps are dropped (they were
+                # budgeted against the pristine flavors) and any
+                # caller-supplied engine is stripped so the solve takes the
+                # cached path -- the degraded HardwareModel (dead_chips
+                # included) is the fingerprint that separates intact from
+                # degraded solutions.
+                fr_opts = replace(self.problem.options, cost=None)
+                if mm.mode != "time_mux":
+                    # keep the recovery fleet in the deployment's latency
+                    # class: a time-mux winner-by-rate would trade
+                    # slice-period queueing waves against SLOs the
+                    # continuously-serving deployment was sized for
+                    fr_opts = replace(fr_opts, include_time_mux=False)
+                fr_base = replace(self.problem, options=fr_opts)
+
+                def fault_resolver(hw_now):
+                    prob2 = replace(fr_base, package=PackageSpec(hw=hw_now))
+                    sol2 = cache.solve(prob2)
+                    mm2 = None
+                    if sol2.feasible:
+                        mm2 = (sol2.multi if sol2.multi is not None
+                               else sol2.as_multimodel())
+                    return mm2, {
+                        "hw": hw_now.name,
+                        "chips": hw_now.chips,
+                        "dead_chips": len(hw_now.dead_chips),
+                        "feasible": sol2.feasible,
+                        "dse_s": sol2.diagnostics.get("dse_s"),
+                        "cache_hit": cache.last_hit,
+                        "solve_cache": dict(cache.stats),
+                    }
+
         autoscaler = None
         if autoscale:
             if self.multi is None or len(mm.assignments) < 2:
@@ -642,13 +696,23 @@ class Solution:
             cache = cache or SolutionCache()
             base = self.problem
 
-            def resolve_fn(new_weights: dict[str, float]):
+            def resolve_fn(new_weights: dict[str, float], hw=None):
                 models = tuple(
                     replace(m, weight=new_weights[m.name])
                     for m in base.workload.models
                 )
                 prob = replace(base,
                                workload=replace(base.workload, models=models))
+                if hw is not None:
+                    # mid-failure drift re-solve: plan on the surviving
+                    # package (degraded fingerprints stay cache-isolated,
+                    # and the fleet keeps its latency class, see the
+                    # fault_resolver above)
+                    opts = replace(prob.options, cost=None)
+                    if mm.mode != "time_mux":
+                        opts = replace(opts, include_time_mux=False)
+                    prob = replace(prob, package=PackageSpec(hw=hw),
+                                   options=opts)
                 sol = cache.solve(prob)
                 info = {
                     "dse_s": sol.diagnostics.get("dse_s"),
@@ -675,6 +739,7 @@ class Solution:
         ex = ServingExecutor(
             mm, hw, batching=batching, slos=slos, autoscaler=autoscaler,
             service_override=service_override, reload_s=reload_s, seed=seed,
+            faults=faults, fault_resolver=fault_resolver,
         )
         report = ex.run(trace, horizon_s=horizon_s)
         report.meta.update(

@@ -81,6 +81,12 @@ class HardwareModel:
     # specific unordered flavor pairs to an absolute bytes/s per link.
     seam_bw_scale: float = 1.0
     seam_bw_overrides: tuple[tuple[str, str, float], ...] = ()
+    # Degraded package: mesh coordinates whose chips have failed.  ``chips``
+    # and ``region_types`` count the *surviving* chips only; the dead
+    # coordinates stay in the field so placement can carve around the holes
+    # (and so the frozen value -- hence every problem fingerprint built on
+    # it -- distinguishes a degraded package from an intact smaller one).
+    dead_chips: tuple[tuple[int, int], ...] = ()
 
     def with_chips(self, chips: int) -> "HardwareModel":
         side = int(math.sqrt(chips))
@@ -142,6 +148,92 @@ class HardwareModel:
             if (x == a and y == b) or (x == b and y == a):
                 return bw
         return min(self.flavor_link_bw(a), self.flavor_link_bw(b)) * self.seam_bw_scale
+
+    # --------------------------------------------------------- degradation
+    def occupied_coords(self) -> list[tuple[int, int]]:
+        """Mesh coordinates the package populates (dead chips included):
+        the first ``chips + len(dead_chips)`` steps of the zigzag walk."""
+        from .regions import zigzag_order
+
+        return zigzag_order(self.mesh_shape)[: self.chips + len(self.dead_chips)]
+
+    def disable_chips(self, dead) -> "HardwareModel":
+        """Derive the degraded package after the chips at ``dead`` mesh
+        coordinates fail.
+
+        ``chips`` and each flavor's ``region_types`` count shrink to the
+        survivors; flavors with no survivor are dropped; the dead
+        coordinates accumulate in ``dead_chips`` so the placement layer
+        (:func:`repro.core.regions.flavor_zones` with ``dead=``) carves the
+        pristine zones minus the holes.  Seam bookkeeping
+        (``seam_bw_scale`` / ``seam_bw_overrides``) is untouched -- the
+        surviving seam links keep their bandwidth.  Raises when a
+        coordinate is outside the occupied mesh or the whole package dies.
+        """
+        dead = {(int(r), int(c)) for r, c in dead}
+        occupied = self.occupied_coords()
+        unknown = dead - set(occupied)
+        if unknown:
+            raise ValueError(
+                f"{self.name}: cannot disable unoccupied coords "
+                f"{sorted(unknown)} (mesh {self.mesh_shape}, "
+                f"{len(occupied)} chips populated)"
+            )
+        all_dead = dead | set(self.dead_chips)
+        alive = [c for c in occupied if c not in all_dead]
+        if not alive:
+            raise ValueError(f"{self.name}: every chip is dead")
+        new_types = self.region_types
+        if self.region_types:
+            # Pristine flavor zones are consecutive slices of the walk; an
+            # already-degraded package re-derives them from the current
+            # (alive) counts by skipping its current dead coords.  Interior
+            # dead coords at a zone boundary are attributed to the later
+            # zone; the trailing run goes to the last zone -- alive counts,
+            # the only observable, are identical either way.
+            cur_dead = set(self.dead_chips)
+            spans, pos = [], 0
+            for i, t in enumerate(self.region_types):
+                if i == len(self.region_types) - 1:
+                    spans.append(len(occupied) - pos)
+                    break
+                n_alive = n_total = 0
+                while n_alive < t.chips:
+                    if occupied[pos + n_total] not in cur_dead:
+                        n_alive += 1
+                    n_total += 1
+                spans.append(n_total)
+                pos += n_total
+            shrunk, pos = [], 0
+            for t, span in zip(self.region_types, spans):
+                zone = occupied[pos : pos + span]
+                pos += span
+                n = sum(1 for c in zone if c not in all_dead)
+                if n:
+                    shrunk.append(replace(t, chips=n))
+            new_types = tuple(shrunk)
+        hw = replace(
+            self,
+            chips=len(alive),
+            region_types=new_types,
+            dead_chips=tuple(sorted(all_dead)),
+        )
+        validate_region_types(hw)
+        return hw
+
+    def disable_seam(self, a: str, b: str,
+                     bw: float = 1.0) -> "HardwareModel":
+        """Fail the interconnect seam between flavors ``a`` and ``b``:
+        pins the pair's per-link bandwidth to ``bw`` (default 1 byte/s --
+        effectively unusable, so a re-solve routes around it) via
+        ``seam_bw_overrides``; chips on both sides stay alive."""
+        for n in (a, b):
+            self.chip_type(n)       # raises on unknown flavors
+        overrides = tuple(
+            (x, y, w) for x, y, w in self.seam_bw_overrides
+            if {x, y} != {a, b}
+        ) + ((a, b, bw),)
+        return replace(self, seam_bw_overrides=overrides)
 
 
 def validate_region_types(hw: HardwareModel) -> None:

@@ -61,14 +61,24 @@ def zigzag_order(mesh_shape: tuple[int, int]) -> list[tuple[int, int]]:
 def flavor_zones(
     flavor_counts: list[tuple[str | None, int]],
     mesh_shape: tuple[int, int],
+    dead: frozenset[tuple[int, int]] | set | tuple = frozenset(),
 ) -> dict[str | None, list[tuple[int, int]]]:
     """Physical home of each chip flavor: consecutive slices of the zigzag
     walk, in ``flavor_counts`` (= ``HardwareModel.region_types``) order.
 
     Adjacent zones share the package's physical flavor seam -- the boundary
     the cost model prices via ``HardwareModel.seam_link_bw``.
+
+    ``dead`` (a degraded package's ``HardwareModel.dead_chips``) removes
+    failed coordinates from the walk before slicing.  Because pristine
+    zones are consecutive slices and ``flavor_counts`` then carries the
+    *surviving* count per flavor, slicing the filtered walk reproduces
+    exactly each pristine zone minus its holes.
     """
     order = zigzag_order(mesh_shape)
+    if dead:
+        dead = set(dead)
+        order = [c for c in order if c not in dead]
     if sum(c for _, c in flavor_counts) > len(order):
         raise ValueError("flavor zones exceed mesh capacity")
     zones, cursor = {}, 0
@@ -85,6 +95,7 @@ def zigzag_placement(
     mesh_shape: tuple[int, int],
     region_flavors: list[str | None] | None = None,
     flavor_counts: list[tuple[str | None, int]] | None = None,
+    dead: frozenset[tuple[int, int]] | set | tuple = frozenset(),
 ) -> list[list[tuple[int, int]]]:
     """Assign chip coordinates to regions walking the mesh boustrophedon.
 
@@ -100,9 +111,15 @@ def zigzag_placement(
     cost model charges.  Region flavors must form contiguous runs -- a
     placement like ``big, little, big`` would tear the big zone apart and
     straddle the seam twice; it raises ``ValueError``.
+
+    ``dead`` coordinates (failed chips of a degraded package) are skipped
+    by the walk, so regions place around the holes while staying contiguous
+    in the surviving chip order.
     """
     if region_flavors is None:
         order = zigzag_order(mesh_shape)
+        if dead:
+            order = [c for c in order if c not in set(dead)]
         if sum(region_sizes) > len(order):
             raise ValueError("regions exceed mesh capacity")
         out, cursor = [], 0
@@ -135,7 +152,7 @@ def zigzag_placement(
             "occupy one contiguous stretch of the pipeline (the placement "
             "would straddle the physical seam)"
         )
-    zones = flavor_zones(flavor_counts, mesh_shape)
+    zones = flavor_zones(flavor_counts, mesh_shape, dead=dead)
     out: list[list[tuple[int, int]] | None] = [None] * len(region_sizes)
     for k, (f, idxs) in enumerate(runs):
         need = sum(region_sizes[i] for i in idxs)
@@ -162,6 +179,7 @@ def check_schedule_placement(
     schedule,
     mesh_shape: tuple[int, int],
     flavor_counts: list[tuple[str | None, int]],
+    dead: frozenset[tuple[int, int]] | set | tuple = frozenset(),
 ) -> list[list[list[tuple[int, int]]]]:
     """Flavor-aware placement of every segment of a ``ScopeSchedule``.
 
@@ -177,6 +195,7 @@ def check_schedule_placement(
             mesh_shape,
             region_flavors=[cl.chip_type for cl in seg.clusters],
             flavor_counts=flavor_counts,
+            dead=dead,
         )
         for seg in schedule.segments
     ]
@@ -186,6 +205,7 @@ def check_assignments_placement(
     assignments,
     mesh_shape: tuple[int, int],
     flavor_counts: list[tuple[str | None, int]],
+    dead: frozenset[tuple[int, int]] | set | tuple = frozenset(),
 ) -> None:
     """Run :func:`check_schedule_placement` over a co-schedule's
     assignments, deduplicating shared schedules (merged mode carries one
@@ -196,7 +216,8 @@ def check_assignments_placement(
         if id(a.schedule) in seen:
             continue
         seen.add(id(a.schedule))
-        check_schedule_placement(a.schedule, mesh_shape, flavor_counts)
+        check_schedule_placement(a.schedule, mesh_shape, flavor_counts,
+                                 dead=dead)
 
 
 def rebalance(

@@ -63,7 +63,19 @@ class ResilientTrainer:
 
     def run(self, params, opt_state, n_steps: int, start_step: int = 0,
             shardings=None, failure_injector=None):
-        """Runs to ``n_steps``; returns (params, opt_state, history)."""
+        """Runs to ``n_steps``; returns (params, opt_state, history).
+
+        ``failure_injector`` is either a ``(step) -> None`` callable that
+        raises to simulate a failure, or a
+        :class:`repro.serving.faults.FaultInjector` -- the serving
+        simulator's seeded chaos source -- whose failure windows are
+        mapped onto step indices (1 step = 1 simulated second), so the
+        trainer and the serving executor share one deterministic fault
+        vocabulary.
+        """
+        if failure_injector is not None and hasattr(failure_injector,
+                                                    "step_hook"):
+            failure_injector = failure_injector.step_hook(n_steps=n_steps)
         step = start_step
         # resume if a checkpoint exists
         last = latest_step(self.ckpt_dir)
@@ -74,7 +86,11 @@ class ResilientTrainer:
             step = manifest["step"]
             log.info("resumed from checkpoint step %d", step)
         history = []
-        retries = 0
+        # Retries are tracked per step index: after a restore, failures on
+        # *different* replayed steps are distinct incidents, not one poison
+        # step -- a single shared counter would abort N transient faults on
+        # N distinct steps as a false poison step.
+        retries: dict[int, int] = {}
         while step < n_steps:
             batch = self.batch_fn(step)
             t0 = time.monotonic()
@@ -84,9 +100,12 @@ class ResilientTrainer:
                 params, opt_state, metrics = self.train_step(params, opt_state, batch)
                 loss = float(metrics["loss"])
             except Exception as exc:  # noqa: BLE001 -- restart-on-anything
-                retries += 1
-                if retries > self.max_retries_per_step:
-                    raise RuntimeError(f"step {step} failed {retries}x") from exc
+                failed = step
+                retries[failed] = retries.get(failed, 0) + 1
+                if retries[failed] > self.max_retries_per_step:
+                    raise RuntimeError(
+                        f"step {failed} failed {retries[failed]}x"
+                    ) from exc
                 last = latest_step(self.ckpt_dir)
                 if last is not None:
                     (params, opt_state), manifest = restore_checkpoint(
@@ -100,7 +119,7 @@ class ResilientTrainer:
             dt = time.monotonic() - t0
             if self.straggler.observe(step, dt) and self.on_straggler:
                 self.on_straggler(step, dt)
-            retries = 0
+            retries.pop(step, None)
             step += 1
             history.append({"step": step, "loss": loss, "time": dt})
             if step % self.ckpt_every == 0:

@@ -129,6 +129,7 @@ def check_stage_placement(
         hw.mesh_shape,
         region_flavors=[ctype for _, _, ctype, _ in stage_chip_types],
         flavor_counts=package_flavors(hw),
+        dead=getattr(hw, "dead_chips", ()),
     )
 
 
@@ -199,7 +200,8 @@ def plan_for_multimodel(
         from ..multimodel.quota import package_flavors
 
         check_assignments_placement(mm.assignments, hw.mesh_shape,
-                                    package_flavors(hw))
+                                    package_flavors(hw),
+                                    dead=hw.dead_chips)
     plans: dict[str, ShardPlan] = {}
     for cfg, graph, spec in zip(cfgs, graphs, specs):
         a = mm.assignment(spec.name)

@@ -11,12 +11,15 @@ The pieces, in data-flow order:
 * :mod:`.metrics` -- goodput, latency percentiles, queue depths, chip
   utilization, SLO attainment (:class:`~.metrics.ServingReport`);
 * :mod:`.autoscale` -- the online re-solve hook (sliding-window mix drift
-  -> re-plan through the facade's cached solver).
+  -> re-plan through the facade's cached solver);
+* :mod:`.faults` -- seeded chip/zone/seam failure injection and the
+  degraded-package recovery path (shared with the ft trainer).
 
 Front doors: :meth:`repro.api.Solution.serve` and
-``python -m repro serve``.
+``python -m repro serve`` (``--faults`` for chaos scenarios).
 """
 from .autoscale import AutoscalePolicy, Autoscaler
+from .faults import FaultEvent, FaultInjector, InjectedFault, parse_faults
 from .executor import (
     BatchingPolicy,
     ServiceModel,
@@ -41,6 +44,9 @@ __all__ = [
     "Autoscaler",
     "BatchingPolicy",
     "Diurnal",
+    "FaultEvent",
+    "FaultInjector",
+    "InjectedFault",
     "MMPP",
     "ModelMetrics",
     "Poisson",
@@ -50,6 +56,7 @@ __all__ = [
     "ServingReport",
     "allocate_submeshes",
     "measure_service_models",
+    "parse_faults",
     "percentile",
     "phased_trace",
     "request_trace",

@@ -115,8 +115,13 @@ class Autoscaler:
         return self._l1(shares) if n else 0.0
 
     # ------------------------------------------------------------ resolving
-    def maybe_resolve(self, t: float):
-        """Executor hook: returns ``(new_mm, event_dict)`` or ``None``."""
+    def maybe_resolve(self, t: float, hw=None):
+        """Executor hook: returns ``(new_mm, event_dict)`` or ``None``.
+
+        ``hw`` (only passed while the executor is running degraded after a
+        chip failure) is the surviving package; a resolve_fn that accepts
+        it re-plans on the degraded hardware instead of the pristine one.
+        """
         self.checks += 1
         self._prune(t)
         pol = self.policy
@@ -132,7 +137,10 @@ class Autoscaler:
         # zero window traffic keeps a floor quantum so its server survives.
         full = {m: shares.get(m, 0.0) for m in self.current}
         weights = quantize_mix(full, pol.weight_quantum)
-        mm, info = self.resolve_fn(weights)
+        # hw is only forwarded when set, so 1-argument resolve_fns (every
+        # pre-fault caller) keep working unchanged
+        mm, info = (self.resolve_fn(weights) if hw is None
+                    else self.resolve_fn(weights, hw=hw))
         if mm is None:
             return None
         event = {

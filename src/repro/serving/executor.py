@@ -46,6 +46,7 @@ from ..core.graph import (
 from ..core.hw import HardwareModel
 from ..core.regions import check_assignments_placement, flavor_zones
 from ..multimodel.quota import package_flavors
+from .faults import FaultEvent, FaultInjector
 from .metrics import ServingReport, summarize
 from .traffic import Request
 
@@ -125,6 +126,7 @@ class _Server:
     service: ServiceModel
     window: tuple[float, float, float] | None = None   # (offset, span, period)
     free_at: float = 0.0
+    down: bool = False          # submesh hit by a failure; dispatch skips it
 
     def advance(self, t: float, work: float) -> float:
         """Absolute completion time of ``work`` busy-seconds started at
@@ -185,7 +187,7 @@ def allocate_submeshes(
     zones).
     """
     counts = package_flavors(hw)
-    zones = flavor_zones(counts, hw.mesh_shape)
+    zones = flavor_zones(counts, hw.mesh_shape, dead=hw.dead_chips)
     if mm.mode != MM_PARTITIONED:
         return {a.model: {f: list(z) for f, z in zones.items()}
                 for a in mm.assignments}
@@ -222,7 +224,7 @@ def check_stage_contiguity(mm: MultiModelSchedule, hw: HardwareModel) -> None:
     coordinates: flavor runs must place contiguously inside their zones
     (raises via :func:`check_assignments_placement` otherwise)."""
     check_assignments_placement(mm.assignments, hw.mesh_shape,
-                                package_flavors(hw))
+                                package_flavors(hw), dead=hw.dead_chips)
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +276,7 @@ def build_servers(
 # The engine
 # ---------------------------------------------------------------------------
 
-_ARRIVE, _TIMER, _DONE, _CHECK = 0, 1, 2, 3
+_ARRIVE, _TIMER, _DONE, _CHECK, _FAULT = 0, 1, 2, 3, 4
 
 
 class ServingExecutor:
@@ -285,6 +287,19 @@ class ServingExecutor:
     the server fleet, charging ``redeploy_s`` (weight reload through DRAM)
     as dead time before the new servers accept work -- in-flight batches
     finish on the old fleet.
+
+    ``faults`` (a :class:`~.faults.FaultInjector` or a list of
+    :class:`~.faults.FaultEvent`) injects chip/zone/seam failures: a
+    failure marks every server whose submesh intersects the dead chips
+    down, spills its in-flight batch back to the queue front, and -- when
+    ``fault_resolver`` is set -- triggers a degraded re-solve:
+    ``fault_resolver(degraded_hw) -> (MultiModelSchedule | None, info)``
+    plans a fresh deployment on the surviving chips (the facade wires it
+    through a shared :class:`~repro.api.SolutionCache`, so the dead-chip
+    set lands in the problem fingerprint), and the executor swaps fleets
+    charging redeploy dead time exactly like an autoscale event.  Repairs
+    re-solve back up.  Without a resolver the run degrades statically:
+    down models queue until their own chips are repaired.
     """
 
     def __init__(
@@ -298,9 +313,11 @@ class ServingExecutor:
         switch_period_s: float | None = None,
         reload_s: dict[str, float] | None = None,
         seed: int = 0,
+        faults: FaultInjector | list | None = None,
+        fault_resolver=None,
     ):
         self.mm = mm
-        self.hw = hw
+        self.hw = hw                     # pristine package (fault baseline)
         self.batching = batching or BatchingPolicy()
         self.slos = slos or {}
         self.autoscaler = autoscaler
@@ -308,6 +325,8 @@ class ServingExecutor:
         self.switch_period_s = switch_period_s
         self.reload_s = reload_s or {}
         self.seed = seed
+        self.faults = faults
+        self.fault_resolver = fault_resolver
         check_stage_contiguity(mm, hw)
         self.placement = allocate_submeshes(mm, hw)
         self.servers = build_servers(mm, hw, 0.0, switch_period_s,
@@ -317,7 +336,10 @@ class ServingExecutor:
         self.queues: dict[str, deque[Request]] = {m: deque() for m in models}
         self.queued_samples = {m: 0 for m in models}
         self.arrived = {m: [0, 0] for m in models}
-        self.dropped = {m: [0, 0] for m in models}
+        # drops are attributed to a named cause (strict conservation)
+        self.dropped: dict[str, dict[str, list[int]]] = {
+            m: {} for m in models
+        }
         self.latencies: dict[str, list[float]] = {m: [] for m in models}
         self.req_samples: dict[str, list[int]] = {m: [] for m in models}
         self.batches = {m: 0 for m in models}
@@ -333,6 +355,26 @@ class ServingExecutor:
         self._seq = 0
         self._makespan = 0.0
         self._timer_at: dict[str, float] = {}   # pending batch-delay timer
+        # fault machinery: the pristine mm/placement are kept so static
+        # repairs can rebuild a revived model's original server
+        self._mm0 = mm
+        self._placement0 = {m: {f: list(z) for f, z in zones.items()}
+                            for m, zones in self.placement.items()}
+        self._dead: set[tuple[int, int]] = set()
+        self._dead_seams: set[tuple[str, str]] = set()
+        # epoch fences stale _DONE events of killed servers; _inflight
+        # tracks the (single) in-flight batch per server for spilling
+        self._epoch = {m: 0 for m in models}
+        self._inflight: dict[str, list[Request] | None] = {
+            m: None for m in models
+        }
+        self._down_since: dict[str, float] = {}
+        self._downtime = {m: 0.0 for m in models}
+        self._pending_recoveries: list[dict] = []
+        self.fault_log: list[dict] = []
+        self.recoveries: list[dict] = []
+        # (t_done, model, samples, latency) for failure-window goodput
+        self._completions: list[tuple[float, str, int, float]] = []
 
     # ------------------------------------------------------------- plumbing
     def _push(self, t: float, kind: int, payload) -> None:
@@ -347,11 +389,17 @@ class ServingExecutor:
         else:
             tr.append((t, depth))
 
+    def _drop(self, model: str, cause: str, requests: int,
+              samples: int) -> None:
+        tally = self.dropped[model].setdefault(cause, [0, 0])
+        tally[0] += requests
+        tally[1] += samples
+
     # ------------------------------------------------------------- dispatch
     def _try_dispatch(self, model: str, t: float) -> None:
         q = self.queues[model]
         srv = self.servers[model]
-        if not q or srv.free_at > t + _EPS:
+        if srv.down or not q or srv.free_at > t + _EPS:
             return                      # retried when the server frees up
         total = self.queued_samples[model]
         age = t - q[0].t_arrive
@@ -383,41 +431,208 @@ class ServingExecutor:
         self.busy_s[model] += work
         self.batches[model] += 1
         self.batch_log[model].append((start, done, work, samples, srv.window))
-        self._push(done, _DONE, (model, batch, id(srv)))
+        self._inflight[model] = batch
+        self._push(done, _DONE, (model, batch, self._epoch[model]))
 
-    # ------------------------------------------------------------ autoscale
-    def _apply_autoscale(self, t: float) -> None:
-        out = self.autoscaler.maybe_resolve(t)
-        if out is None:
-            return
-        new_mm, event = out
-        check_stage_contiguity(new_mm, self.hw)
+    # ------------------------------------------------------- fleet swapping
+    def _current_hw(self) -> HardwareModel:
+        """The package as the faults have left it."""
+        hw = self.hw
+        if self._dead:
+            hw = hw.disable_chips(self._dead)
+        for a, b in self._dead_seams:
+            hw = hw.disable_seam(a, b)
+        return hw
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self._dead or self._dead_seams)
+
+    def _swap_fleet(self, t: float, new_mm: MultiModelSchedule,
+                    hw_now: HardwareModel) -> float:
+        """Replace the fleet with ``new_mm`` solved on ``hw_now``; charge
+        redeploy dead time; returns the new fleet's origin.  Down servers
+        come back up (the re-solve placed them on surviving chips);
+        surviving in-flight batches drain on their old submeshes first."""
+        check_stage_contiguity(new_mm, hw_now)
         redeploy = sum(
             self.reload_s.get(a.model, 0.0) for a in new_mm.assignments
         )
         old = self.servers
         origin = t + redeploy
-        self.servers = build_servers(new_mm, self.hw, origin,
+        self.servers = build_servers(new_mm, hw_now, origin,
                                      self.switch_period_s,
                                      self.service_override)
         if set(self.servers) != set(old):
             raise ValueError(
-                f"autoscale changed the model set: {sorted(old)} -> "
+                f"re-solve changed the model set: {sorted(old)} -> "
                 f"{sorted(self.servers)} (re-solves may only move chips)"
             )
         for m, srv in self.servers.items():
-            # let in-flight batches drain on the old fleet first
-            srv.free_at = max(srv.free_at, old[m].free_at)
+            # let in-flight batches drain on the old fleet first (a down
+            # server has none: its batch was spilled back to the queue)
+            if not old[m].down:
+                srv.free_at = max(srv.free_at, old[m].free_at)
         self.mm = new_mm
-        self.placement = allocate_submeshes(new_mm, self.hw)
-        event = dict(event, redeploy_s=redeploy)
-        self.redeploys.append(event)
+        self.placement = allocate_submeshes(new_mm, hw_now)
+        for m in self.servers:
+            self._close_downtime(m, origin)
         for m, srv in self.servers.items():
             # wake every queue when its new server starts accepting work --
             # without this, a model with no in-flight batch and no further
             # arrivals would strand its queued requests forever
             self._push(max(t, srv.free_at), _TIMER, m)
             self._try_dispatch(m, t)
+        return origin
+
+    # ------------------------------------------------------------ autoscale
+    def _apply_autoscale(self, t: float) -> None:
+        hw_now = self._current_hw() if self.degraded else self.hw
+        out = self.autoscaler.maybe_resolve(
+            t, hw=hw_now if self.degraded else None)
+        if out is None:
+            return
+        new_mm, event = out
+        origin = self._swap_fleet(t, new_mm, hw_now)
+        event = dict(event, redeploy_s=origin - t)
+        self.redeploys.append(event)
+        self._settle_recoveries(origin, resolved=True, info=event)
+
+    # --------------------------------------------------------------- faults
+    def _close_downtime(self, model: str, t: float) -> None:
+        t0 = self._down_since.pop(model, None)
+        if t0 is not None:
+            self._downtime[model] += max(0.0, t - t0)
+        srv = self.servers.get(model)
+        if srv is not None:
+            srv.down = False
+
+    def _settle_recoveries(self, t: float, resolved: bool,
+                           info: dict | None = None) -> None:
+        """Close every pending recovery once no server is down."""
+        if not self._pending_recoveries:
+            return
+        if any(s.down for s in self.servers.values()):
+            return
+        for p in self._pending_recoveries:
+            rec = {
+                **p,
+                "t_recovered": t,
+                "ttr_s": t - p["t_fail"],
+                "resolved": resolved,
+            }
+            for k in ("cache_hit", "dse_s", "redeploy_s"):
+                if info and k in info:
+                    rec[k] = info[k]
+            self.recoveries.append(rec)
+        self._pending_recoveries.clear()
+
+    def _seam_blocked(self, zones: dict) -> bool:
+        """Does this placement straddle a failed seam?"""
+        used = {f for f, coords in zones.items() if coords}
+        return any(a in used and b in used for a, b in self._dead_seams)
+
+    def _killed_by(self, model: str) -> bool:
+        zones = self.placement[model]
+        if any(c in self._dead
+               for coords in zones.values() for c in coords):
+            return True
+        return self._seam_blocked(zones)
+
+    def _spill(self, model: str, t: float) -> int:
+        """Kill ``model``'s server: spill the in-flight batch back to the
+        queue front (epoch-fencing its pending completion) and mark the
+        server down.  Returns the spilled sample count."""
+        srv = self.servers[model]
+        spilled = 0
+        batch = self._inflight[model]
+        if batch is not None:
+            self._epoch[model] += 1        # fences the stale _DONE
+            for r in reversed(batch):
+                self.queues[model].appendleft(r)
+            spilled = sum(r.samples for r in batch)
+            self.queued_samples[model] += spilled
+            self._inflight[model] = None
+            self._trace_queue(t, model)
+        srv.down = True
+        srv.free_at = max(srv.free_at, t)
+        self._down_since.setdefault(model, t)
+        return spilled
+
+    def _revive_static(self, t: float) -> list[str]:
+        """Static-degraded repair path: rebuild the original server of
+        every down model whose pristine submesh is fully alive again."""
+        revived = []
+        fresh = None
+        for m, srv in list(self.servers.items()):
+            if not srv.down or self._killed_by(m):
+                continue
+            if fresh is None:
+                fresh = build_servers(self._mm0, self.hw, 0.0,
+                                      self.switch_period_s,
+                                      self.service_override)
+            nsrv = fresh[m]
+            nsrv.free_at = t
+            self.servers[m] = nsrv
+            self._close_downtime(m, t)
+            revived.append(m)
+            self._push(t, _TIMER, m)
+        return revived
+
+    def _apply_fault(self, t: float, ev: FaultEvent) -> None:
+        entry = ev.to_json()
+        entry["applied_at"] = t
+        if ev.kind == "fail":
+            self._dead.update(ev.chips)
+            if ev.seam:
+                self._dead_seams.add(tuple(sorted(ev.seam)))
+            killed, spilled = [], 0
+            for m, srv in self.servers.items():
+                if not srv.down and self._killed_by(m):
+                    spilled += self._spill(m, t)
+                    killed.append(m)
+            entry.update(killed=killed, spilled_samples=spilled,
+                         dead_chips=len(self._dead))
+            if killed:
+                self._pending_recoveries.append(
+                    {"t_fail": t, "target": ev.target})
+            if killed and self.fault_resolver is not None:
+                entry["resolve"] = self._fault_redeploy(t)
+        elif ev.kind == "repair":
+            changed = (self._dead & set(ev.chips)) or (
+                ev.seam and tuple(sorted(ev.seam)) in self._dead_seams)
+            if not changed:
+                return              # repair of something that never failed
+            self._dead.difference_update(ev.chips)
+            if ev.seam:
+                self._dead_seams.discard(tuple(sorted(ev.seam)))
+            if self.fault_resolver is not None:
+                # re-solve back up on the (partially) restored package --
+                # a full repair re-solves the pristine fingerprint, a
+                # SolutionCache hit
+                entry["resolve"] = self._fault_redeploy(t)
+            else:
+                entry["revived"] = self._revive_static(t)
+                self._settle_recoveries(t, resolved=False)
+            entry.update(dead_chips=len(self._dead))
+        self.fault_log.append(entry)
+
+    def _fault_redeploy(self, t: float) -> dict:
+        """Ask ``fault_resolver`` for a deployment on the current package;
+        swap fleets on success.  An infeasible degraded package leaves the
+        down servers down (their queues wait for a repair)."""
+        hw_now = self._current_hw()
+        new_mm, info = self.fault_resolver(hw_now)
+        info = dict(info or {})
+        if new_mm is None or not new_mm.assignments:
+            info["applied"] = False
+            return info
+        origin = self._swap_fleet(t, new_mm, hw_now)
+        info.update(applied=True, redeploy_s=origin - t,
+                    t_serving_again=origin)
+        self.redeploys.append(dict(info, t=t, cause="fault"))
+        self._settle_recoveries(origin, resolved=True, info=info)
+        return info
 
     # ------------------------------------------------------------------ run
     def run(self, trace: list[Request], horizon_s: float | None = None
@@ -437,6 +652,12 @@ class ServingExecutor:
             while t <= horizon_s + _EPS:
                 self._push(t, _CHECK, None)
                 t += step
+        if self.faults is not None:
+            events = (self.faults.schedule(horizon_s)
+                      if isinstance(self.faults, FaultInjector)
+                      else list(self.faults))
+            for ev in events:
+                self._push(ev.t, _FAULT, ev)
         pol = self.batching
         while self._heap:
             t, kind, _, payload = heapq.heappop(self._heap)
@@ -448,8 +669,7 @@ class ServingExecutor:
                 cap = pol.max_queue_samples
                 if cap is not None and \
                         self.queued_samples[r.model] + r.samples > cap:
-                    self.dropped[r.model][0] += 1
-                    self.dropped[r.model][1] += r.samples
+                    self._drop(r.model, "queue_full", 1, r.samples)
                     continue
                 if self.autoscaler is not None:
                     self.autoscaler.observe(t, r.model, r.samples)
@@ -462,16 +682,122 @@ class ServingExecutor:
                     self._timer_at.pop(payload, None)
                 self._try_dispatch(payload, t)
             elif kind == _DONE:
-                model, batch, _srv_id = payload
+                model, batch, epoch = payload
+                if epoch != self._epoch[model]:
+                    continue        # batch died with its server (spilled)
+                if self._inflight[model] is batch:
+                    self._inflight[model] = None
                 for r in batch:
-                    self.latencies[model].append(t - r.t_arrive)
+                    lat = t - r.t_arrive
+                    self.latencies[model].append(lat)
                     self.req_samples[model].append(r.samples)
+                    self._completions.append((t, model, r.samples, lat))
                 self._try_dispatch(model, t)
             elif kind == _CHECK:
                 self._apply_autoscale(t)
+            elif kind == _FAULT:
+                self._apply_fault(t, payload)
         return self._report(horizon_s)
 
     # --------------------------------------------------------------- report
+    def _gated_samples(self, lo: float, hi: float,
+                       by_arrival: bool = False) -> int:
+        """SLO-satisfying samples completed (or, ``by_arrival``, arrived)
+        in ``[lo, hi)``."""
+        total = 0
+        for t_done, m, s, lat in self._completions:
+            t = t_done - lat if by_arrival else t_done
+            if lo <= t < hi:
+                slo = self.slos.get(m)
+                if slo is None or lat <= slo:
+                    total += s
+        return total
+
+    def _fault_summary(self, makespan: float,
+                       horizon_s: float) -> dict | None:
+        if self.faults is None and not self.fault_log:
+            return None
+        span = max(makespan, _EPS)
+        downtime = dict(self._downtime)
+        for m, t0 in self._down_since.items():
+            downtime[m] = downtime.get(m, 0.0) + max(0.0, makespan - t0)
+        n_models = max(1, len(self.servers))
+        availability = 1.0 - min(
+            1.0, sum(downtime.values()) / (n_models * span))
+        # failure windows: fault through recovery (or end of run)
+        windows = [(r["t_fail"], min(r["t_recovered"], makespan))
+                   for r in self.recoveries]
+        windows += [(p["t_fail"], makespan)
+                    for p in self._pending_recoveries]
+        windows.sort()
+        merged: list[tuple[float, float]] = []
+        for lo, hi in windows:
+            if merged and lo <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+            else:
+                merged.append((lo, hi))
+        w_span = sum(hi - lo for lo, hi in merged)
+        in_w = sum(self._gated_samples(lo, hi) for lo, hi in merged)
+        total_good = self._gated_samples(0.0, INF)
+        out = {
+            "events": len(self.fault_log),
+            "log": self.fault_log,
+            "recoveries": self.recoveries,
+            "unrecovered": len(self._pending_recoveries),
+            "availability": availability,
+            "downtime_s": {m: round(d, 6) for m, d in downtime.items()},
+            "mean_ttr_s": (
+                sum(r["ttr_s"] for r in self.recoveries)
+                / len(self.recoveries) if self.recoveries else None
+            ),
+            "failure_window_s": w_span,
+            "goodput_in_failure": (in_w / w_span) if w_span > _EPS else None,
+            "goodput_outside_failure": (
+                (total_good - in_w) / (span - w_span)
+                if span - w_span > _EPS else None
+            ),
+            "redeploy_dead_s": sum(
+                e.get("redeploy_s", 0.0) for e in self.redeploys
+                if e.get("cause") == "fault"
+            ),
+        }
+        # pre-failure vs post-recovery goodput (the recovery-quality gauge:
+        # a recovered fleet should serve within a few percent of the
+        # pre-failure rate).  "Post-recovery" starts after the LAST fault
+        # activity settles -- the last recovery window, repair event, or
+        # fault-driven redeploy -- so a fleet that re-solved onto a
+        # degraded package isn't judged at degraded capacity.  Both gauges
+        # are by ARRIVAL time: requests arriving after recovery see the
+        # recovered fleet's true service, while the failure-window backlog
+        # draining late (and SLO-gated out) stays charged to the failure
+        # windows, not to the recovered fleet.
+        if merged:
+            t_first = merged[0][0]
+            t_settle = max(
+                [merged[-1][1]]
+                + [e["applied_at"] for e in self.fault_log
+                   if e["kind"] == "repair"]
+                + [e.get("t_serving_again",
+                         e["t"] + e.get("redeploy_s", 0.0))
+                   for e in self.redeploys if e.get("cause") == "fault"]
+            )
+            out["goodput_pre_fault"] = (
+                self._gated_samples(0.0, t_first, by_arrival=True) / t_first
+                if t_first > _EPS else None
+            )
+            # clamped to the arrival horizon: nothing arrives past it
+            t_lo, t_hi = t_settle, min(span, horizon_s)
+            out["goodput_post_recovery"] = (
+                self._gated_samples(t_lo, t_hi, by_arrival=True)
+                / (t_hi - t_lo)
+                if t_hi - t_lo > _EPS and not self._pending_recoveries
+                else None
+            )
+        else:
+            out["goodput_pre_fault"] = None
+            out["goodput_post_recovery"] = None
+        return out
+
     def _report(self, horizon_s: float) -> ServingReport:
         autoscale = None
         if self.autoscaler is not None:
@@ -514,15 +840,19 @@ class ServingExecutor:
             union += cur_hi - cur_lo
             busy_chip_s = union * pipeline_chips
             meta["merged_graph"] = self.mm.meta.get("merged_graph")
+        makespan = max(self._makespan, horizon_s)
         return summarize(
             mode=mode,
             package=self.hw.name,
             chips=self.hw.chips,
             seed=self.seed,
             horizon_s=horizon_s,
-            makespan_s=max(self._makespan, horizon_s),
+            makespan_s=makespan,
             arrived={m: tuple(v) for m, v in self.arrived.items()},
-            dropped={m: tuple(v) for m, v in self.dropped.items()},
+            dropped={
+                m: {cause: tuple(v) for cause, v in causes.items()}
+                for m, causes in self.dropped.items()
+            },
             latencies=self.latencies,
             request_samples=self.req_samples,
             batches=self.batches,
@@ -534,6 +864,11 @@ class ServingExecutor:
             autoscale=autoscale,
             meta=meta,
             package_busy_chip_s=busy_chip_s,
+            queued_end={
+                m: (len(self.queues[m]), self.queued_samples[m])
+                for m in self.servers
+            },
+            faults=self._fault_summary(makespan, horizon_s),
         )
 
 

@@ -58,6 +58,13 @@ class ModelMetrics:
     completed_samples: int = 0
     dropped_requests: int = 0
     dropped_samples: int = 0
+    # dropped, attributed: cause -> (requests, samples); the per-cause sums
+    # equal the aggregate dropped_* fields (strict conservation evidence)
+    drop_causes: dict = field(default_factory=dict)
+    # samples still queued when the run ended (a failed-and-never-repaired
+    # server strands its queue; conservation counts them explicitly)
+    queued_end_requests: int = 0
+    queued_end_samples: int = 0
     batches: int = 0
     throughput: float = 0.0
     goodput: float = 0.0
@@ -91,6 +98,7 @@ class ServingReport:
     total_arrived: int = 0
     total_completed: int = 0
     total_dropped: int = 0
+    total_queued_end: int = 0       # samples stranded in queues at run end
     throughput: float = 0.0         # completed samples/s over the makespan
     goodput: float = 0.0            # SLO-satisfying samples/s
     latency_p95_s: float = 0.0      # over all requests
@@ -98,12 +106,22 @@ class ServingReport:
     utilization: float = 0.0        # busy chip-seconds / (package x makespan)
     placement: dict = field(default_factory=dict)   # model -> per-flavor coords
     autoscale: dict | None = None
+    faults: dict | None = None      # fault log / recovery metrics (see executor)
     meta: dict = field(default_factory=dict)
 
     @property
     def conserved(self) -> bool:
-        """Open-loop conservation: every admitted sample completed."""
-        return self.total_arrived == self.total_completed + self.total_dropped
+        """Strict conservation: every arrived sample was served, is still
+        queued, or was dropped for a named cause."""
+        if self.total_arrived != (self.total_completed + self.total_dropped
+                                  + self.total_queued_end):
+            return False
+        # every drop must carry a cause that sums back to the aggregate
+        for m in self.per_model.values():
+            by_cause = sum(s for _, s in m.drop_causes.values())
+            if by_cause != m.dropped_samples:
+                return False
+        return True
 
     def to_json(self) -> dict:
         out = {
@@ -144,6 +162,30 @@ class ServingReport:
                 f"  autoscale: {len(ev)} re-solve(s), "
                 f"cache {self.autoscale.get('solve_cache', {})}"
             )
+        if self.faults is not None:
+            f = self.faults
+            ttr = f.get("mean_ttr_s")
+            lines.append(
+                f"  faults: {f.get('events', 0)} event(s), availability "
+                f"{f.get('availability', 1.0):.1%}, "
+                + (f"mean time-to-recover {ttr:.3f}s"
+                   if ttr is not None else "no recovery needed")
+                + (f", {f['unrecovered']} unrecovered"
+                   if f.get("unrecovered") else "")
+            )
+            pre, post = f.get("goodput_pre_fault"), f.get(
+                "goodput_post_recovery")
+            if pre is not None and post is not None:
+                lines.append(
+                    f"    goodput pre-fault {pre:.1f}/s -> post-recovery "
+                    f"{post:.1f}/s (through failure windows "
+                    f"{f.get('goodput_in_failure') or 0.0:.1f}/s)"
+                )
+            if self.total_queued_end:
+                lines.append(
+                    f"    {self.total_queued_end} samples still queued at "
+                    "run end (unrepaired capacity)"
+                )
         return lines
 
 
@@ -156,7 +198,7 @@ def summarize(
     horizon_s: float,
     makespan_s: float,
     arrived: dict[str, tuple[int, int]],          # model -> (requests, samples)
-    dropped: dict[str, tuple[int, int]],
+    dropped: dict[str, dict[str, tuple[int, int]]],   # model -> cause -> (r, s)
     latencies: dict[str, list[float]],            # per completed *request*
     request_samples: dict[str, list[int]],        # aligned with latencies
     batches: dict[str, int],
@@ -168,18 +210,23 @@ def summarize(
     autoscale: dict | None = None,
     meta: dict | None = None,
     package_busy_chip_s: float | None = None,
+    queued_end: dict[str, tuple[int, int]] | None = None,
+    faults: dict | None = None,
 ) -> ServingReport:
     span = max(makespan_s, 1e-12)
     rep = ServingReport(mode=mode, package=package, chips=chips, seed=seed,
                         horizon_s=horizon_s, makespan_s=makespan_s,
                         placement=placement, autoscale=autoscale,
-                        meta=meta or {})
+                        faults=faults, meta=meta or {})
     all_lat: list[float] = []
     good_total = busy_chip_s = 0.0
     slo_met = slo_reqs = 0
     for model in sorted(arrived):
         a_req, a_smp = arrived[model]
-        d_req, d_smp = dropped.get(model, (0, 0))
+        causes = dropped.get(model, {})
+        d_req = sum(r for r, _ in causes.values())
+        d_smp = sum(s for _, s in causes.values())
+        q_req, q_smp = (queued_end or {}).get(model, (0, 0))
         lats = sorted(latencies.get(model, []))
         smps = request_samples.get(model, [])
         done_req = len(smps)
@@ -199,6 +246,8 @@ def summarize(
             arrived_requests=a_req, arrived_samples=a_smp,
             completed_requests=done_req, completed_samples=done_smp,
             dropped_requests=d_req, dropped_samples=d_smp,
+            drop_causes={c: tuple(v) for c, v in causes.items()},
+            queued_end_requests=q_req, queued_end_samples=q_smp,
             batches=batches.get(model, 0),
             throughput=done_smp / span,
             goodput=good / span,
@@ -216,6 +265,7 @@ def summarize(
         rep.total_arrived += a_smp
         rep.total_completed += done_smp
         rep.total_dropped += d_smp
+        rep.total_queued_end += q_smp
         all_lat.extend(lats)
         good_total += good
         busy_chip_s += busy * chips_m

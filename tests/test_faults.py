@@ -1,0 +1,457 @@
+"""Fault-tolerant serving tests: degraded packages and placement around
+holes, the seeded FaultInjector, scripted scenario parsing, executor
+failure/recovery semantics (spill, static revive, degraded re-solve),
+SolutionCache isolation between intact and degraded fingerprints, and the
+ft trainer's shared fault vocabulary + poison-step regression."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import pytest
+
+from repro import scope
+from repro.core.hw import get_hw, mcm_hetero
+from repro.core.regions import flavor_zones, zigzag_order, zigzag_placement
+from repro.ft import ResilientTrainer
+from repro.multimodel.quota import package_flavors
+from repro.serving import (
+    FaultEvent,
+    FaultInjector,
+    InjectedFault,
+    Poisson,
+    allocate_submeshes,
+    parse_faults,
+    request_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def hetero16():
+    return get_hw("mcm16_hetero")       # 8 big + 8 little on a (4, 4) mesh
+
+
+@pytest.fixture(scope="module")
+def served_hetero():
+    """A 2-model co-schedule on mcm16_hetero with SLOs, plus its shared
+    cache -- the substrate for every executor fault scenario below."""
+    cache = scope.SolutionCache()
+    prob = scope.problem("alexnet:1:500,resnet18:1:500", "mcm16_hetero",
+                         m_samples=16)
+    sol = cache.solve(prob)
+    assert sol.feasible and sol.multi.mode == "partitioned"
+    return sol, cache
+
+
+def _serve(sol, cache, horizon=4.0, seed=0, **kw):
+    return sol.serve(rate_scale=0.75, horizon_s=horizon, seed=seed,
+                     cache=cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# degraded packages: HardwareModel.disable_chips / disable_seam
+# ---------------------------------------------------------------------------
+
+class TestDisableChips:
+    def test_counts_shrink_and_holes_accumulate(self, hetero16):
+        dead = [(0, 0), (2, 1)]        # one big, one little
+        hw = hetero16.disable_chips(dead)
+        assert hw.chips == 14
+        assert dict((t.name, t.chips) for t in hw.region_types) == {
+            "big": 7, "little": 7,
+        }
+        assert hw.dead_chips == ((0, 0), (2, 1))
+        # occupied mesh footprint is unchanged: holes stay holes
+        assert hw.occupied_coords() == hetero16.occupied_coords()
+
+    def test_chained_disable(self, hetero16):
+        hw = hetero16.disable_chips([(0, 0)]).disable_chips([(0, 1)])
+        assert hw.chips == 14
+        assert hw.dead_chips == ((0, 0), (0, 1))
+        assert dict((t.name, t.chips) for t in hw.region_types) == {
+            "big": 6, "little": 8,
+        }
+
+    def test_whole_flavor_dropped(self, hetero16):
+        little = flavor_zones(package_flavors(hetero16),
+                              hetero16.mesh_shape)["little"]
+        hw = hetero16.disable_chips(little)
+        assert [t.name for t in hw.region_types] == ["big"]
+        assert hw.chips == 8
+
+    def test_homogeneous(self):
+        hw = get_hw("mcm16").disable_chips([(1, 2)])
+        assert hw.chips == 15 and hw.region_types == ()
+
+    def test_errors(self, hetero16):
+        with pytest.raises(ValueError, match="unoccupied"):
+            hetero16.disable_chips([(9, 9)])
+        with pytest.raises(ValueError, match="every chip is dead"):
+            hetero16.disable_chips(hetero16.occupied_coords())
+
+    def test_fingerprints_isolated(self, served_hetero):
+        """Intact and degraded packages never share a cache entry; the
+        same degraded package twice is a whole-solution hit."""
+        sol, cache = served_hetero
+        hw_d = sol.hw.disable_chips([(3, 0)])
+        prob_d = scope.Problem(
+            package=scope.PackageSpec(hw=hw_d),
+            workload=sol.problem.workload,
+            options=sol.problem.options,
+        )
+        misses0 = cache.stats["solution_misses"]
+        sol_d = cache.solve(prob_d)
+        assert not cache.last_hit
+        assert sol_d.feasible
+        assert cache.stats["solution_misses"] == misses0 + 1
+        cache.solve(prob_d)
+        assert cache.last_hit
+
+    def test_disable_seam_overrides(self, hetero16):
+        hw = hetero16.disable_seam("big", "little", bw=1.0)
+        assert ("big", "little", 1.0) in hw.seam_bw_overrides
+        assert hw.seam_link_bw("big", "little") == 1.0
+        # repair by re-override replaces, not stacks
+        hw2 = hw.disable_seam("little", "big", bw=2.0)
+        assert sum(1 for x, y, _ in hw2.seam_bw_overrides
+                   if {x, y} == {"big", "little"}) == 1
+        with pytest.raises(KeyError):
+            hetero16.disable_seam("big", "medium")
+
+
+# ---------------------------------------------------------------------------
+# placement around holes
+# ---------------------------------------------------------------------------
+
+class TestDegradedPlacement:
+    def test_flavor_zones_minus_holes(self, hetero16):
+        pristine = flavor_zones(package_flavors(hetero16),
+                                hetero16.mesh_shape)
+        dead = {(0, 1), (2, 2), (3, 0)}
+        hw = hetero16.disable_chips(dead)
+        zones = flavor_zones(package_flavors(hw), hw.mesh_shape,
+                             dead=hw.dead_chips)
+        for f in ("big", "little"):
+            assert zones[f] == [c for c in pristine[f] if c not in dead]
+
+    def test_zigzag_placement_skips_holes(self):
+        dead = {(0, 2), (1, 3)}
+        regions = zigzag_placement([3, 4], (4, 4), dead=dead)
+        walk = [c for c in zigzag_order((4, 4)) if c not in dead]
+        assert regions == [walk[:3], walk[3:7]]
+
+    def test_flavored_placement_skips_holes(self, hetero16):
+        hw = hetero16.disable_chips([(1, 2), (2, 0)])   # 7 big + 7 little
+        counts = package_flavors(hw)
+        regions = zigzag_placement(
+            [4, 3, 7], hw.mesh_shape,
+            region_flavors=["big", "big", "little"],
+            flavor_counts=counts, dead=hw.dead_chips,
+        )
+        flat = [c for reg in regions for c in reg]
+        assert len(set(flat)) == 14
+        assert not set(flat) & set(hw.dead_chips)
+        zones = flavor_zones(counts, hw.mesh_shape, dead=hw.dead_chips)
+        assert set(regions[2]) == set(zones["little"])
+
+    def test_spanning_quota_stays_seam_adjacent(self, hetero16):
+        """A chip_quota spanning both flavors still gets the seam-facing
+        slice of each degraded zone."""
+        from repro.core.graph import (
+            MM_PARTITIONED,
+            ModelAssignment,
+            MultiModelSchedule,
+            ScopeSchedule,
+        )
+
+        hw = hetero16.disable_chips([(1, 0), (2, 0)])   # seam-side holes
+        sched = ScopeSchedule(workload="w", chips=0, segments=(),
+                              latency=1.0)
+        mm = MultiModelSchedule(
+            mode=MM_PARTITIONED,
+            package=hw.name,
+            chips=hw.chips,
+            assignments=(
+                ModelAssignment(model="span", weight=1.0, chips=4,
+                                schedule=sched,
+                                chip_quota=(("big", 2), ("little", 2))),
+                ModelAssignment(model="solo", weight=1.0, chips=3,
+                                schedule=sched, chip_type="little"),
+            ),
+        )
+        out = allocate_submeshes(mm, hw)
+        zones = flavor_zones(package_flavors(hw), hw.mesh_shape,
+                             dead=hw.dead_chips)
+        # spanning model: end of the big zone + front of the little zone
+        assert out["span"]["big"] == zones["big"][-2:]
+        assert out["span"]["little"] == zones["little"][:2]
+        assert out["solo"]["little"] == zones["little"][2:5]
+
+    def test_overcommitted_degraded_zone_raises(self, served_hetero):
+        """The pristine co-schedule does NOT fit the degraded package --
+        that's exactly why the executor must re-solve."""
+        sol, _ = served_hetero
+        hw = sol.hw.disable_chips([(2, 0)])
+        with pytest.raises(ValueError, match="overcommit|contiguous"):
+            allocate_submeshes(sol.multi, hw)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector + scripted DSL
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def test_parse_faults(self, hetero16):
+        events = parse_faults("zone:little@2:6; chip:0,1@3", hetero16)
+        assert [(e.t, e.kind, e.target) for e in events] == [
+            (2.0, "fail", "zone:little"),
+            (3.0, "fail", "chip:0,1"),
+            (6.0, "repair", "zone:little"),
+        ]
+        assert len(events[0].chips) == 8
+        assert events[1].chips == ((0, 1),)
+
+    def test_parse_faults_percent_and_seam(self, hetero16):
+        events = parse_faults("seam:big+little@25%:75%", hetero16,
+                              horizon_s=8.0)
+        assert [(e.t, e.kind) for e in events] == [(2.0, "fail"),
+                                                   (6.0, "repair")]
+        assert events[0].seam == ("big", "little")
+        assert events[0].chips == ()
+
+    def test_parse_errors(self, hetero16):
+        for bad in ("zone:little", "zone:huge@1", "chip:9,9@1",
+                    "zone:little@5:2", "chip:0@1"):
+            with pytest.raises(ValueError):
+                parse_faults(bad, hetero16)
+        with pytest.raises(ValueError, match="horizon"):
+            parse_faults("zone:little@50%", hetero16)
+
+    def test_schedule_deterministic_and_alternating(self, hetero16):
+        inj = FaultInjector(hetero16, seed=3, zone_mtbf_s=2.0,
+                            zone_mttr_s=0.5)
+        ev1 = inj.schedule(50.0)
+        ev2 = FaultInjector(hetero16, seed=3, zone_mtbf_s=2.0,
+                            zone_mttr_s=0.5).schedule(50.0)
+        assert ev1 == ev2 and len(ev1) > 4
+        for target in ("zone:big", "zone:little"):
+            kinds = [e.kind for e in ev1 if e.target == target]
+            assert kinds == ["fail", "repair"] * (len(kinds) // 2) + (
+                ["fail"] if len(kinds) % 2 else [])
+
+    def test_streams_independent(self, hetero16):
+        """Turning chip chaos on must not perturb the zone streams (each
+        component draws from its own crc32-keyed rng)."""
+        zones_only = FaultInjector(hetero16, seed=1, zone_mtbf_s=3.0)
+        both = FaultInjector(hetero16, seed=1, zone_mtbf_s=3.0,
+                             chip_mtbf_s=5.0)
+        pick = lambda evs: [(e.t, e.kind, e.target) for e in evs
+                            if e.target.startswith("zone:")]
+        assert pick(zones_only.schedule(30.0)) == pick(both.schedule(30.0))
+
+    def test_scripted_coercion(self, hetero16):
+        inj = FaultInjector(
+            hetero16,
+            scripted=(
+                "chip:0,0@1:2",
+                ("zone:little", 3.0, 4.0),
+                FaultEvent(t=5.0, kind="fail", target="chip:0,1",
+                           chips=((0, 1),)),
+            ),
+        )
+        sched = inj.schedule(10.0)
+        assert [(e.t, e.kind) for e in sched] == [
+            (1.0, "fail"), (2.0, "repair"), (3.0, "fail"),
+            (4.0, "repair"), (5.0, "fail"),
+        ]
+        # past-horizon events are clipped
+        assert all(e.t < 3.5 for e in inj.schedule(3.5))
+
+
+# ---------------------------------------------------------------------------
+# executor failure / recovery semantics
+# ---------------------------------------------------------------------------
+
+class TestExecutorFaults:
+    def test_static_degrade_and_revive(self, served_hetero):
+        """No resolver: the killed model's queue stalls until repair, then
+        its original server comes back; everything is conserved."""
+        sol, cache = served_hetero
+        rep = _serve(sol, cache, faults="zone:little@1:2.5",
+                     fault_recovery=False)
+        assert rep.conserved
+        f = rep.faults
+        assert f["events"] == 2
+        assert [e["kind"] for e in f["log"]] == ["fail", "repair"]
+        killed = f["log"][0]["killed"]
+        assert killed                      # someone lives on little chips
+        assert f["log"][1]["revived"] == killed
+        assert f["recoveries"] and not f["recoveries"][0]["resolved"]
+        assert f["recoveries"][0]["ttr_s"] == pytest.approx(1.5)
+        assert f["unrecovered"] == 0
+        # dead time really happened: availability dips below 1
+        assert 0.5 < f["availability"] < 1.0
+        for m in killed:
+            assert f["downtime_s"][m] == pytest.approx(1.5, abs=1e-6)
+
+    def test_resolver_recovers_with_cache_miss_then_hit(self, served_hetero):
+        sol, cache = served_hetero
+        rep = _serve(sol, cache, faults="zone:little@1:1.8; zone:little@3:3.8")
+        assert rep.conserved
+        f = rep.faults
+        recs = f["recoveries"]
+        assert len(recs) == 2 and all(r["resolved"] for r in recs)
+        # first degraded solve is a miss, the repeat failure is a hit
+        assert recs[0]["cache_hit"] is False
+        assert recs[1]["cache_hit"] is True
+        # recovery is a redeploy away, orders of magnitude under the MTTR
+        assert f["mean_ttr_s"] < 0.1
+        assert f["availability"] > 0.99
+        assert f["redeploy_dead_s"] > 0
+        # repair re-solves land back on the pristine fingerprint
+        repairs = [e for e in f["log"] if e["kind"] == "repair"]
+        assert all(e["resolve"]["applied"] for e in repairs)
+        assert all(e["resolve"]["dead_chips"] == 0 for e in repairs)
+
+    def test_goodput_through_failure_beats_static(self, served_hetero):
+        """Identical trace + schedule: the degraded re-solve must carry
+        more SLO-gated goodput through the failure window than static
+        degradation, and recover to near the pre-fault rate."""
+        sol, cache = served_hetero
+        kw = dict(horizon=4.0, faults="zone:little@25%:75%")
+        auto = _serve(sol, cache, **kw)
+        static = _serve(sol, cache, fault_recovery=False, **kw)
+        assert auto.conserved and static.conserved
+        assert auto.goodput > static.goodput
+        fa = auto.faults
+        assert fa["goodput_in_failure"] > (
+            static.faults["goodput_in_failure"] or 0.0)
+        assert fa["goodput_post_recovery"] > 0.9 * fa["goodput_pre_fault"]
+
+    def test_never_repaired_strands_queue(self, served_hetero):
+        """A failure with no repair and no resolver: the model's queued
+        samples are still conserved (queued_end), not lost."""
+        sol, cache = served_hetero
+        rep = _serve(sol, cache, horizon=2.0, faults="zone:little@1",
+                     fault_recovery=False)
+        assert rep.conserved
+        assert rep.total_queued_end > 0
+        assert rep.faults["unrecovered"] == 1
+        killed = rep.faults["log"][0]["killed"]
+        assert all(rep.per_model[m].queued_end_samples > 0 for m in killed)
+
+    def test_spilled_batch_is_reserved_not_lost(self, served_hetero):
+        """The in-flight batch at failure time spills back and is served
+        after recovery -- total completions equal arrivals."""
+        sol, cache = served_hetero
+        rep = _serve(sol, cache, faults="zone:little@1:1.5")
+        spilled = sum(e["spilled_samples"] for e in rep.faults["log"]
+                      if e["kind"] == "fail")
+        assert spilled > 0
+        assert rep.conserved
+        assert rep.total_completed == rep.total_arrived
+
+    def test_seam_fault_kills_only_spanning_models(self, served_hetero):
+        sol, cache = served_hetero
+        spans = {
+            a.model for a in sol.multi.assignments
+            if len([q for q in (a.chip_quota or ()) if q[1] > 0]) > 1
+        }
+        rep = _serve(sol, cache, faults="seam:big+little@1:2",
+                     fault_recovery=False)
+        assert rep.conserved
+        assert set(rep.faults["log"][0]["killed"]) == spans
+
+    def test_chip_fault_random_chaos_conserves(self, served_hetero):
+        sol, cache = served_hetero
+        inj = FaultInjector(sol.hw, seed=11, chip_mtbf_s=1.5,
+                            chip_mttr_s=0.3)
+        rep = _serve(sol, cache, faults=inj)
+        assert rep.faults["events"] > 0
+        assert rep.conserved
+        assert rep.faults["unrecovered"] == 0
+
+    def test_queue_full_drop_cause_named(self, served_hetero):
+        sol, cache = served_hetero
+        trace = request_trace({"alexnet": Poisson(4000.0),
+                               "resnet18": Poisson(50.0)}, 1.0, seed=0)
+        rep = sol.serve(trace=trace, horizon_s=1.0, cache=cache,
+                        max_queue=64, faults="chip:3,0@0.4:0.6")
+        assert rep.conserved
+        drops = rep.per_model["alexnet"].drop_causes
+        assert drops.get("queue_full", (0, 0))[1] > 0
+        assert rep.total_dropped > 0
+
+    def test_fault_report_serializes(self, served_hetero):
+        import json
+
+        sol, cache = served_hetero
+        rep = _serve(sol, cache, faults="zone:little@1:2")
+        blob = json.loads(json.dumps(rep.to_json()))
+        assert blob["conserved"] is True
+        assert blob["faults"]["events"] == 2
+        assert any("availability" in line for line in rep.describe())
+
+
+# ---------------------------------------------------------------------------
+# ft bridge: shared fault vocabulary + poison-step regression
+# ---------------------------------------------------------------------------
+
+def _mini_trainer(tmp_path, **kw):
+    def train_step(params, opt, batch):
+        loss = jnp.mean((params["w"] - batch["target"]) ** 2)
+        params = {
+            "w": params["w"] - 0.1 * 2 * (params["w"] - batch["target"])
+        }
+        return params, opt, {"loss": loss}
+
+    return ResilientTrainer(
+        train_step=train_step,
+        batch_fn=lambda step: {"target": jnp.ones((4,)) * 2.0},
+        ckpt_dir=str(tmp_path), ckpt_every=5, **kw,
+    )
+
+
+class TestFtBridge:
+    def test_step_hook_windows(self, hetero16):
+        inj = FaultInjector(hetero16, scripted=(("chip:0,0", 3.0, 6.0),))
+        hook = inj.step_hook(n_steps=10)
+        with pytest.raises(InjectedFault, match="chip:0,0"):
+            hook(3)
+        # transient semantics: the replay of the same window passes
+        for s in range(10):
+            hook(s)
+
+    def test_trainer_accepts_injector(self, tmp_path, hetero16):
+        inj = FaultInjector(hetero16, scripted=(("zone:little", 7.0, 8.0),))
+        tr = _mini_trainer(tmp_path)
+        params, _, hist = tr.run({"w": jnp.zeros((4,))}, {}, n_steps=12,
+                                 failure_injector=inj)
+        steps = [h["step"] for h in hist]
+        # failed at 7 -> restored to checkpoint 5 -> replayed to the end
+        assert steps.count(7) == 2 and steps[-1] == 12
+
+    def test_transient_faults_on_distinct_steps_not_poison(self, tmp_path):
+        """Regression: N transient faults on N different steps must not
+        trip the poison-step abort (retries are per step index)."""
+        fired = set()
+
+        def injector(step):
+            # one transient fault on each of 4 distinct steps -- more
+            # total failures than max_retries_per_step
+            if step in (6, 7, 8, 9) and step not in fired:
+                fired.add(step)
+                raise RuntimeError("transient")
+
+        tr = _mini_trainer(tmp_path, max_retries_per_step=3)
+        params, _, hist = tr.run({"w": jnp.zeros((4,))}, {}, n_steps=12,
+                                 failure_injector=injector)
+        assert hist[-1]["step"] == 12
+
+    def test_true_poison_step_still_aborts(self, tmp_path):
+        def injector(step):
+            if step == 6:
+                raise RuntimeError("always fails")
+
+        tr = _mini_trainer(tmp_path, max_retries_per_step=3)
+        with pytest.raises(RuntimeError, match="step 6 failed 4x"):
+            tr.run({"w": jnp.zeros((4,))}, {}, n_steps=12,
+                   failure_injector=injector)
