@@ -51,6 +51,14 @@ SEED = 0
 
 
 def _serve_row(rep) -> dict:
+    # Time-weighted p95 of each model's queue-depth series (repro.obs
+    # TimeSeries, via the report's metrics registry) -- gated: a p95 outside
+    # [mean-ish, max] means the step-series accounting broke.
+    queue_p95 = {}
+    for m, mm in rep.per_model.items():
+        assert 0 <= mm.queue_p95 <= mm.queue_max, (
+            "queue p95 outside [0, max]", m, mm.queue_p95, mm.queue_max)
+        queue_p95[m] = mm.queue_p95
     return {
         "mode": rep.mode,
         "goodput": rep.goodput,
@@ -62,6 +70,7 @@ def _serve_row(rep) -> dict:
         "arrived": rep.total_arrived,
         "conserved": rep.conserved,
         "makespan_s": rep.makespan_s,
+        "queue_p95": queue_p95,
     }
 
 

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON file produced by ``repro.obs``.
+
+Thin CLI over :func:`repro.obs.validate_chrome_trace`: checks the required
+event keys, per-lane span nesting (no overlaps within a (pid, tid)),
+monotone counter-track timestamps, and -- optionally -- that fault instant
+events and expected process groups are present.
+
+Usage::
+
+    python scripts/check_trace.py trace.json
+    python scripts/check_trace.py trace.json --expect-faults \
+        --expect-groups dse,serving
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro.obs import validate_chrome_trace  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--expect-faults", action="store_true",
+                    help="require fault instant events (fault:fail / "
+                         "fault:re-solve / ...)")
+    ap.add_argument("--expect-groups", default="",
+                    help="comma-separated process groups that must appear "
+                         "(e.g. dse,serving)")
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        payload = json.load(f)
+    groups = [g for g in args.expect_groups.split(",") if g]
+    problems = validate_chrome_trace(
+        payload, expect_fault_events=args.expect_faults, expect_groups=groups
+    )
+    events = payload.get("traceEvents", [])
+    if problems:
+        for p in problems:
+            print(f"check_trace: {p}", file=sys.stderr)
+        print(f"check_trace: {args.trace}: {len(problems)} problem(s) in "
+              f"{len(events)} events", file=sys.stderr)
+        return 1
+    print(f"check_trace: {args.trace}: OK ({len(events)} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

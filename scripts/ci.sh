@@ -157,7 +157,8 @@ import time
 budget = float(os.environ.get("CI_CHAOS_BUDGET_S", "90"))
 args = ["--mix", "alexnet:1:500,resnet18:1:500", "--hw", "mcm16_hetero",
         "--requests", "8000", "--rate-scale", "0.75", "--seed", "0",
-        "--faults", "zone:little@35%:65%", "--json"]
+        "--faults", "zone:little@35%:65%",
+        "--trace", "/tmp/repro_trace.json", "--json"]
 t0 = time.time()
 out = subprocess.run(
     [sys.executable, "-m", "repro", "serve", *args],
@@ -188,6 +189,13 @@ print(f"chaos smoke: {dt:.2f}s (budget {budget:.0f}s), "
       f"post {post:.0f}/s, in-window {f['goodput_in_failure'] or 0:.0f}/s")
 assert dt <= budget, f"chaos smoke regression: {dt:.2f}s > {budget:.0f}s"
 PY
+
+  echo "== trace schema check (repro.obs Chrome trace from the chaos smoke) =="
+  python scripts/check_trace.py /tmp/repro_trace.json \
+    --expect-faults --expect-groups dse,serving
+
+  echo "== perf regression gate (tracing-off DSE vs committed baseline) =="
+  python scripts/perf_gate.py
 
   echo "== DSE search-time smoke budget =="
   python - <<'PY'

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Perf regression gate: fresh fast-engine DSE wall times vs the committed
+``BENCH_search_time.json`` baseline.
+
+The observability layer (repro.obs) instruments the solver's hot path; its
+disabled cost must stay in the noise.  This gate re-times the two
+heavyweight fast-engine rows (resnet50 x 64, resnet152 x 256) through the
+same facade the benchmark used -- tracing off, best of ``RUNS`` attempts to
+shave scheduler jitter -- and fails when either exceeds the committed
+``fast_search_s`` by more than ``CI_PERF_FACTOR`` (default 1.5x: a generous
+budget that still catches an accidentally-always-on tracer or a hot-loop
+allocation, while tolerating machine-class variance).
+
+Usage::
+
+    PYTHONPATH=src python scripts/perf_gate.py
+    CI_PERF_FACTOR=2.0 PYTHONPATH=src python scripts/perf_gate.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+)
+
+from repro import scope  # noqa: E402
+
+BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_search_time.json",
+)
+# The two committed fast-engine rows worth gating (the alexnet row is
+# millisecond-scale: pure timer noise).
+GATED = [("resnet50", 64), ("resnet152", 256)]
+RUNS = 2
+M_SAMPLES = 16          # matches benchmarks/common.py
+
+
+def baseline_rows() -> dict[tuple[str, int], float]:
+    with open(BASELINE) as f:
+        rows = json.load(f)
+    out = {}
+    for r in rows:
+        if "fast_search_s" in r and "chips" in r:
+            out[(r["net"], r["chips"])] = r["fast_search_s"]
+    return out
+
+
+def time_solve(net: str, chips: int) -> float:
+    best = float("inf")
+    for _ in range(RUNS):
+        t0 = time.perf_counter()
+        sol = scope.solve(
+            scope.problem(net, f"mcm{chips}", m_samples=M_SAMPLES)
+        )
+        dt = time.perf_counter() - t0
+        assert sol.feasible, (net, chips)
+        best = min(best, dt)
+    return best
+
+
+def main() -> int:
+    factor = float(os.environ.get("CI_PERF_FACTOR", "1.5"))
+    base = baseline_rows()
+    failures = []
+    for net, chips in GATED:
+        committed = base.get((net, chips))
+        if committed is None:
+            print(f"perf gate: no committed baseline for {net} x {chips}; "
+                  "run benchmarks/search_time.py first", file=sys.stderr)
+            return 2
+        fresh = time_solve(net, chips)
+        ratio = fresh / committed
+        verdict = "ok" if ratio <= factor else "REGRESSION"
+        print(f"perf gate: {net} x {chips}: {fresh:.3f}s vs committed "
+              f"{committed:.3f}s ({ratio:.2f}x, budget {factor:.2f}x) "
+              f"[{verdict}]")
+        if ratio > factor:
+            failures.append((net, chips, ratio))
+    if failures:
+        for net, chips, ratio in failures:
+            print(f"perf gate FAILED: {net} x {chips} regressed {ratio:.2f}x "
+                  f"(> {factor:.2f}x budget)", file=sys.stderr)
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,10 @@ def _build_solve_parser(sub) -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--baselines", action="store_true",
                     help="also report the equal-split and time-mux baselines")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the solve "
+                         "(open in Perfetto / chrome://tracing; .jsonl for "
+                         "one event per line)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit a machine-readable JSON summary")
     return ap
@@ -113,14 +117,26 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
                          "down until repair (the static-degraded baseline)")
     ap.add_argument("--baselines", action="store_true",
                     help="replay the same trace on equal-split and time-mux")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the whole run "
+                         "(solver spans + server lanes + queue/fault "
+                         "timeline; open in Perfetto)")
     ap.add_argument("--json", action="store_true", dest="as_json")
     return ap
 
 
 def _cmd_serve(args) -> None:
+    # one Tracer spans the whole command: the primary solve's spans, every
+    # baseline solve, the executor's sim-time lanes, and any mid-run
+    # re-solves all land on one timeline
+    obs_tracer = None
+    if args.trace:
+        from .obs import Tracer
+
+        obs_tracer = Tracer()
     options = SearchOptions(
         strategy=args.strategy, m_samples=args.m_samples, step=args.step,
-        switch_cost=args.switch_cost,
+        switch_cost=args.switch_cost, trace=obs_tracer,
     )
     prob = problem(args.mix, args.hw, options=options)
     # One SolutionCache for the primary solve, the baselines and any
@@ -160,7 +176,8 @@ def _cmd_serve(args) -> None:
             faults = scripted
     report = sol.serve(autoscale=args.autoscale, cache=cache,
                        faults=faults,
-                       fault_recovery=not args.fault_static, **serve_kw)
+                       fault_recovery=not args.fault_static,
+                       tracer=obs_tracer, **serve_kw)
     out = {"solution": sol.to_json(), "serving": report.to_json()}
     if args.baselines:
         out["baselines"] = {}
@@ -170,6 +187,8 @@ def _cmd_serve(args) -> None:
                 out["baselines"][name] = None
                 continue
             out["baselines"][name] = b.serve(**serve_kw).to_json()
+    if obs_tracer is not None:
+        obs_tracer.write(args.trace)
     if args.as_json:
         print(json.dumps(out, indent=1))
         return
@@ -178,6 +197,10 @@ def _cmd_serve(args) -> None:
     print()
     for line in report.describe():
         print(line)
+    if obs_tracer is not None:
+        print()
+        print(obs_tracer.summary())
+        print(f"trace written to {args.trace} (open in Perfetto)")
     for name, rep in out.get("baselines", {}).items():
         if rep is None:
             print(f"{name}: infeasible")
@@ -203,6 +226,7 @@ def _cmd_solve(args) -> None:
         switch_period_s=args.switch_period_s,
         samples=args.samples,
         seed=args.seed,
+        trace=args.trace,
     )
     prob = problem(args.mix, args.hw, options=options)
     sol = solve(prob)
@@ -222,6 +246,11 @@ def _cmd_solve(args) -> None:
 
     for line in sol.describe():
         print(line)
+    tr = sol.diagnostics.get("trace")
+    if tr is not None:
+        print()
+        print(tr.summary())
+        print(f"trace written to {args.trace} (open in Perfetto)")
     if args.baselines:
         for name, tp in _baseline_rates(prob, sol).items():
             if tp is None:

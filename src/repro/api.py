@@ -83,6 +83,7 @@ from .multimodel.coschedule import co_schedule
 from .multimodel.interleave import merged_graph
 from .multimodel.quota import package_flavors
 from .multimodel.spec import ModelSpec, parse_mix
+from .obs import Tracer, current_tracer, use_tracer
 
 __all__ = [
     "Deployment",
@@ -259,6 +260,9 @@ class SearchOptions:
     distributed_weights: bool = True
     cost: Any = None                 # pre-built CostModel: shared memo across solves
     validate: bool = True
+    # observability (repro.obs): Tracer instance | output path | True;
+    # excluded from problem_fingerprint -- tracing never changes the answer
+    trace: Any = None
 
     @property
     def region_mode(self) -> RegionMode:
@@ -561,6 +565,7 @@ class Solution:
         measure: bool = False,
         mesh=None,
         seq_len: int = 16,
+        tracer=None,
     ):
         """Run this solution under synthetic traffic
         (:class:`repro.serving.ServingExecutor`); returns a
@@ -592,6 +597,16 @@ class Solution:
         and the executor swaps fleets charging redeploy dead time.
         ``fault_recovery=False`` runs the static-degraded baseline: down
         models just queue until their chips are repaired.
+
+        ``tracer`` records the run on the Scope Observatory timeline
+        (``trace=`` being taken by request traces): a
+        :class:`~repro.obs.Tracer`, ``True`` (fresh tracer, returned as
+        ``report.tracer``), or a path string (Chrome trace-event JSON,
+        Perfetto-loadable, written there).  Server lanes become trace
+        threads with per-batch spans, queue depths become counter series,
+        and fault / kill / re-solve / recovery events land as instants on
+        the same timeline; mid-run re-solves (autoscale or fault recovery)
+        add their solver spans too.
         """
         from .serving import (
             AutoscalePolicy,
@@ -606,6 +621,18 @@ class Solution:
         mm = self.as_multimodel()
         hw = self.hw
         weights = {a.model: a.weight for a in mm.assignments}
+
+        obs_tracer, obs_path = None, None
+        if tracer is not None and tracer is not False:
+            if isinstance(tracer, Tracer):
+                obs_tracer = tracer
+            elif isinstance(tracer, str):
+                obs_tracer, obs_path = Tracer(), tracer
+            elif tracer is True:
+                obs_tracer = Tracer()
+            else:
+                raise TypeError(
+                    f"tracer= takes a Tracer, True, or a path; got {tracer!r}")
         if traffic is not None and trace is not None:
             raise ValueError("pass traffic= or trace=, not both")
         if trace is None:
@@ -661,7 +688,11 @@ class Solution:
                 # cached path -- the degraded HardwareModel (dead_chips
                 # included) is the fingerprint that separates intact from
                 # degraded solutions.
-                fr_opts = replace(self.problem.options, cost=None)
+                # (trace is stripped too: a path-valued trace option would
+                # make every degraded re-solve overwrite the trace file;
+                # re-solve spans reach the serve tracer via the ambient
+                # tracer stack instead)
+                fr_opts = replace(self.problem.options, cost=None, trace=None)
                 if mm.mode != "time_mux":
                     # keep the recovery fleet in the deployment's latency
                     # class: a time-mux winner-by-rate would trade
@@ -708,11 +739,14 @@ class Solution:
                     # package (degraded fingerprints stay cache-isolated,
                     # and the fleet keeps its latency class, see the
                     # fault_resolver above)
-                    opts = replace(prob.options, cost=None)
+                    opts = replace(prob.options, cost=None, trace=None)
                     if mm.mode != "time_mux":
                         opts = replace(opts, include_time_mux=False)
                     prob = replace(prob, package=PackageSpec(hw=hw),
                                    options=opts)
+                elif prob.options.trace is not None:
+                    prob = replace(prob, options=replace(prob.options,
+                                                         trace=None))
                 sol = cache.solve(prob)
                 info = {
                     "dse_s": sol.diagnostics.get("dse_s"),
@@ -739,14 +773,26 @@ class Solution:
         ex = ServingExecutor(
             mm, hw, batching=batching, slos=slos, autoscaler=autoscaler,
             service_override=service_override, reload_s=reload_s, seed=seed,
-            faults=faults, fault_resolver=fault_resolver,
+            faults=faults, fault_resolver=fault_resolver, tracer=obs_tracer,
         )
-        report = ex.run(trace, horizon_s=horizon_s)
+        if obs_tracer is not None:
+            # mid-run re-solves (autoscale drift, fault recovery) go through
+            # solve(), which picks up the ambient tracer: their solver spans
+            # land on the same timeline as the executor's sim events
+            with use_tracer(obs_tracer):
+                report = ex.run(trace, horizon_s=horizon_s)
+        else:
+            report = ex.run(trace, horizon_s=horizon_s)
         report.meta.update(
             strategy=self.strategy,
             solved_mix_rate=mm.mix_rate,
             solved_weighted_throughput=mm.weighted_throughput,
         )
+        if obs_tracer is not None:
+            report.tracer = obs_tracer
+            if obs_path:
+                obs_tracer.write(obs_path)
+                report.meta["trace_path"] = obs_path
         return report
 
     # ------------------------------------------------------------- display
@@ -1089,16 +1135,46 @@ def solve(prob: Problem | None = None, *, workload=None, package=None,
         name = _auto_strategy(prob, hw)
     name, fn = _lookup(name)
 
+    tr, trace_path = _resolve_trace(o.trace)
     t0 = time.time()
-    sol = fn(prob, hw, cost)
+    with use_tracer(tr):
+        with tr.span(f"solve:{name}", strategy=name, hw=hw.name,
+                     models=len(prob.workload.models)) as sp:
+            sol = fn(prob, hw, cost)
+            if sol.feasible and sol.schedule is not None:
+                sp.set(latency=sol.schedule.latency)
     sol.strategy = name
     sol.diagnostics.setdefault("dse_s", time.time() - t0)
     sol.diagnostics.setdefault("m_samples", cost.m)
-    sol.diagnostics.setdefault("engine_stats",
-                               dict(getattr(cost, "stats", {})))
+    sol.diagnostics.setdefault("engine_stats", dict(cost.stats))
+    if tr:
+        tr.metrics.counter("solve.calls").inc()
+        tr.metrics.update_counters(sol.diagnostics["engine_stats"],
+                                   prefix="engine.")
+        if o.trace is not None:
+            sol.diagnostics["trace"] = tr
+        if trace_path:
+            tr.write(trace_path)
     if o.validate and sol.feasible:
         sol.validate()
     return sol
+
+
+def _resolve_trace(spec):
+    """Map ``SearchOptions.trace`` to (tracer, output path).
+
+    ``None``/falsy -> the ambient tracer (no-op unless a caller installed
+    one via ``use_tracer``); a :class:`~repro.obs.Tracer` -> itself; a path
+    string -> fresh tracer written there after the solve; ``True`` -> fresh
+    tracer attached to ``diagnostics["trace"]``.
+    """
+    if isinstance(spec, Tracer):
+        return spec, None
+    if isinstance(spec, str):
+        return Tracer(), spec
+    if spec:
+        return Tracer(), None
+    return current_tracer(), None
 
 
 # ---------------------------------------------------------------------------
@@ -1184,13 +1260,18 @@ class SolutionCache:
         hw = prob.package.resolve()
         key = problem_fingerprint(prob, hw)
         sol = self._solutions.get(key)
+        tr = current_tracer()
         if sol is not None:
             self.hits += 1
             self.last_hit = True
+            tr.metrics.counter("solve_cache.hits").inc()
+            tr.instant("solve-cache:hit", strategy=sol.strategy)
             return sol
         self.misses += 1
         self.last_hit = False
+        tr.metrics.counter("solve_cache.misses").inc()
         cost = self.engine_for(prob, hw)
+        tr.metrics.counter("solve_cache.engines").set(len(self._engines))
         sol = solve(replace(prob, options=replace(prob.options, cost=cost)))
         # Keep the caller's cost-free Problem as the solution's identity:
         # downstream re-solves derived from sol.problem (the autoscaler's

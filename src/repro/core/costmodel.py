@@ -105,6 +105,25 @@ class CostModel:
         self.literal_pre = literal_pre
         self._typed_hw: dict[str | None, HardwareModel] = {}
         self._seam_bw: dict[tuple[str | None, str | None], float] = {}
+        # engine counters (same schema as FastCostModel.stats; the reference
+        # model has no memo, so every cluster probe is a compute)
+        self._evals = 0
+        self._misses = 0
+        self._probes = 0
+        self._batched_bodies = 0
+
+    @property
+    def stats(self) -> dict:
+        """Engine work counters (schema shared with :class:`FastCostModel`)."""
+        return {
+            "segment_evals": self._evals,
+            "cluster_computes": self._misses,
+            "cluster_probes": self._probes,
+            "memo_hits": self._probes - self._misses,
+            "memo_cells": 0,
+            "memo_entries": 0,
+            "batched_bodies": self._batched_bodies,
+        }
 
     def hw_for(self, chip_type: str | None) -> HardwareModel:
         """The hardware a region of ``chip_type`` chips sees (hetero packages;
@@ -286,6 +305,8 @@ class CostModel:
         last_in_segment: bool,
     ) -> float:
         """Steady-state beat time of one cluster (Eq. 3 with Eq. 7 per layer)."""
+        self._probes += 1
+        self._misses += 1
         placement = self.place_weights(graph, cluster)
         if not placement.feasible:
             return INF
@@ -320,6 +341,7 @@ class CostModel:
         self, graph: LayerGraph, clusters: tuple[ClusterAssignment, ...]
     ) -> tuple[float, list[float]]:
         """Eq. 2: (m + Nc - 1) * max_j T_cluster + one-time weight load."""
+        self._evals += 1
         times = []
         for j, cl in enumerate(clusters):
             nxt = clusters[j + 1] if j + 1 < len(clusters) else None

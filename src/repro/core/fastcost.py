@@ -226,9 +226,7 @@ class FastCostModel(CostModel):
         # rebalance inner loop only hash small int tuples.
         self._memo: dict[tuple, dict] = {}
         self._codes_cache: dict[tuple[str, ...], np.ndarray] = {}
-        self._evals = 0
-        self._misses = 0
-        self._batched_bodies = 0
+        # _evals/_misses/_probes/_batched_bodies inherited from CostModel
         self.batched_seed_fill = True   # 2D (k x layer) seed-phase fill
 
     # ------------------------------------------------------------- plumbing
@@ -242,14 +240,21 @@ class FastCostModel(CostModel):
     def clear_memo(self) -> None:
         self._graphs.clear()
         self._memo.clear()
-        self._evals = self._misses = self._batched_bodies = 0
+        self._evals = self._misses = self._probes = self._batched_bodies = 0
 
     @property
     def stats(self) -> dict:
-        """Counters proving the memo/incrementality claims in benchmarks."""
+        """Counters proving the memo/incrementality claims in benchmarks.
+
+        Same schema as the reference :class:`CostModel.stats`;
+        ``memo_hits = cluster_probes - cluster_computes`` is what the
+        cross-candidate memo saved.
+        """
         return {
             "segment_evals": self._evals,
             "cluster_computes": self._misses,
+            "cluster_probes": self._probes,
+            "memo_hits": self._probes - self._misses,
             "memo_cells": len(self._memo),
             "memo_entries": sum(len(c) - 2 for c in self._memo.values()),
             "batched_bodies": self._batched_bodies,
@@ -617,6 +622,7 @@ class FastCostModel(CostModel):
         # The entry key carries the *neighbor's* flavor too: the last
         # layer's boundary term crosses the seam, so a cached time is only
         # valid against a next cluster of the same flavor.
+        self._probes += 1
         k = (n, next_p0, next_n, next_ctype)
         t = cell.get(k)
         if t is None:
@@ -820,6 +826,7 @@ class _SegmentSweep:
     def _probe(self, j: int, n: int, next_n: int | None) -> float:
         next_p0 = self.next_p0s[j]
         next_ct = self.next_ctypes[j]
+        self.model._probes += 1
         k = (n, next_p0, next_n, next_ct)
         cell = self.cells[j]
         t = cell.get(k)
@@ -834,6 +841,7 @@ class _SegmentSweep:
     def __call__(self, alloc):
         model = self.model
         model._evals += 1
+        model._probes += self.n_cl
         n_cl = self.n_cl
         cells = self.cells
         statics = self.statics

@@ -32,6 +32,7 @@ import math
 import random
 from dataclasses import dataclass
 
+from ..obs import current_tracer
 from .cmt import Clustering, gen_cmt
 from .costmodel import INF, CostModel, _flavor_tuple
 from .graph import (
@@ -394,6 +395,20 @@ def search_mixed(
 
     total = sum(b for _, b in flavor_budgets)
     counts = segment_counts or candidate_segment_counts(graph, hw, total)
+    tr = current_tracer()
+    with tr.span("search:mixed", graph=graph.name, chips=total,
+                 flavors=len(flavor_budgets)):
+        best_sched = _search_mixed_sweep(
+            graph, cost, hw, flavor_budgets, counts, best_sched, mode,
+            ep_for_moe, max_clusters, paper_strict, cut_window, tr,
+        )
+    return best_sched
+
+
+def _search_mixed_sweep(graph, cost, hw, flavor_budgets, counts, best_sched,
+                        mode, ep_for_moe, max_clusters, paper_strict,
+                        cut_window, tr):
+    total = sum(b for _, b in flavor_budgets)
     for n_seg in counts:
         split = divide_segments(graph, hw, total, n_seg)
         if split is None:
@@ -402,11 +417,12 @@ def search_mixed(
         total_lat = 0.0
         ok = True
         for lo, hi in split:
-            res = search_segment_mixed(
-                cost, graph, lo, hi, flavor_budgets, mode=mode,
-                ep_for_moe=ep_for_moe, max_clusters=max_clusters,
-                paper_strict=paper_strict, cut_window=cut_window,
-            )
+            with tr.span("segment:mixed", n_seg=n_seg, lo=lo, hi=hi):
+                res = search_segment_mixed(
+                    cost, graph, lo, hi, flavor_budgets, mode=mode,
+                    ep_for_moe=ep_for_moe, max_clusters=max_clusters,
+                    paper_strict=paper_strict, cut_window=cut_window,
+                )
             if res is None or res.latency == INF:
                 ok = False
                 break
@@ -451,39 +467,46 @@ def search(
     hw = cost.hw
     counts = segment_counts or candidate_segment_counts(graph, hw, chips)
     best_sched: ScopeSchedule | None = None
-    for n_seg in counts:
-        split = divide_segments(graph, hw, chips, n_seg)
-        if split is None:
-            continue
-        segs: list[SegmentSchedule] = []
-        total = 0.0
-        ok = True
-        for lo, hi in split:
-            res = search_segment(
-                cost, graph, lo, hi, chips, mode=mode,
-                ep_for_moe=ep_for_moe, max_clusters=max_clusters,
-                chip_type=chip_type, paper_strict=paper_strict,
-            )
-            if res is None or res.latency == INF:
-                ok = False
-                break
-            segs.append(
-                SegmentSchedule(res.clusters, res.latency, res.cluster_times)
-            )
-            total += res.latency
-        if not ok:
-            continue
-        if best_sched is None or total < best_sched.latency:
-            meta = {"n_segments": n_seg, "mode": mode.value}
-            if chip_type:
-                meta["chip_type"] = chip_type
-            best_sched = ScopeSchedule(
-                workload=graph.name,
-                chips=chips,
-                segments=tuple(segs),
-                latency=total,
-                meta=meta,
-            )
+    tr = current_tracer()
+    with tr.span("search", graph=graph.name, chips=chips,
+                 flavor=chip_type or "base") as sp:
+        for n_seg in counts:
+            split = divide_segments(graph, hw, chips, n_seg)
+            if split is None:
+                continue
+            segs: list[SegmentSchedule] = []
+            total = 0.0
+            ok = True
+            for lo, hi in split:
+                with tr.span("segment", n_seg=n_seg, lo=lo, hi=hi):
+                    res = search_segment(
+                        cost, graph, lo, hi, chips, mode=mode,
+                        ep_for_moe=ep_for_moe, max_clusters=max_clusters,
+                        chip_type=chip_type, paper_strict=paper_strict,
+                    )
+                if res is None or res.latency == INF:
+                    ok = False
+                    break
+                segs.append(
+                    SegmentSchedule(res.clusters, res.latency, res.cluster_times)
+                )
+                total += res.latency
+            if not ok:
+                continue
+            if best_sched is None or total < best_sched.latency:
+                meta = {"n_segments": n_seg, "mode": mode.value}
+                if chip_type:
+                    meta["chip_type"] = chip_type
+                best_sched = ScopeSchedule(
+                    workload=graph.name,
+                    chips=chips,
+                    segments=tuple(segs),
+                    latency=total,
+                    meta=meta,
+                )
+        if best_sched is not None:
+            sp.set(latency=best_sched.latency,
+                   n_segments=best_sched.meta.get("n_segments"))
     return best_sched
 
 

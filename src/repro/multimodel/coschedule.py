@@ -16,6 +16,7 @@ from ..core.costmodel import CostModel
 from ..core.fastcost import FastCostModel
 from ..core.graph import MultiModelSchedule, validate_multimodel
 from ..core.hw import HardwareModel, validate_region_types
+from ..obs import current_tracer
 from .baselines import time_multiplexed
 from .curves import build_curves
 from .interleave import merged_graph, search_merged
@@ -58,20 +59,26 @@ def co_schedule(
     if cost is None:
         cost = FastCostModel(hw, m_samples=m_samples)
     t0 = time.time()
+    tr = current_tracer()
     flavors = package_flavors(hw)
-    curves = build_curves(specs, cost, flavors, step, paper_strict,
-                          refine=curve_refine)
+    with tr.span("coschedule:curves", models=len(specs),
+                 flavors=len(flavors)):
+        curves = build_curves(specs, cost, flavors, step, paper_strict,
+                              refine=curve_refine)
 
     candidates: list[tuple[str, MultiModelSchedule]] = []
     mixed_fallback = None
-    part = search_partitioned(specs, cost, step, paper_strict, curves=curves)
+    with tr.span("coschedule:partitioned"):
+        part = search_partitioned(specs, cost, step, paper_strict,
+                                  curves=curves)
     if part is not None:
         candidates.append((part.mode, part))
     if include_mixed and len(flavors) == 2:
-        mixed = search_partitioned_mixed(
-            specs, cost, step, paper_strict, curves=curves,
-            mixed_step=mixed_step, mixed_refine=curve_refine,
-        )
+        with tr.span("coschedule:partitioned-mixed"):
+            mixed = search_partitioned_mixed(
+                specs, cost, step, paper_strict, curves=curves,
+                mixed_step=mixed_step, mixed_refine=curve_refine,
+            )
         if mixed is not None:
             candidates.append(("partitioned:mixed", mixed))
     elif include_mixed and len(flavors) > 2:
@@ -90,16 +97,18 @@ def co_schedule(
             stacklevel=2,
         )
     if include_merged and len(specs) > 1:
-        for ctype, _cap in flavors:
-            merged = search_merged(specs, cost, chip_type=ctype,
-                                   paper_strict=paper_strict)
-            if merged is not None:
-                label = f"{merged.mode}:{ctype}" if ctype else merged.mode
-                candidates.append((label, merged))
+        with tr.span("coschedule:merged", flavors=len(flavors)):
+            for ctype, _cap in flavors:
+                merged = search_merged(specs, cost, chip_type=ctype,
+                                       paper_strict=paper_strict)
+                if merged is not None:
+                    label = f"{merged.mode}:{ctype}" if ctype else merged.mode
+                    candidates.append((label, merged))
     if include_time_mux:
-        tm = time_multiplexed(specs, cost, curves=curves,
-                              switch_cost=switch_cost,
-                              switch_period_s=switch_period_s)
+        with tr.span("coschedule:time-mux"):
+            tm = time_multiplexed(specs, cost, curves=curves,
+                                  switch_cost=switch_cost,
+                                  switch_period_s=switch_period_s)
         if tm is not None:
             candidates.append((tm.mode, tm))
     if not candidates:
@@ -108,7 +117,7 @@ def co_schedule(
     best = max(candidates, key=lambda c: c[1].weighted_throughput)[1]
     best.meta.update({
         "dse_s": time.time() - t0,
-        "engine_stats": dict(getattr(cost, "stats", {})),
+        "engine_stats": dict(cost.stats),
         "mode_rates": {
             label: c.weighted_throughput for label, c in candidates
         },

@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from ..core.costmodel import INF, CostModel
 from ..core.graph import LayerGraph, ScopeSchedule
 from ..core.search import search, search_mixed
+from ..obs import current_tracer
 
 
 @dataclass
@@ -109,22 +110,26 @@ def throughput_curve(
             c, sched.latency, cost.m / sched.latency, sched
         )
 
-    for c in candidate_counts(max_chips, step):
-        sample(c)
-    if refine and step > 1:
-        # Coarse-to-fine: fill the one-coarse-cell neighborhood of the
-        # argmax at step 1, where the quota search's winners concentrate.
-        best = max(
-            (p for p in curve.points.values() if p.schedule is not None),
-            key=lambda p: p.throughput,
-            default=None,
-        )
-        if best is not None:
-            lo = max(1, best.chips - step + 1)
-            hi = min(max_chips, best.chips + step - 1)
-            for c in range(lo, hi + 1):
-                if c not in curve.points:
-                    sample(c)
+    with current_tracer().span("curve", model=graph.name,
+                               flavor=chip_type or "base",
+                               max_chips=max_chips, step=step) as sp:
+        for c in candidate_counts(max_chips, step):
+            sample(c)
+        if refine and step > 1:
+            # Coarse-to-fine: fill the one-coarse-cell neighborhood of the
+            # argmax at step 1, where the quota search's winners concentrate.
+            best = max(
+                (p for p in curve.points.values() if p.schedule is not None),
+                key=lambda p: p.throughput,
+                default=None,
+            )
+            if best is not None:
+                lo = max(1, best.chips - step + 1)
+                hi = min(max_chips, best.chips + step - 1)
+                for c in range(lo, hi + 1):
+                    if c not in curve.points:
+                        sample(c)
+        sp.set(points=len(curve.points))
     return curve
 
 
@@ -260,27 +265,30 @@ def mixed_throughput_curve(
             (qa, qb), sched.latency, cost.m / sched.latency, sched
         )
 
-    for qa, qb in itertools.product(
-        candidate_counts(cap_a, step), candidate_counts(cap_b, step)
-    ):
-        sample(qa, qb)
+    with current_tracer().span("curve:mixed", model=graph.name,
+                               flavors=f"{ta}/{tb}", step=step) as sp:
+        for qa, qb in itertools.product(
+            candidate_counts(cap_a, step), candidate_counts(cap_b, step)
+        ):
+            sample(qa, qb)
 
-    s = step
-    while refine and s > 1:
-        best = max(
-            (p for p in curve.points.values() if p.schedule is not None),
-            key=lambda p: p.throughput,
-            default=None,
-        )
-        if best is None:
-            break
-        span = s - 1
-        stride = 1 if (2 * span + 1) ** 2 <= _MAX_REFINE_CELL else max(2, s // 4)
-        for qa in _refine_grid(best.quota[0], span, cap_a, stride):
-            for qb in _refine_grid(best.quota[1], span, cap_b, stride):
-                if (qa, qb) not in curve.points:
-                    sample(qa, qb)
-        if stride == 1:
-            break
-        s = stride
+        s = step
+        while refine and s > 1:
+            best = max(
+                (p for p in curve.points.values() if p.schedule is not None),
+                key=lambda p: p.throughput,
+                default=None,
+            )
+            if best is None:
+                break
+            span = s - 1
+            stride = 1 if (2 * span + 1) ** 2 <= _MAX_REFINE_CELL else max(2, s // 4)
+            for qa in _refine_grid(best.quota[0], span, cap_a, stride):
+                for qb in _refine_grid(best.quota[1], span, cap_b, stride):
+                    if (qa, qb) not in curve.points:
+                        sample(qa, qb)
+            if stride == 1:
+                break
+            s = stride
+        sp.set(points=len(curve.points))
     return curve

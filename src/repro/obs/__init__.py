@@ -1,0 +1,42 @@
+"""Scope Observatory: unified tracing + metrics across the DSE and executor.
+
+See :mod:`repro.obs.trace` (span tracer, Chrome trace-event export) and
+:mod:`repro.obs.metrics` (counters / gauges / histograms / time-weighted
+series).  Front doors elsewhere: ``SearchOptions(trace=...)``,
+``Solution.serve(tracer=...)``, and ``python -m repro solve/serve --trace``.
+"""
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NULL_METRICS,
+    NullRegistry,
+    TimeSeries,
+)
+from .trace import (
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    current_tracer,
+    traced,
+    use_tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_METRICS",
+    "NULL_TRACER",
+    "NullRegistry",
+    "NullTracer",
+    "TimeSeries",
+    "Tracer",
+    "current_tracer",
+    "traced",
+    "use_tracer",
+    "validate_chrome_trace",
+]

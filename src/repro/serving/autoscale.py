@@ -22,6 +22,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Callable
 
+from ..obs import current_tracer
+
 __all__ = ["AutoscalePolicy", "Autoscaler", "normalize_mix", "quantize_mix"]
 
 
@@ -80,6 +82,9 @@ class Autoscaler:
         self._last_change = -float("inf")
         self.checks = 0
         self.events: list[dict] = []
+        # last drift the check loop computed (0 until the window fills);
+        # the executor samples it into the trace's drift counter track
+        self.last_drift = 0.0
 
     # ------------------------------------------------------------ observing
     def observe(self, t: float, model: str, samples: int) -> None:
@@ -131,6 +136,7 @@ class Autoscaler:
         if n_requests < pol.min_requests:
             return None
         l1 = self._l1(shares)
+        self.last_drift = l1
         if l1 < pol.drift_threshold:
             return None
         # Only re-weight models the deployment already serves: a model with
@@ -139,8 +145,10 @@ class Autoscaler:
         weights = quantize_mix(full, pol.weight_quantum)
         # hw is only forwarded when set, so 1-argument resolve_fns (every
         # pre-fault caller) keep working unchanged
-        mm, info = (self.resolve_fn(weights) if hw is None
-                    else self.resolve_fn(weights, hw=hw))
+        with current_tracer().span("autoscale:re-solve", drift=round(l1, 6),
+                                   degraded=hw is not None):
+            mm, info = (self.resolve_fn(weights) if hw is None
+                        else self.resolve_fn(weights, hw=hw))
         if mm is None:
             return None
         event = {

@@ -315,9 +315,15 @@ class ServingExecutor:
         seed: int = 0,
         faults: FaultInjector | list | None = None,
         fault_resolver=None,
+        tracer=None,
     ):
         self.mm = mm
         self.hw = hw                     # pristine package (fault baseline)
+        # observability: a repro.obs.Tracer fed *simulated* times only --
+        # every guard below is `is not None`, so the hot loop pays one
+        # comparison when tracing is off (NullTracer normalizes to None)
+        self.tracer = tracer if tracer else None
+        self._inflight_t0: dict[str, tuple[float, int]] = {}
         self.batching = batching or BatchingPolicy()
         self.slos = slos or {}
         self.autoscaler = autoscaler
@@ -432,6 +438,8 @@ class ServingExecutor:
         self.batches[model] += 1
         self.batch_log[model].append((start, done, work, samples, srv.window))
         self._inflight[model] = batch
+        if self.tracer is not None:
+            self._inflight_t0[model] = (start, samples)
         self._push(done, _DONE, (model, batch, self._epoch[model]))
 
     # ------------------------------------------------------- fleet swapping
@@ -490,9 +498,18 @@ class ServingExecutor:
         hw_now = self._current_hw() if self.degraded else self.hw
         out = self.autoscaler.maybe_resolve(
             t, hw=hw_now if self.degraded else None)
+        if self.tracer is not None:
+            self.tracer.counter("autoscale_drift", t,
+                                round(self.autoscaler.last_drift, 6),
+                                group="serving")
         if out is None:
             return
         new_mm, event = out
+        if self.tracer is not None:
+            self.tracer.instant(
+                "autoscale:re-solve", t, group="serving", lane="fleet",
+                drift=round(event.get("drift", 0.0), 6),
+                cache_hit=event.get("cache_hit"))
         origin = self._swap_fleet(t, new_mm, hw_now)
         event = dict(event, redeploy_s=origin - t)
         self.redeploys.append(event)
@@ -525,6 +542,11 @@ class ServingExecutor:
                 if info and k in info:
                     rec[k] = info[k]
             self.recoveries.append(rec)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "recovered", t, group="serving", lane="faults",
+                    target=p.get("target"), ttr_s=round(rec["ttr_s"], 9),
+                    resolved=resolved)
         self._pending_recoveries.clear()
 
     def _seam_blocked(self, zones: dict) -> bool:
@@ -554,6 +576,17 @@ class ServingExecutor:
             self.queued_samples[model] += spilled
             self._inflight[model] = None
             self._trace_queue(t, model)
+            if self.tracer is not None:
+                # the batch span is truncated at the kill: its server is
+                # gone, and the re-dispatched retry opens a fresh span
+                b0 = self._inflight_t0.pop(model, None)
+                if b0 is not None:
+                    self.tracer.complete(
+                        "batch (spilled)", b0[0], t, group="serving",
+                        lane=model, samples=b0[1], spilled=True)
+        if self.tracer is not None:
+            self.tracer.instant("kill", t, group="serving", lane=model,
+                                spilled_samples=spilled)
         srv.down = True
         srv.free_at = max(srv.free_at, t)
         self._down_since.setdefault(model, t)
@@ -593,6 +626,11 @@ class ServingExecutor:
                     killed.append(m)
             entry.update(killed=killed, spilled_samples=spilled,
                          dead_chips=len(self._dead))
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "fault:fail", t, group="serving", lane="faults",
+                    target=ev.target, killed=list(killed),
+                    dead_chips=len(self._dead))
             if killed:
                 self._pending_recoveries.append(
                     {"t_fail": t, "target": ev.target})
@@ -606,6 +644,10 @@ class ServingExecutor:
             self._dead.difference_update(ev.chips)
             if ev.seam:
                 self._dead_seams.discard(tuple(sorted(ev.seam)))
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "fault:repair", t, group="serving", lane="faults",
+                    target=ev.target, dead_chips=len(self._dead))
             if self.fault_resolver is not None:
                 # re-solve back up on the (partially) restored package --
                 # a full repair re-solves the pristine fingerprint, a
@@ -624,6 +666,12 @@ class ServingExecutor:
         hw_now = self._current_hw()
         new_mm, info = self.fault_resolver(hw_now)
         info = dict(info or {})
+        if self.tracer is not None:
+            # args stay sim-deterministic: no wall-clock dse_s here
+            self.tracer.instant(
+                "fault:re-solve", t, group="serving", lane="fleet",
+                applied=new_mm is not None and bool(new_mm.assignments),
+                cache_hit=info.get("cache_hit"))
         if new_mm is None or not new_mm.assignments:
             info["applied"] = False
             return info
@@ -687,6 +735,12 @@ class ServingExecutor:
                     continue        # batch died with its server (spilled)
                 if self._inflight[model] is batch:
                     self._inflight[model] = None
+                    if self.tracer is not None:
+                        b0 = self._inflight_t0.pop(model, None)
+                        if b0 is not None:
+                            self.tracer.complete(
+                                "batch", b0[0], t, group="serving",
+                                lane=model, samples=b0[1])
                 for r in batch:
                     lat = t - r.t_arrive
                     self.latencies[model].append(lat)
@@ -798,6 +852,34 @@ class ServingExecutor:
             out["goodput_post_recovery"] = None
         return out
 
+    def _emit_trace_tracks(self, makespan: float) -> None:
+        """Bulk-emit the post-hoc trace tracks: per-model queue-depth
+        counter series and redeploy spans on the fleet lane.  A redeploy
+        superseded by a later swap is truncated at the swap (the old fleet
+        never came up), keeping the lane's spans non-overlapping."""
+        tr = self.tracer
+        for m in sorted(self.queue_traces):
+            for t, depth in self.queue_traces[m]:
+                tr.counter(f"queue:{m}", t, depth, group="serving")
+            series = tr.metrics.timeseries(f"queue_depth/{m}")
+            series.extend(self.queue_traces[m])
+        starts = sorted(
+            (ev.get("t", 0.0), ev.get("redeploy_s", 0.0),
+             ev.get("cause", "autoscale"))
+            for ev in self.redeploys
+        )
+        for i, (t, dur, cause) in enumerate(starts):
+            end = t + dur
+            if i + 1 < len(starts):
+                end = min(end, starts[i + 1][0])
+            tr.complete("redeploy", t, max(t, end), group="serving",
+                        lane="fleet", cause=cause,
+                        redeploy_s=round(dur, 9))
+        tr.metrics.counter("serving.batches").set(sum(self.batches.values()))
+        tr.metrics.counter("serving.faults").set(len(self.fault_log))
+        tr.metrics.counter("serving.recoveries").set(len(self.recoveries))
+        tr.metrics.counter("serving.redeploys").set(len(self.redeploys))
+
     def _report(self, horizon_s: float) -> ServingReport:
         autoscale = None
         if self.autoscaler is not None:
@@ -841,6 +923,8 @@ class ServingExecutor:
             busy_chip_s = union * pipeline_chips
             meta["merged_graph"] = self.mm.meta.get("merged_graph")
         makespan = max(self._makespan, horizon_s)
+        if self.tracer is not None:
+            self._emit_trace_tracks(makespan)
         return summarize(
             mode=mode,
             package=self.hw.name,

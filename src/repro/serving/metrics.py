@@ -21,6 +21,9 @@ Definitions (per model and aggregated):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Any
+
+from ..obs import MetricsRegistry, TimeSeries
 
 __all__ = ["ModelMetrics", "ServingReport", "percentile", "summarize"]
 
@@ -33,19 +36,15 @@ def percentile(sorted_vals: list[float], q: float) -> float:
     return sorted_vals[min(k, len(sorted_vals)) - 1]
 
 
-def _queue_stats(trace: list[tuple[float, int]], t_end: float) -> tuple[float, int]:
-    """Time-weighted mean + max of a step trace ``[(t, depth), ...]``.
+def _queue_series(trace: list[tuple[float, int]]) -> TimeSeries:
+    """The queue-depth step trace as an obs :class:`TimeSeries`.
 
-    The mean is over the whole run (time 0 to ``t_end``; the queue is
-    empty before its first event), so per-model values in one report share
-    a denominator."""
-    if not trace:
-        return 0.0, 0
-    area, peak = 0.0, 0
-    for (t, d), (t_next, _) in zip(trace, trace[1:] + [(t_end, 0)]):
-        area += d * max(0.0, t_next - t)
-        peak = max(peak, d)
-    return area / max(1e-12, t_end), peak
+    Statistics are time-weighted over the whole run (time 0 to ``t_end``;
+    the queue is empty before its first event), so per-model values in one
+    report share a denominator."""
+    ts = TimeSeries()
+    ts.extend(trace)
+    return ts
 
 
 @dataclass
@@ -75,6 +74,7 @@ class ModelMetrics:
     latency_max_s: float = 0.0
     queue_mean: float = 0.0
     queue_max: int = 0
+    queue_p95: float = 0.0          # time-weighted p95 of the depth series
     utilization: float = 0.0
     busy_s: float = 0.0
     slo_s: float | None = None
@@ -108,6 +108,10 @@ class ServingReport:
     autoscale: dict | None = None
     faults: dict | None = None      # fault log / recovery metrics (see executor)
     meta: dict = field(default_factory=dict)
+    # observability (repro.obs): queue-depth TimeSeries et al live here;
+    # report.tracer is set by Solution.serve(tracer=...)
+    metrics: Any = None             # MetricsRegistry
+    tracer: Any = None              # Tracer
 
     @property
     def conserved(self) -> bool:
@@ -126,7 +130,8 @@ class ServingReport:
     def to_json(self) -> dict:
         out = {
             k: v for k, v in self.__dict__.items()
-            if k not in ("per_model", "placement", "autoscale", "meta")
+            if k not in ("per_model", "placement", "autoscale", "meta",
+                         "metrics", "tracer")
         }
         out["conserved"] = self.conserved
         out["per_model"] = {m: mm.to_json() for m, mm in self.per_model.items()}
@@ -214,10 +219,11 @@ def summarize(
     faults: dict | None = None,
 ) -> ServingReport:
     span = max(makespan_s, 1e-12)
+    registry = MetricsRegistry()
     rep = ServingReport(mode=mode, package=package, chips=chips, seed=seed,
                         horizon_s=horizon_s, makespan_s=makespan_s,
                         placement=placement, autoscale=autoscale,
-                        faults=faults, meta=meta or {})
+                        faults=faults, meta=meta or {}, metrics=registry)
     all_lat: list[float] = []
     good_total = busy_chip_s = 0.0
     slo_met = slo_reqs = 0
@@ -238,7 +244,12 @@ def summarize(
             good = sum(s for lat, s in zip(latencies[model], smps)
                        if lat <= slo)
             met = sum(1 for lat in latencies[model] if lat <= slo)
-        q_mean, q_max = _queue_stats(queue_traces.get(model, []), makespan_s)
+        q_series = registry.series[f"queue_depth/{model}"] = _queue_series(
+            queue_traces.get(model, []))
+        q_mean = q_series.mean(makespan_s)
+        q_max = q_series.max
+        q_p95 = q_series.percentile(95, makespan_s)
+        registry.histogram(f"latency_s/{model}").values.extend(lats)
         chips_m = model_chips.get(model, 0)
         busy = busy_s.get(model, 0.0)
         mm = ModelMetrics(
@@ -256,7 +267,7 @@ def summarize(
             latency_p95_s=percentile(lats, 95),
             latency_p99_s=percentile(lats, 99),
             latency_max_s=lats[-1] if lats else 0.0,
-            queue_mean=q_mean, queue_max=q_max,
+            queue_mean=q_mean, queue_max=q_max, queue_p95=q_p95,
             utilization=busy / span if chips_m else 0.0,
             busy_s=busy, slo_s=slo,
             slo_attainment=met / done_req if done_req else 1.0,
