@@ -41,8 +41,10 @@ from repro.multimodel.quota import package_flavors
 from .common import M_SAMPLES, cached
 
 CASES = [("alexnet", 16), ("resnet50", 64), ("resnet152", 256)]
-# New larger sweep enabled by the fast engine (reference/seed too slow).
-LARGE_CASES = [("resnet152", 512)]
+# New larger sweeps enabled by the fast engine (reference/seed too slow).
+# The 1024-chip row rides on the batched population evaluator: the whole
+# sweep must land under 60s (gated by scripts/perf_gate.py).
+LARGE_CASES = [("resnet152", 512), ("resnet152", 1024)]
 # Quota-curve sampling (multimodel/curves.py): exhaustive step=1 sweep vs
 # the coarse-to-fine schedule (coarse grid + step-1 refinement around the
 # argmax) on large packages -- the ROADMAP's ~10x curve-time item.

@@ -45,6 +45,23 @@ assert co.weighted_throughput >= tm.weighted_throughput - 1e-9, "below time-mux"
 assert stats["segment_evals"] > 3 * stats["cluster_computes"], stats
 assert dt <= budget, f"multi-model DSE regression: {dt:.2f}s > {budget:.0f}s"
 
+# warm-start drift re-solve: the autoscaler's interactive path.  A drifted
+# mix re-solved with the incumbent as warm_start (shared engine memo +
+# quota windows) must land under 1s wall.
+import time as _time
+warm_budget = float(os.environ.get("CI_WARM_RESOLVE_BUDGET_S", "1"))
+cache = scope.SolutionCache()
+inc = cache.solve(prob)
+drifted = scope.problem("alexnet:3,resnet18:1", "mcm16", m_samples=16)
+t0 = _time.perf_counter()
+warm = cache.solve(drifted.with_options(warm_start=inc))
+warm_s = _time.perf_counter() - t0
+assert warm.feasible and warm.multi.meta.get("warm_start") is True, \
+    "drift re-solve did not take the warm path"
+print(f"warm-start drift re-solve: {warm_s:.3f}s (budget {warm_budget:.1f}s)")
+assert warm_s <= warm_budget, \
+    f"warm re-solve not interactive: {warm_s:.3f}s > {warm_budget:.1f}s"
+
 # full 2-model x 64 mix (the acceptance-scale sweep; exhaustive quota grid)
 budget64 = float(os.environ.get("CI_MULTIMODEL64_BUDGET_S", "60"))
 co64 = scope.solve(scope.problem("resnet50:1,resnet18:1", "mcm64", m_samples=16))

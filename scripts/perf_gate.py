@@ -33,9 +33,14 @@ BASELINE = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_search_time.json",
 )
-# The two committed fast-engine rows worth gating (the alexnet row is
-# millisecond-scale: pure timer noise).
-GATED = [("resnet50", 64), ("resnet152", 256)]
+# The committed fast-engine rows worth gating (the alexnet row is
+# millisecond-scale: pure timer noise).  All gated rows run the batched
+# population evaluator -- its engagement is asserted via the batch
+# counters, so a silent fallback to scalar sweeps also fails the gate.
+GATED = [("resnet50", 64), ("resnet152", 256), ("resnet152", 1024)]
+# Absolute ceilings, independent of the committed baseline: the 1024-chip
+# sweep is the "interactive at scale" acceptance row.
+HARD_CEILING_S = {("resnet152", 1024): 60.0}
 RUNS = 2
 M_SAMPLES = 16          # matches benchmarks/common.py
 
@@ -59,6 +64,10 @@ def time_solve(net: str, chips: int) -> float:
         )
         dt = time.perf_counter() - t0
         assert sol.feasible, (net, chips)
+        stats = sol.diagnostics.get("engine_stats", {})
+        assert stats.get("batch_evals", 0) > 0, (
+            "batched population evaluator did not engage", net, chips, stats
+        )
         best = min(best, dt)
     return best
 
@@ -75,11 +84,15 @@ def main() -> int:
             return 2
         fresh = time_solve(net, chips)
         ratio = fresh / committed
-        verdict = "ok" if ratio <= factor else "REGRESSION"
+        ceiling = HARD_CEILING_S.get((net, chips))
+        over_ceiling = ceiling is not None and fresh > ceiling
+        verdict = ("ok" if ratio <= factor and not over_ceiling
+                   else "REGRESSION")
         print(f"perf gate: {net} x {chips}: {fresh:.3f}s vs committed "
-              f"{committed:.3f}s ({ratio:.2f}x, budget {factor:.2f}x) "
+              f"{committed:.3f}s ({ratio:.2f}x, budget {factor:.2f}x"
+              f"{f', ceiling {ceiling:.0f}s' if ceiling else ''}) "
               f"[{verdict}]")
-        if ratio > factor:
+        if ratio > factor or over_ceiling:
             failures.append((net, chips, ratio))
     if failures:
         for net, chips, ratio in failures:

@@ -77,6 +77,7 @@ from .core.search import (
     search,
     search_mixed,
 )
+from .core.segments import candidate_segment_counts
 from .core.workloads import get_cnn
 from .multimodel.baselines import equal_split, time_multiplexed
 from .multimodel.coschedule import co_schedule
@@ -255,14 +256,25 @@ class SearchOptions:
     # validation searches
     samples: int = 10_000
     seed: int = 0
-    # evaluation engine
-    engine: str = "fast"             # "fast" (FastCostModel) | "reference"
+    # evaluation engine: "fast" (FastCostModel, batched populations) |
+    # "reference" (paper-literal CostModel) | "jit" (FastCostModel with the
+    # jax-jitted batch kernel for population scoring)
+    engine: str = "fast"
     distributed_weights: bool = True
     cost: Any = None                 # pre-built CostModel: shared memo across solves
     validate: bool = True
     # observability (repro.obs): Tracer instance | output path | True;
     # excluded from problem_fingerprint -- tracing never changes the answer
     trace: Any = None
+    # warm start: a previous Solution (or bare ScopeSchedule /
+    # MultiModelSchedule) for the same model set.  Narrows the search to a
+    # window around the incumbent -- segment counts for single-model
+    # strategies, per-model quota windows + family gating for coschedule --
+    # so drift / fault re-solves are interactive.  Excluded from
+    # problem_fingerprint: a warm re-solve is a local refinement the
+    # SolutionCache treats as equivalent to the cold answer (exhaustiveness
+    # is deliberately traded for latency).
+    warm_start: Any = None
 
     @property
     def region_mode(self) -> RegionMode:
@@ -273,6 +285,10 @@ class SearchOptions:
     def make_cost(self, hw: HardwareModel) -> CostModel:
         if self.cost is not None:
             return self.cost
+        if self.engine == "jit":
+            return FastCostModel(hw, m_samples=self.m_samples,
+                                 distributed_weights=self.distributed_weights,
+                                 use_jit=True)
         cls = {"fast": FastCostModel, "reference": CostModel}[self.engine]
         return cls(hw, m_samples=self.m_samples,
                    distributed_weights=self.distributed_weights)
@@ -320,7 +336,7 @@ class Solution:
     (multi-model strategies) is set, except for sampling strategies
     (``random``) which only fill ``diagnostics``.  ``diagnostics`` always
     carries ``dse_s`` and ``engine_stats``; strategy-specific keys include
-    ``mode_rates`` / ``mixed_fallback`` (coschedule), ``per_flavor``
+    ``mode_rates`` (coschedule), ``per_flavor``
     (scope on a heterogeneous package), ``population`` (random) and
     ``seam_crossings`` (filled by validation).
     """
@@ -379,6 +395,13 @@ class Solution:
             graphs = {m.name: m.graph for m in self.problem.workload.models}
             if self.multi.mode == "merged":
                 mg, _ = merged_graph(list(self.problem.workload.models))
+                graphs[mg.name] = mg
+            # Merged sub-groups (partitioned mode, meta "merge_groups")
+            # share one schedule over a group-merged graph: rebuild each
+            # group's graph so its assignments validate against it.
+            by_name = {m.name: m for m in self.problem.workload.models}
+            for group in self.multi.meta.get("merge_groups", ()):
+                mg, _ = merged_graph([by_name[n] for n in group])
                 graphs[mg.name] = mg
             report = validate_multimodel(self.multi, graphs, flavors)
         elif (self.schedule is not None and self.schedule.latency < INF
@@ -692,7 +715,11 @@ class Solution:
                 # make every degraded re-solve overwrite the trace file;
                 # re-solve spans reach the serve tracer via the ambient
                 # tracer stack instead)
-                fr_opts = replace(self.problem.options, cost=None, trace=None)
+                # The running deployment warm-starts the degraded re-solve:
+                # it narrows the search around the incumbent allocation, so
+                # recovery planning is interactive rather than a cold DSE.
+                fr_opts = replace(self.problem.options, cost=None,
+                                  trace=None, warm_start=mm)
                 if mm.mode != "time_mux":
                     # keep the recovery fleet in the deployment's latency
                     # class: a time-mux winner-by-rate would trade
@@ -739,14 +766,17 @@ class Solution:
                     # package (degraded fingerprints stay cache-isolated,
                     # and the fleet keeps its latency class, see the
                     # fault_resolver above)
-                    opts = replace(prob.options, cost=None, trace=None)
+                    opts = replace(prob.options, cost=None, trace=None,
+                                   warm_start=mm)
                     if mm.mode != "time_mux":
                         opts = replace(opts, include_time_mux=False)
                     prob = replace(prob, package=PackageSpec(hw=hw),
                                    options=opts)
-                elif prob.options.trace is not None:
-                    prob = replace(prob, options=replace(prob.options,
-                                                         trace=None))
+                else:
+                    # the incumbent deployment warm-starts the drift
+                    # re-solve (quota windows around its allocation)
+                    prob = replace(prob, options=replace(
+                        prob.options, trace=None, warm_start=mm))
                 sol = cache.solve(prob)
                 info = {
                     "dse_s": sol.diagnostics.get("dse_s"),
@@ -835,7 +865,7 @@ class Solution:
             "dse_s": self.diagnostics.get("dse_s"),
             "engine_stats": self.diagnostics.get("engine_stats", {}),
         }
-        for key in ("seam_crossings", "mixed_fallback", "mode_rates"):
+        for key in ("seam_crossings", "mode_rates"):
             if key in self.diagnostics:
                 out[key] = self.diagnostics[key]
         if self.schedule is not None:
@@ -949,6 +979,40 @@ def _flavor_budgets(prob: Problem, hw: HardwareModel):
     return None
 
 
+def _warm_parts(o: SearchOptions):
+    """Split ``options.warm_start`` into its (single-model, multi-model)
+    incumbents: accepts a :class:`Solution` or a bare schedule of either
+    kind; anything else warms nothing."""
+    warm = o.warm_start
+    if warm is None:
+        return None, None
+    if isinstance(warm, ScopeSchedule):
+        return warm, None
+    if isinstance(warm, MultiModelSchedule):
+        return None, warm
+    sched = getattr(warm, "schedule", None)
+    multi = getattr(warm, "multi", None)
+    return (sched if isinstance(sched, ScopeSchedule) else None,
+            multi if isinstance(multi, MultiModelSchedule) else None)
+
+
+def _warm_segment_counts(o: SearchOptions, g: LayerGraph,
+                         hw: HardwareModel, chips: int):
+    """Warm single-model sweep: restrict the segment-count sweep to within
+    one of the incumbent schedule's count (the drifted problem's optimum is
+    overwhelmingly at or adjacent to the incumbent's segmentation).  Returns
+    None -- no restriction -- when there is no applicable warm start or the
+    caller pinned ``segment_counts`` explicitly."""
+    sched, _ = _warm_parts(o)
+    if sched is None or o.segment_counts is not None:
+        return None
+    window = [
+        s for s in candidate_segment_counts(g, hw, chips)
+        if abs(s - sched.n_segments) <= 1
+    ]
+    return window or None
+
+
 @register_strategy("scope")
 def _solve_scope(prob: Problem, hw: HardwareModel, cost: CostModel) -> Solution:
     """Paper Algorithm 1 (``core.search.search``).  On a heterogeneous
@@ -962,11 +1026,17 @@ def _solve_scope(prob: Problem, hw: HardwareModel, cost: CostModel) -> Solution:
     diagnostics: dict = {}
     if not hw.region_types or o.chip_type is not None:
         chips = hw.chips if o.chip_type is None else hw.chip_type(o.chip_type).chips
+        warm = _warm_segment_counts(o, g, hw, chips)
+        if warm is not None:
+            kw["segment_counts"] = warm
         sched = search(g, cost, chips, chip_type=o.chip_type, **kw)
     else:
         sched, per_flavor = None, {}
         budgets = _flavor_budgets(prob, hw) or package_flavors(hw)
         for ctype, cap in budgets:
+            warm = _warm_segment_counts(o, g, hw, cap)
+            if warm is not None:
+                kw["segment_counts"] = warm
             s = search(g, cost, cap, chip_type=ctype, **kw)
             per_flavor[ctype] = s.latency if s is not None else INF
             if s is not None and (sched is None or s.latency < sched.latency):
@@ -984,10 +1054,13 @@ def _solve_scope_mixed(prob: Problem, hw: HardwareModel,
     flavor."""
     g = _single_graph(prob, "scope-mixed")
     o = prob.options
+    counts = list(o.segment_counts) if o.segment_counts else None
+    if counts is None:
+        counts = _warm_segment_counts(o, g, hw, hw.chips)
     sched = search_mixed(
         g, cost, flavor_budgets=_flavor_budgets(prob, hw),
         mode=o.region_mode, ep_for_moe=o.ep_for_moe,
-        segment_counts=list(o.segment_counts) if o.segment_counts else None,
+        segment_counts=counts,
         max_clusters=o.max_clusters, paper_strict=o.paper_strict,
         cut_window=o.cut_window,
     )
@@ -1001,6 +1074,7 @@ def _solve_coschedule(prob: Problem, hw: HardwareModel,
     """Multi-model co-scheduling (``multimodel.co_schedule``): best of
     partitioned / spanning / merged / time-mux for N >= 1 models."""
     o = prob.options
+    _, warm_mm = _warm_parts(o)
     mm = co_schedule(
         list(prob.workload.models), hw, m_samples=o.m_samples, step=o.step,
         include_merged=o.include_merged, include_time_mux=o.include_time_mux,
@@ -1008,10 +1082,11 @@ def _solve_coschedule(prob: Problem, hw: HardwareModel,
         validate=False,                 # solve() validates and keeps the report
         curve_refine=o.refine, mixed_step=o.mixed_step,
         switch_cost=o.switch_cost, switch_period_s=o.switch_period_s,
+        warm_start=warm_mm,
     )
     diagnostics: dict = {}
     if mm is not None:
-        for key in ("mode_rates", "mixed_fallback"):
+        for key in ("mode_rates",):
             if key in mm.meta:
                 diagnostics[key] = mm.meta[key]
     return Solution(problem=prob, strategy="coschedule", hw=hw, multi=mm,
@@ -1193,7 +1268,11 @@ def problem_fingerprint(prob: Problem, hw: HardwareModel | None = None) -> tuple
     frozen HardwareModel), flavor caps, and every result-affecting
     SearchOptions field.  Two problems with equal fingerprints solve to
     the same Solution, so :class:`SolutionCache` may return the cached
-    one."""
+    one.  ``trace`` never changes the answer and ``warm_start`` only
+    narrows the search around an incumbent (a warm re-solve is treated as
+    equivalent to the cold answer), so both are deliberately excluded --
+    repeated re-solves of the same drifted mix stay whole-solution hits
+    regardless of which incumbent seeded them."""
     if hw is None:
         hw = prob.package.resolve()
     wl = prob.workload

@@ -27,6 +27,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 from .graph import (
     PARTITION_EP,
     PARTITION_ISP,
@@ -111,6 +113,8 @@ class CostModel:
         self._misses = 0
         self._probes = 0
         self._batched_bodies = 0
+        self._batch_evals = 0
+        self._batch_rows = 0
 
     @property
     def stats(self) -> dict:
@@ -123,6 +127,8 @@ class CostModel:
             "memo_cells": 0,
             "memo_entries": 0,
             "batched_bodies": self._batched_bodies,
+            "batch_evals": self._batch_evals,
+            "batch_rows": self._batch_rows,
         }
 
     def hw_for(self, chip_type: str | None) -> HardwareModel:
@@ -335,6 +341,57 @@ class CostModel:
             )
             total += t.total if self.overlap else t.unoverlapped
         return total
+
+    # ------------------------------------------------------------ populations
+    def cluster_population(self, graph: LayerGraph, rows) -> "np.ndarray":
+        """Batched population evaluator: score a ``(K, ...)`` batch of cluster
+        configurations in one call.
+
+        Each row is ``(lo, hi, spec, n, next_p0, next_n, ctype, next_ctype)``
+        with global layer bounds ``[lo, hi)``.  ``spec`` is either an explicit
+        partition tuple (first element a partition string) or an Algorithm 1
+        transition hint ``(k, ep)``: WSP for the first ``k`` layers, ISP for
+        the rest, MoE layers flipped to EP when ``ep``.  ``next_p0`` is the
+        consuming cluster's first partition (``None`` = network output) and
+        ``next_ctype`` its flavor (:data:`SAME_FLAVOR` = producer's flavor).
+
+        Returns a float64 array of the K steady-state cluster beat times.
+        The reference implementation scores rows one at a time through
+        :meth:`cluster_time`; :class:`repro.core.fastcost.FastCostModel`
+        overrides it with per-row memo consults plus grouped vectorized body
+        fills, so cache semantics are unchanged while the arithmetic runs as
+        one array program per distinct cluster cell.
+        """
+        out = np.empty(len(rows), dtype=np.float64)
+        self._batch_evals += 1
+        self._batch_rows += len(rows)
+        for i, (lo, hi, spec, n, next_p0, next_n, ctype, next_ctype) in enumerate(rows):
+            if spec and isinstance(spec[0], str):
+                partitions = tuple(spec)
+            else:
+                k, ep = spec
+                parts = [PARTITION_WSP] * k + [PARTITION_ISP] * (hi - lo - k)
+                if ep:
+                    for d, layer in enumerate(graph.layers[lo:hi]):
+                        if layer.n_experts > 1:
+                            parts[d] = PARTITION_EP
+                partitions = tuple(parts)
+            cluster = ClusterAssignment(
+                layer_lo=lo, layer_hi=hi, region_chips=n,
+                partitions=partitions, chip_type=ctype,
+            )
+            nxt = None
+            if next_p0 is not None:
+                nxt_t = ctype if next_ctype is SAME_FLAVOR else next_ctype
+                nxt = ClusterAssignment(
+                    layer_lo=hi, layer_hi=hi + 1, region_chips=next_n or 1,
+                    partitions=(next_p0,), chip_type=nxt_t,
+                )
+            out[i] = self.cluster_time(
+                graph, cluster, nxt,
+                first_in_segment=False, last_in_segment=nxt is None,
+            )
+        return out
 
     # -------------------------------------------------------------- segments
     def segment_time(

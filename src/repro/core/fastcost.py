@@ -54,6 +54,7 @@ exposes this in benchmarks.
 from __future__ import annotations
 
 import math
+from bisect import bisect_left, bisect_right
 from dataclasses import dataclass
 
 import numpy as np
@@ -139,6 +140,17 @@ _SCALAR_MAX_LAYERS = 32
 # Below this cluster size the 2D (k x layer) seed-phase batch fill is not
 # worth its NumPy dispatch either; the lazy per-k paths handle it.
 _BATCH_MIN_LAYERS = 8
+# Region-size window (+- chips around the seed) pre-filled per slot by
+# prefill_seed: covers the one-chip-at-a-time rebalance walk's body misses.
+_PREFILL_N_WINDOW = 1
+# Batched-first-rebalance-iteration group floor: a (bottleneck, donor) pair
+# shared by fewer candidates than this runs the scalar walk instead -- the
+# move-table costs span + 2 memo consults, so tiny groups would compute more
+# speculative entries than their walks save.
+_FIRST_MOVE_MIN_GROUP = 8
+# engine="jit": below this (rows x layers) population size the XLA dispatch
+# overhead loses to NumPy; above it the compiled fill kernel takes over.
+_JIT_MIN_ELEMS = 2048
 
 
 class _ClusterStatic:
@@ -217,7 +229,7 @@ class FastCostModel(CostModel):
     :meth:`segment_evaluator` picks the same argmin schedules.
     """
 
-    def __init__(self, *args, **kwargs):
+    def __init__(self, *args, use_jit: bool = False, **kwargs):
         super().__init__(*args, **kwargs)
         self._graphs: dict[int, _GraphData] = {}
         # Two-level memo: (graph, lo, hi, partitions) -> {(n, next_p0,
@@ -226,8 +238,17 @@ class FastCostModel(CostModel):
         # rebalance inner loop only hash small int tuples.
         self._memo: dict[tuple, dict] = {}
         self._codes_cache: dict[tuple[str, ...], np.ndarray] = {}
-        # _evals/_misses/_probes/_batched_bodies inherited from CostModel
+        # _evals/_misses/_probes/_batched_bodies/_batch_evals/_batch_rows
+        # inherited from CostModel
         self.batched_seed_fill = True   # 2D (k x layer) seed-phase fill
+        # Batched transition sweep: _SegmentSweep.sweep_transitions scores
+        # every (transition index, ep) candidate of a clustering as one
+        # gather over per-slot value tables instead of an incremental walk.
+        self.batched_sweep = True
+        # engine="jit": route large (rows x layer) body-fill matrix programs
+        # through jax.jit (rtol parity, opt-in; see core/jit_batch.py).
+        self.use_jit = bool(use_jit)
+        self._jit = None               # resolved lazily on first large fill
 
     # ------------------------------------------------------------- plumbing
     def graph_data(self, graph: LayerGraph) -> _GraphData:
@@ -241,6 +262,7 @@ class FastCostModel(CostModel):
         self._graphs.clear()
         self._memo.clear()
         self._evals = self._misses = self._probes = self._batched_bodies = 0
+        self._batch_evals = self._batch_rows = 0
 
     @property
     def stats(self) -> dict:
@@ -248,7 +270,9 @@ class FastCostModel(CostModel):
 
         Same schema as the reference :class:`CostModel.stats`;
         ``memo_hits = cluster_probes - cluster_computes`` is what the
-        cross-candidate memo saved.
+        cross-candidate memo saved, and ``batch_evals``/``batch_rows`` count
+        batched population calls (sweep_transitions / cluster_population)
+        and the candidate rows they scored.
         """
         return {
             "segment_evals": self._evals,
@@ -258,6 +282,8 @@ class FastCostModel(CostModel):
             "memo_cells": len(self._memo),
             "memo_entries": sum(len(c) - 2 for c in self._memo.values()),
             "batched_bodies": self._batched_bodies,
+            "batch_evals": self._batch_evals,
+            "batch_rows": self._batch_rows,
         }
 
     def _cluster_cell(
@@ -513,16 +539,23 @@ class FastCostModel(CostModel):
         return (head, pre_last, comp_last)
 
     # ------------------------------------------------- 2D seed-phase fill
-    def _batch_seed_fill(self, gd: _GraphData, lo: int, hi: int, n: int,
-                         ctype: str | None = None) -> None:
-        """Batched (k x layer) bodies for every transition slice of one span.
+    def _batch_seed_fill(self, gd: _GraphData, lo: int, hi: int, ns,
+                         ctype: str | None = None,
+                         eager_ns=None) -> None:
+        """Batched (row x layer) bodies for the transition slices of one span.
 
         Algorithm 1's seed phase probes the same cluster span at the same
         region size ``n`` under every transition index ``k`` (WSP for the
         first ``k`` layers, ISP for the rest).  Filling those ``L + 1``
         bodies one row at a time repeats the identical array setup per row;
-        this computes them as one ``(k x layer)`` matrix pass and writes the
-        results into the per-k memo cells the sweep will probe.
+        this computes them as one matrix pass over ``(k, n)`` rows and
+        writes the results into the per-k memo cells the sweep will probe.
+        ``ns`` is one region size or a sequence of them (the mixed-flavor
+        run-cut enumeration re-seeds the same spans at several sizes; those
+        fills share this one pass too).  ``eager_ns`` restricts which sizes'
+        over-capacity rows are worth the scalar greedy-flip fallback here:
+        speculative window sizes (prefill_seed's +- window) are left for the
+        lazy path to fill only if a probe actually lands on them.
 
         Exactness: every elementwise expression mirrors ``_cluster_body``
         operation by operation, and row reductions use ``np.cumsum`` (a
@@ -531,7 +564,8 @@ class FastCostModel(CostModel):
         lazy per-k evaluation would produce.  Rows whose weight placement
         overflows capacity (they need the greedy distributed-weight flip
         walk, or are infeasible) fall back to the per-k path, as do EP
-        variants (never batched).
+        variants (never batched).  With ``use_jit`` the matrix pass runs
+        under jax.jit instead (rtol parity; see core/jit_batch.py).
         """
         L = hi - lo
         hw = self.hw_for(ctype)
@@ -539,51 +573,174 @@ class FastCostModel(CostModel):
             self._cluster_cell_hint(gd, lo, hi, k, False, ctype)
             for k in range(L + 1)
         ]
-        need = [k for k in range(L + 1) if n not in cells[k][_BODY]]
+        if isinstance(ns, int):
+            ns = (ns,)
+        need = [
+            (k, n) for n in ns for k in range(L + 1)
+            if n not in cells[k][_BODY]
+        ]
         if not need:
             return
         w = gd.weight_bytes[lo:hi]
         fl = gd.flops[lo:hi]
         wsp = gd.wsp[lo:hi]
         isp = gd.isp[lo:hi]
-        ks = np.array(need, dtype=np.int64)
+        ks = np.array([k for k, _ in need], dtype=np.int64)
+        nr = np.array([n for _, n in need], dtype=np.int64)[:, None]
         lidx = np.arange(L)
-        is_wsp = lidx[None, :] < ks[:, None]                    # K x L
 
-        # --- residency (replicated WSP / sharded ISP), row-wise exact sums
-        resident = np.where(is_wsp, w, w / n)
-        s = np.cumsum(resident, axis=1)[:, -1]
-        cap = hw.weight_capacity_per_chip
-        over = s > cap
+        jit = self._jit_backend() if L > 1 else None
+        if jit is not None and len(need) * L >= _JIT_MIN_ELEMS:
+            lit = (w / hw.dram_bw_total) if self.literal_pre else None
+            s, head, comp_last = jit.slice_bodies(
+                w, fl, wsp, isp,
+                gd.out_bytes[lo : hi - 1], gd.halo_bytes[lo : hi - 1],
+                lit, ks, nr[:, 0], hw,
+                self.overlap, self.literal_pre,
+            )
+            cap = hw.weight_capacity_per_chip
+            over = s > cap
+        else:
+            jit = None
+            is_wsp = lidx[None, :] < ks[:, None]                # rows x L
+
+            # --- residency (replicated WSP / sharded ISP), row-wise sums
+            resident = np.where(is_wsp, w, w / nr)
+            s = np.cumsum(resident, axis=1)[:, -1]
+            cap = hw.weight_capacity_per_chip
+            over = s > cap
         if over.any():
             # These rows need the greedy flip walk (or are INF): per-k path.
             for row in np.nonzero(over)[0]:
-                cell = cells[need[row]]
+                k, n = need[row]
+                if eager_ns is not None and n not in eager_ns:
+                    continue
+                cell = cells[k]
                 cell[_BODY][n] = self._cluster_body(cell[_STATIC], n, hw)
         good = np.nonzero(~over)[0]
         if not len(good):
             return
         ks_g = ks[good]
-        is_wsp = is_wsp[good]
+        nr_g = nr[good]
 
-        # --- Eq. 5 computation (rows of _cluster_body's vectorized path)
-        m_local = np.where(is_wsp, wsp / n, wsp)
-        n_local = np.where(is_wsp, isp, isp / n)
+        if jit is None:
+            is_wsp = is_wsp[good]
+            # --- Eq. 5 computation (rows of _cluster_body's vectorized path)
+            m_local = np.where(is_wsp, wsp / nr_g, wsp)
+            n_local = np.where(is_wsp, isp, isp / nr_g)
+            util = _veff(m_local, hw.m_granule) * _veff(n_local, hw.n_granule)
+            comp = fl / ((nr_g * hw.flops_per_chip) * util)
+
+            lit = (w / hw.dram_bw_total) if self.literal_pre else None
+            if L > 1:
+                # Transition-slice edge (l, l+1): WSP->WSP iff l <= k-2,
+                # WSP->ISP iff l == k-1, ISP->ISP otherwise (ISP->WSP and EP
+                # edges cannot occur in a WSP^k ISP^(L-k) row).
+                out_i = gd.out_bytes[lo : hi - 1]
+                halo_i = gd.halo_bytes[lo : hi - 1]
+                vo = (nr_g - 1) * out_i
+                ha = halo_i * np.maximum(0, nr_g - 1)
+                ww = lidx[None, : L - 1] <= (ks_g[:, None] - 2)
+                vol = np.where(ww, ha, vo)
+                comm_i = np.where(vol <= 0, 0.0, vol / (nr_g * hw.nop_bw_per_chip))
+                comph = comp[:, :-1]
+                if self.overlap:
+                    head_arr = np.maximum(comm_i, comph)
+                else:
+                    head_arr = comm_i + comph
+                if lit is not None:
+                    head_arr = (
+                        lit[None, :-1] + head_arr if self.overlap
+                        else (lit[None, :-1] + comm_i) + comph
+                    )
+                head = np.cumsum(head_arr, axis=1)[:, -1]
+            else:
+                head = np.zeros(len(good))
+            comp_last = comp[:, -1]
+        else:
+            head = head[good]
+            comp_last = comp_last[good]
+        pre_last = float(lit[-1]) if lit is not None else 0.0
+        for row, g in enumerate(good.tolist()):
+            k, n = need[g]
+            cells[k][_BODY][n] = (
+                float(head[row]), pre_last, float(comp_last[row])
+            )
+        self._batched_bodies += len(good)
+
+    def prefill_spans(self, graph: LayerGraph, spans) -> None:
+        """Batch-fill transition-slice bodies for many spans in one go.
+
+        ``spans`` is an iterable of ``(lo, hi, ns, ctype)`` with global layer
+        bounds and one-or-more region sizes per span.  The mixed-flavor
+        run-cut enumeration uses this to score a whole flavor assignment's
+        cut candidates as one population: every cut re-seeds the same
+        cluster spans at different sizes, and this fills all those bodies
+        as one matrix pass per span before the per-cut sweeps probe them.
+        """
+        if not self.batched_seed_fill:
+            return
+        gd = self.graph_data(graph)
+        for lo, hi, ns, ctype in spans:
+            if hi - lo >= _BATCH_MIN_LAYERS:
+                self._batch_seed_fill(gd, lo, hi, ns, ctype)
+
+    def _jit_backend(self):
+        """Resolve the jax.jit fill backend once (None when disabled or jax
+        is unavailable -- the NumPy path is always a correct fallback)."""
+        if not self.use_jit:
+            return None
+        if self._jit is None:
+            from . import jit_batch
+            self._jit = jit_batch if jit_batch.available() else False
+        return self._jit or None
+
+    # ---------------------------------------------------------- populations
+    def _fill_bodies(self, cell: dict, ns, hw) -> None:
+        """Fill a memo cell's bodies for several region sizes in one pass.
+
+        The multi-``n`` analogue of the seed fill: one cluster static, a
+        vector of region sizes (the population evaluator's grouped misses).
+        Small clusters and EP statics keep the scalar/lazy paths (parity is
+        trivially guaranteed there); large non-EP statics run the body as a
+        ``(len(ns) x layers)`` matrix program mirroring ``_cluster_body``
+        operation by operation, with over-capacity rows falling back to the
+        exact greedy flip walk.
+        """
+        st = cell[_STATIC]
+        body = cell[_BODY]
+        ns = [n for n in ns if n not in body]
+        if not ns:
+            return
+        if st.rows is not None or st.any_ep or len(ns) == 1:
+            for n in ns:
+                body[n] = self._cluster_body(st, n, hw)
+            return
+        nr = np.array(ns, dtype=np.int64)[:, None]              # R x 1
+        w = st.w
+        resident = np.where(st.is_wsp, w, w / nr)
+        s = np.cumsum(resident, axis=1)[:, -1]
+        cap = hw.weight_capacity_per_chip
+        over = s > cap
+        for row in np.nonzero(over)[0]:
+            body[ns[row]] = self._cluster_body(st, ns[row], hw)
+        good = np.nonzero(~over)[0]
+        if not len(good):
+            return
+        nr = nr[good]
+        m_local = np.where(st.is_wsp, st.wsp / nr, st.m_base)
+        n_local = np.where(st.is_isp, st.isp / nr, st.isp)
         util = _veff(m_local, hw.m_granule) * _veff(n_local, hw.n_granule)
-        comp = fl / ((n * hw.flops_per_chip) * util)
-
+        comp = st.fl / ((nr * hw.flops_per_chip) * util)
         lit = (w / hw.dram_bw_total) if self.literal_pre else None
-        if L > 1:
-            # Transition-slice edge (l, l+1): WSP->WSP iff l <= k-2,
-            # WSP->ISP iff l == k-1, ISP->ISP otherwise (ISP->WSP and EP
-            # edges cannot occur in a WSP^k ISP^(L-k) row).
-            out_i = gd.out_bytes[lo : hi - 1]
-            halo_i = gd.halo_bytes[lo : hi - 1]
-            vo = (n - 1) * out_i
-            ha = halo_i * max(0, n - 1)
-            ww = lidx[None, : L - 1] <= (ks_g[:, None] - 2)
-            vol = np.where(ww, ha, vo)
-            comm_i = np.where(vol <= 0, 0.0, vol / (n * hw.nop_bw_per_chip))
+        if st.out_i is not None:
+            vo = (nr - 1) * st.out_i
+            ha = st.halo_i * np.maximum(0, nr - 1)
+            vol = np.where(
+                st.ep_edge, 2.0 * st.out_i,
+                np.where(st.ww_edge, ha, np.where(st.iw_edge, vo + ha, vo)),
+            )
+            comm_i = np.where(vol <= 0, 0.0, vol / (nr * hw.nop_bw_per_chip))
             comph = comp[:, :-1]
             if self.overlap:
                 head_arr = np.maximum(comm_i, comph)
@@ -599,11 +756,55 @@ class FastCostModel(CostModel):
             head = np.zeros(len(good))
         pre_last = float(lit[-1]) if lit is not None else 0.0
         comp_last = comp[:, -1]
-        for row, krow in enumerate(ks_g.tolist()):
-            cells[krow][_BODY][n] = (
-                float(head[row]), pre_last, float(comp_last[row])
-            )
+        for row, g in enumerate(good.tolist()):
+            body[ns[g]] = (float(head[row]), pre_last, float(comp_last[row]))
         self._batched_bodies += len(good)
+
+    def cluster_population(self, graph: LayerGraph, rows) -> np.ndarray:
+        """Batched population evaluator (see :meth:`CostModel.cluster_population`
+        for the row format).
+
+        Memo semantics are unchanged: every row is consulted against the
+        same two-level memo the scalar paths use and misses are written
+        back, so a population call warms the cache for later scalar probes
+        and vice versa.  What *is* batched is the body arithmetic: all
+        missing bodies that share a cluster cell are filled as one
+        ``(rows x layers)`` matrix program (:meth:`_fill_bodies`), and the
+        per-row remainder is scalar memo assembly.
+        """
+        gd = self.graph_data(graph)
+        out = np.empty(len(rows), dtype=np.float64)
+        self._batch_evals += 1
+        self._batch_rows += len(rows)
+        resolved = []
+        pending: dict[int, tuple[dict, str | None, set]] = {}
+        for lo, hi, spec, n, next_p0, next_n, ctype, next_ctype in rows:
+            if spec and isinstance(spec[0], str):
+                cell = self._cluster_cell(gd, lo, hi, tuple(spec), ctype)
+            else:
+                k, ep = spec
+                cell = self._cluster_cell_hint(gd, lo, hi, int(k), bool(ep), ctype)
+            nct = ctype if next_ctype is SAME_FLAVOR else next_ctype
+            resolved.append((cell, n, next_p0, next_n, ctype, nct))
+            if n not in cell[_BODY]:
+                ent = pending.get(id(cell))
+                if ent is None:
+                    pending[id(cell)] = (cell, ctype, {n})
+                else:
+                    ent[2].add(n)
+        for cell, ctype, ns in pending.values():
+            self._fill_bodies(cell, sorted(ns), self.hw_for(ctype))
+        for i, (cell, n, next_p0, next_n, ctype, nct) in enumerate(resolved):
+            self._probes += 1
+            key = (n, next_p0, next_n, nct)
+            t = cell.get(key)
+            if t is None:
+                self._misses += 1
+                t = cell[key] = self._cluster_cost(
+                    cell[_STATIC], n, next_p0, next_n, cell[_BODY], ctype, nct,
+                )
+            out[i] = t
+        return out
 
     # -------------------------------------------------------------- memoized
     def _cluster_time_fast(
@@ -718,6 +919,10 @@ class FastCostModel(CostModel):
             return sweep
 
         configure.prefill = sweep.prefill_seed
+        if self.batched_sweep:
+            # search_segment scores all transition candidates of the
+            # clustering as one batch before the per-candidate rebalance.
+            configure.sweep_transitions = sweep.sweep_transitions
         return configure
 
     def segment_evaluator(self, graph, seg_lo, clustering, partitions,
@@ -743,7 +948,8 @@ class _SegmentSweep:
     __slots__ = (
         "model", "gd", "spans", "rel", "n_cl", "load_const", "m",
         "fill_factor", "has_expert", "first_expert", "cells", "statics",
-        "next_p0s", "cur_k", "cur_ep", "ctypes", "next_ctypes",
+        "next_p0s", "cur_k", "cur_ep", "ctypes", "next_ctypes", "slot_cells",
+        "_rlos", "_rhis", "_last_t",
     )
 
     def __init__(self, model: FastCostModel, graph: LayerGraph, seg_lo: int,
@@ -787,6 +993,13 @@ class _SegmentSweep:
         self.next_p0s = [None] * n_cl          # next_p0s[j] = slot j+1's first p
         self.cur_k = [None] * n_cl
         self.cur_ep = [None] * n_cl
+        # (j, ep) -> [memo cell per k]: the transition sweep touches every k
+        # of every slot, so cells are resolved once per slot here and looked
+        # up by list index afterwards instead of re-hashing hint tuples.
+        self.slot_cells: dict = {}
+        self._rlos = [lo for lo, _ in self.rel]
+        self._rhis = [hi for _, hi in self.rel]
+        self._last_t = None          # last applied (idx, ep_variant)
 
     def set_partitions(self, partitions, transition=None) -> None:
         model, gd = self.model, self.gd
@@ -800,28 +1013,62 @@ class _SegmentSweep:
                 self.cur_k[j] = self.cur_ep[j] = None
                 if j > 0:
                     self.next_p0s[j - 1] = p[0]
+            self._last_t = None
             return
         idx, ep_variant = transition
-        for j, (lo, hi) in enumerate(self.rel):
+        last = self._last_t
+        self._last_t = transition
+        rel = self.rel
+        if last is not None and last[1] == ep_variant:
+            # Same ep variant: slot j's clipped k changes between transition
+            # indices p and idx only if (lo_j, hi_j] meets (min, max] -- a
+            # contiguous j range since clusterings tile the segment.  The
+            # usual sweep step is |idx - p| = 1, touching one or two slots.
+            p = last[0]
+            if p == idx:
+                return
+            mn, mx = (p, idx) if p < idx else (idx, p)
+            js = range(bisect_right(self._rhis, mn),
+                       bisect_left(self._rlos, mx))
+        else:
+            js = range(self.n_cl)
+        cur_k, cur_ep = self.cur_k, self.cur_ep
+        has_expert, first_expert = self.has_expert, self.first_expert
+        cells, statics, next_p0s = self.cells, self.statics, self.next_p0s
+        for j in js:
+            lo, hi = rel[j]
             k = idx - lo
             if k < 0:
                 k = 0
             elif k > hi - lo:
                 k = hi - lo
-            ep_j = ep_variant and self.has_expert[j]
-            if k == self.cur_k[j] and ep_j == self.cur_ep[j]:
+            ep_j = ep_variant and has_expert[j]
+            if k == cur_k[j] and ep_j == cur_ep[j]:
                 continue
-            cell = model._cluster_cell_hint(gd, *self.spans[j], k, ep_j,
-                                            self.ctypes[j])
-            self.cells[j] = cell
-            self.statics[j] = cell[_STATIC]
-            self.cur_k[j] = k
-            self.cur_ep[j] = ep_j
+            cell = self._slot_cell_list(j, ep_j)[k]
+            cells[j] = cell
+            statics[j] = cell[_STATIC]
+            cur_k[j] = k
+            cur_ep[j] = ep_j
             if j > 0:
-                self.next_p0s[j - 1] = (
-                    "EP" if (ep_j and self.first_expert[j])
+                next_p0s[j - 1] = (
+                    "EP" if (ep_j and first_expert[j])
                     else ("WSP" if k > 0 else "ISP")
                 )
+
+    def _slot_cell_list(self, j: int, ep_j: bool) -> list:
+        """Slot ``j``'s memo cells for every transition slice k (cached)."""
+        key = (j, ep_j)
+        lst = self.slot_cells.get(key)
+        if lst is None:
+            lo, hi = self.spans[j]
+            model, gd, ctype = self.model, self.gd, self.ctypes[j]
+            hint = model._cluster_cell_hint
+            lst = self.slot_cells[key] = [
+                hint(gd, lo, hi, k, ep_j, ctype)
+                for k in range(hi - lo + 1)
+            ]
+        return lst
 
     def _probe(self, j: int, n: int, next_n: int | None) -> float:
         next_p0 = self.next_p0s[j]
@@ -876,28 +1123,287 @@ class _SegmentSweep:
         Called once per (clustering, seed allocation) by search_segment
         before the transition sweep; spans below _BATCH_MIN_LAYERS stay on
         the lazy per-k paths (scalar loops beat NumPy dispatch there).
+        Besides the seed size itself, a +-_PREFILL_N_WINDOW window of region
+        sizes rides along in the same matrix pass: the rebalance walks that
+        follow move one chip at a time, so almost all their body misses land
+        within a few chips of the seed -- pre-filling them swaps scalar
+        per-(k, n) fills during the walk for a few extra vectorized rows
+        here.  Extra rows only add bodies to the memo; probe results are
+        unchanged.
         """
         model = self.model
         if not model.batched_seed_fill:
             return
+        d = _PREFILL_N_WINDOW
         for j, (lo, hi) in enumerate(self.spans):
             if hi - lo >= _BATCH_MIN_LAYERS:
-                model._batch_seed_fill(self.gd, lo, hi, alloc[j], self.ctypes[j])
+                a = alloc[j]
+                ns = range(max(1, a - d), a + d + 1)
+                model._batch_seed_fill(self.gd, lo, hi, ns, self.ctypes[j],
+                                       eager_ns=(a,))
 
     def move(self, base_alloc, base_times, dst, src, k=1):
         """Incremental re-eval after moving ``k`` chips src -> dst."""
-        self.model._evals += 1
+        model = self.model
+        model._evals += 1
         n_cl = self.n_cl
         alloc = list(base_alloc)
         alloc[dst] += k
         alloc[src] -= k
         times = list(base_times)
-        for j in {dst, src, dst - 1, src - 1}:
-            if 0 <= j < n_cl:
-                times[j] = self._probe(
-                    j, alloc[j], alloc[j + 1] if j + 1 < n_cl else None
+        # Inlined _probe for the four affected slots (the rebalance walk's
+        # innermost loop): donor, receiver, and their left neighbors.
+        j2 = dst - 1
+        j3 = src - 1
+        slots = (dst, src) + (
+            () if j2 < 0 or j2 == src else (j2,)
+        ) + (
+            () if j3 < 0 or j3 == dst else (j3,)
+        )
+        cells = self.cells
+        next_p0s = self.next_p0s
+        next_ctypes = self.next_ctypes
+        model._probes += len(slots)
+        for j in slots:
+            key = (alloc[j], next_p0s[j],
+                   alloc[j + 1] if j + 1 < n_cl else None, next_ctypes[j])
+            cell = cells[j]
+            t = cell.get(key)
+            if t is None:
+                model._misses += 1
+                t = cell[key] = model._cluster_cost(
+                    self.statics[j], key[0], key[1], key[2], cell[_BODY],
+                    self.ctypes[j], key[3],
                 )
+            times[j] = t
         bottleneck = max(times)
         if bottleneck == INF:
             return INF, alloc, times
         return self.load_const + self.fill_factor * bottleneck, alloc, times
+
+    # ----------------------------------------------- batched transition sweep
+    def _slot_vals(self, j: int, n: int, next_n: int | None, ep_variant: bool,
+                   out: list) -> None:
+        """Append slot ``j``'s transition-index value table to ``out``.
+
+        For a transition index ``idx``, slot ``j`` (relative span
+        ``[lo, hi)``) evaluates the WSP^k ISP^(span-k) slice with
+        ``k = clip(idx - lo, 0, span)``, against a next cluster starting
+        ISP while ``idx <= hi`` and WSP once ``idx > hi`` (EP-pinned when
+        the ep variant makes the next slot start on an expert layer; absent
+        for the last slot).  The table therefore has one entry per k plus --
+        when the next-start can flip to WSP -- one trailing ``(k=span,
+        next=WSP)`` entry, and a candidate's value sits at
+        ``clip(idx - lo, 0, len-1)``.  Entries are memo consults with the
+        exact keys the scalar probes use, so the sweep and the incremental
+        rebalance walk share every cached time.
+        """
+        model = self.model
+        lo, hi = self.rel[j]
+        span = hi - lo
+        ep_j = ep_variant and self.has_expert[j]
+        ctype = self.ctypes[j]
+        next_ct = self.next_ctypes[j]
+        last = j == self.n_cl - 1
+        ep_next = (not last) and ep_variant and self.first_expert[j + 1]
+        cost = model._cluster_cost
+        if last:
+            p0, nn = None, None
+        elif ep_next:
+            p0, nn = "EP", next_n
+        else:
+            p0, nn = "ISP", next_n
+        cell = None
+        slot_cells = self._slot_cell_list(j, ep_j)
+        model._probes += span + 1
+        key = (n, p0, nn, next_ct)
+        append = out.append
+        for k in range(span + 1):
+            cell = slot_cells[k]
+            t = cell.get(key)
+            if t is None:
+                model._misses += 1
+                t = cell[key] = cost(
+                    cell[_STATIC], n, p0, nn, cell[_BODY], ctype, next_ct,
+                )
+            append(t)
+        if not last and not ep_next:
+            # idx past this slot: k stays at span, the next slot starts WSP.
+            model._probes += 1
+            key = (n, "WSP", next_n, next_ct)
+            t = cell.get(key)
+            if t is None:
+                model._misses += 1
+                t = cell[key] = cost(
+                    cell[_STATIC], n, "WSP", next_n, cell[_BODY], ctype,
+                    next_ct,
+                )
+            out.append(t)
+
+    def sweep_transitions(self, alloc, hints, first_moves=False):
+        """Score every transition candidate of this clustering as one batch.
+
+        ``hints`` is the list of ``(transition_idx, ep_variant)`` pairs from
+        ``_partition_sets``; the return is ``(lats, times)`` -- a float64
+        array of segment latencies and the per-candidate cluster-time lists
+        -- exactly what evaluating each candidate's ``eval_fn(alloc)`` one
+        at a time would produce, bit for bit.  Instead of ``K x n_cl``
+        scalar probes, each slot's distinct values are materialized once
+        (``span + 2`` memo consults per slot) and all K candidates are
+        assembled with a single clipped fancy-index gather + row max.
+
+        With ``first_moves=True`` the return gains a third element: a
+        per-candidate head-of-walk decision from batching the *first
+        rebalance iteration* as well (see :meth:`_first_moves`).  ``None``
+        means "run the scalar walk from the seed" (infeasible seeds take
+        the repair phase; small candidate groups are not worth batching),
+        ``("done",)`` means the walk provably terminates at the seed, and
+        ``("cont", alloc2, lat2, times2)`` is the state after the one
+        accepted move, from which the scalar walk continues.
+        """
+        model = self.model
+        n_cl = self.n_cl
+        K = len(hints)
+        model._evals += K
+        model._batch_evals += 1
+        model._batch_rows += K
+        lats = np.empty(K, dtype=np.float64)
+        times: list[list[float] | None] = [None] * K
+        heads: list[tuple | None] | None = [None] * K if first_moves else None
+        move_tables: dict = {}
+        for ep_variant in (False, True):
+            rows = [r for r, (_i, ep) in enumerate(hints) if bool(ep) == ep_variant]
+            if not rows:
+                continue
+            idxs = np.array([hints[r][0] for r in rows], dtype=np.int64)
+            vals: list[float] = []
+            offs = np.empty(n_cl, dtype=np.int64)
+            caps = np.empty(n_cl, dtype=np.int64)
+            rlos = np.empty(n_cl, dtype=np.int64)
+            for j in range(n_cl):
+                offs[j] = len(vals)
+                self._slot_vals(
+                    j, alloc[j],
+                    alloc[j + 1] if j + 1 < n_cl else None,
+                    ep_variant, vals,
+                )
+                caps[j] = len(vals) - offs[j] - 1
+                rlos[j] = self.rel[j][0]
+            flat = np.array(vals, dtype=np.float64)
+            pos = np.clip(idxs[None, :] - rlos[:, None], 0, caps[:, None])
+            tmat = flat[offs[:, None] + pos]               # n_cl x K_variant
+            bn = tmat.max(axis=0)
+            lat_v = np.where(np.isinf(bn), INF, self.load_const + self.fill_factor * bn)
+            for c, r in enumerate(rows):
+                lats[r] = lat_v[c]
+                times[r] = tmat[:, c].tolist()
+            if first_moves and n_cl > 1:
+                self._first_moves(alloc, rows, tmat, pos, lat_v, times, heads,
+                                  ep_variant, move_tables)
+        if first_moves:
+            return lats, times, heads
+        return lats, times
+
+    def _first_moves(self, alloc, rows, tmat, pos, lat_v, times, heads,
+                     ep_variant, tables) -> None:
+        """Batch the first rebalance iteration of every finite-seed candidate.
+
+        Most rebalance walks end immediately: the two fastest donors both
+        fail to lower the bottleneck.  This replicates iteration 1 of
+        :func:`repro.core.regions.rebalance`'s hot path (``groups=None``,
+        ``donor_tries=2``) exactly -- bottleneck = first argmax, donors = the
+        two fastest regions with more than one chip excluding the bottleneck
+        (first-argmin tie-breaks, like the scalar scans), acceptance =
+        strictly lower latency -- but for whole candidate groups at once.
+        Candidates are grouped by their (bottleneck, donor) pair; a group's
+        post-move cluster times are one fancy-index gather from a value
+        table at the moved allocation (``tables`` caches them, keyed
+        ``(slot, n, next_n, ep)``).  Groups smaller than
+        ``_FIRST_MOVE_MIN_GROUP`` keep ``heads[r] = None`` and take the
+        scalar walk -- a table costs ``span + 2`` memo consults, so tiny
+        groups would compute more speculative entries than the walk itself.
+        """
+        model = self.model
+        n_cl = self.n_cl
+        fin = np.nonzero(np.isfinite(lat_v))[0]
+        if not len(fin):
+            return
+        eligible = np.array([a > 1 for a in alloc], dtype=bool)
+        slow = tmat[:, fin].argmax(axis=0)
+        M = np.where(eligible[:, None], tmat[:, fin], np.inf)
+        ar = np.arange(len(fin))
+        M[slow, ar] = np.inf
+        d1 = M.argmin(axis=0)
+        ok1 = M[d1, ar] < np.inf
+
+        def eval_move(cols, s, d):
+            # Post-move state for candidates `cols` (fin-relative) moving
+            # one chip from donor d to bottleneck s: exactly what
+            # _SegmentSweep.move would compute, gathered per slot.
+            a2 = list(alloc)
+            a2[s] += 1
+            a2[d] -= 1
+            aff = [s, d]
+            if s - 1 >= 0 and s - 1 != d:
+                aff.append(s - 1)
+            if d - 1 >= 0 and d - 1 != s:
+                aff.append(d - 1)
+            gcols = fin[cols]
+            newvals = np.empty((len(aff), len(cols)))
+            for i, j in enumerate(aff):
+                key = (j, a2[j], a2[j + 1] if j + 1 < n_cl else None,
+                       ep_variant)
+                tab = tables.get(key)
+                if tab is None:
+                    out: list[float] = []
+                    self._slot_vals(j, key[1], key[2], ep_variant, out)
+                    tab = tables[key] = np.array(out, dtype=np.float64)
+                newvals[i] = tab[pos[j, gcols]]
+            model._evals += len(cols)
+            rest = np.ones(n_cl, dtype=bool)
+            rest[aff] = False
+            bn2 = newvals.max(axis=0)
+            if rest.any():
+                bn2 = np.maximum(bn2, tmat[rest][:, gcols].max(axis=0))
+            lat2 = np.where(np.isinf(bn2), INF,
+                            self.load_const + self.fill_factor * bn2)
+            return a2, aff, newvals, lat2
+
+        def apply_round(pairs, failed):
+            for (s, d), cols in pairs.items():
+                if len(cols) < _FIRST_MOVE_MIN_GROUP:
+                    continue                     # scalar walk (heads stay None)
+                cols = np.array(cols)
+                a2, aff, newvals, lat2 = eval_move(cols, s, d)
+                imp = lat2 < lat_v[fin[cols]]
+                for i, c in enumerate(cols):
+                    r = rows[fin[c]]
+                    if imp[i]:
+                        t2 = list(times[r])
+                        for ai, j in enumerate(aff):
+                            t2[j] = float(newvals[ai, i])
+                        heads[r] = ("cont", a2, float(lat2[i]), t2)
+                    elif failed is None:
+                        heads[r] = ("done",)
+                    else:
+                        failed.append(int(c))
+
+        pairs1: dict[tuple[int, int], list[int]] = {}
+        for c in ar[ok1]:
+            pairs1.setdefault((int(slow[c]), int(d1[c])), []).append(int(c))
+        for c in ar[~ok1]:
+            heads[rows[fin[c]]] = ("done",)      # no donor: walk ends at seed
+        fail1: list[int] = []
+        apply_round(pairs1, fail1)
+        if fail1:
+            f1 = np.array(fail1)
+            M[d1[f1], f1] = np.inf
+            d2 = M[:, f1].argmin(axis=0)
+            ok2 = M[d2, f1] < np.inf
+            pairs2: dict[tuple[int, int], list[int]] = {}
+            for i, c in enumerate(fail1):
+                if ok2[i]:
+                    pairs2.setdefault((int(slow[c]), int(d2[i])), []).append(c)
+                else:
+                    heads[rows[fin[c]]] = ("done",)
+            apply_round(pairs2, None)

@@ -269,7 +269,16 @@ def validate_multimodel(
         seam_by_model[a.model] = report["seam_crossings"]
     if sched.mode == MM_PARTITIONED:
         used: dict[str | None, int] = {}
+        seen_schedules: set[tuple] = set()
         for a in sched.assignments:
+            # Merged sub-groups: members share one ScopeSchedule *and* one
+            # resource claim over one chip region, so each distinct
+            # (schedule, claim)'s chips count once.
+            key = (id(a.schedule), a.chip_type, a.chips,
+                   tuple(a.chip_quota or ()))
+            if key in seen_schedules:
+                continue
+            seen_schedules.add(key)
             if a.chip_quota:
                 for ctype, c in a.chip_quota:
                     used[ctype] = used.get(ctype, 0) + c

@@ -335,11 +335,11 @@ def mcm_hetero3(
 ) -> HardwareModel:
     """Table III package with three chiplet flavors (big / mid / little).
 
-    Exercises the 3+-flavor regime: the per-cluster mixed DSE handles any
-    flavor count, but the multimodel *spanning-quota* enumeration covers
-    exactly two flavors and falls back to single-flavor quotas here
-    (explicitly -- ``co_schedule`` warns and records
-    ``meta["mixed_fallback"]``).
+    Exercises the 3+-flavor regime end to end: the per-cluster mixed DSE
+    handles any flavor count, and the multimodel spanning-quota enumeration
+    scores k-flavor budget tuples against F-dimensional mixed envelopes
+    (``quota.search_partitioned_mixed``), so no single-flavor fallback is
+    involved.
     """
     third = chips // 3
     counts = (chips - 2 * third, third, third)
@@ -362,6 +362,7 @@ PRESETS = {
     "mcm16": lambda: mcm_table_iii(16),
     "mcm64": lambda: mcm_table_iii(64),
     "mcm256": lambda: mcm_table_iii(256),
+    "mcm1024": lambda: mcm_table_iii(1024),
     "tpu_v5e_256": lambda: tpu_v5e(256, (16, 16)),
     "tpu_v5e_512": lambda: tpu_v5e(512, (16, 32)),
     "mcm64_hetero": lambda: mcm_hetero(64),

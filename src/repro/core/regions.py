@@ -27,17 +27,31 @@ def proportional_allocate(loads: list[float], chips: int) -> list[int]:
         raise ValueError(f"{n} clusters > {chips} chips")
     total = sum(loads) or 1.0
     alloc = [max(1, int(chips * l / total)) for l in loads]
-    # repair the sum: remove from the most over-provisioned, add to the most under
-    def pressure(i):  # chips per unit load (higher -> over-provisioned)
-        return alloc[i] / max(loads[i], 1e-30)
-    while sum(alloc) > chips:
-        cand = max((i for i in range(n) if alloc[i] > 1), key=pressure, default=None)
-        if cand is None:
+    # repair the sum: remove from the most over-provisioned, add to the most
+    # under; pressure(i) = alloc[i] / load[i], chips per unit load.  The
+    # running-sum / explicit-scan form keeps the exact division and
+    # first-argmax tie-breaks of the original max(key=...) loops.
+    lds = [max(l, 1e-30) for l in loads]
+    s = sum(alloc)
+    while s > chips:
+        cand, cp = -1, -1.0
+        for i in range(n):
+            if alloc[i] > 1:
+                p = alloc[i] / lds[i]
+                if p > cp:
+                    cand, cp = i, p
+        if cand < 0:
             raise ValueError("cannot satisfy >=1 chip per region")
         alloc[cand] -= 1
-    while sum(alloc) < chips:
-        cand = min(range(n), key=pressure)
+        s -= 1
+    while s < chips:
+        cand, cp = 0, alloc[0] / lds[0]
+        for i in range(1, n):
+            p = alloc[i] / lds[i]
+            if p < cp:
+                cand, cp = i, p
         alloc[cand] += 1
+        s += 1
     return alloc
 
 
@@ -227,6 +241,7 @@ def rebalance(
     donor_tries: int = 2,
     paper_strict: bool = False,
     groups: list[int] | None = None,
+    times0: tuple[float, list[float]] | None = None,
 ) -> tuple[list[int], float, list[float]]:
     """Paper's heuristic: move 1 chip from the fastest to the slowest region.
 
@@ -252,12 +267,23 @@ def rebalance(
     pseudocode exactly: an infeasible seed terminates immediately, and only
     the single fastest region is ever tried as donor.  Use it for
     literal-pseudocode comparison tables; the default explores strictly more.
+
+    ``times0=(latency, per_cluster_times)`` supplies the seed allocation's
+    evaluation when the caller already has it -- the batched transition
+    sweep (``fastcost._SegmentSweep.sweep_transitions``) scores every
+    candidate's seed in one array pass, so re-evaluating it here would undo
+    the batching.  The values must equal ``eval_fn(alloc)`` exactly; the
+    walk (and therefore the result) is then bit-identical to the unseeded
+    call.
     """
     INF = float("inf")
     if paper_strict:
         donor_tries = 1
     best = list(alloc)
-    best_lat, best_times = eval_fn(best)
+    if times0 is not None:
+        best_lat, best_times = times0[0], list(times0[1])
+    else:
+        best_lat, best_times = eval_fn(best)
     if paper_strict and best_lat == INF:
         return best, best_lat, best_times
     # Incremental protocol (fastcost.py): ``move(alloc, times, dst, src, k)``
@@ -287,13 +313,18 @@ def rebalance(
                 break
             # Repair an infeasible region whose pool still has donors
             # (pool-less infeasible regions stay INF and the walk ends).
-            target = next(
-                (
-                    j for j in bad
-                    if _fastest_donors(best_times, best, bad, 1, groups, j)
-                ),
-                bad[0],
-            )
+            if groups is None:
+                # Without pools donor availability is receiver-independent,
+                # so the scan below always lands on the first bad region.
+                target = bad[0]
+            else:
+                target = next(
+                    (
+                        j for j in bad
+                        if _fastest_donors(best_times, best, bad, 1, groups, j)
+                    ),
+                    bad[0],
+                )
             donors = _fastest_donors(best_times, best, bad, donor_tries,
                                      groups, target)
             moved = False
@@ -315,12 +346,38 @@ def rebalance(
                     continue
                 break
             continue
-        slow = 0
-        for j in range(1, n):
-            if best_times[j] > best_times[slow]:
-                slow = j
-        donors = _fastest_donors(best_times, best, (slow,), donor_tries,
-                                 groups, slow)
+        if groups is None and donor_tries <= 2:
+            # Fused scan (the hot path): one pass finds the bottleneck
+            # (first max, matching the plain max scan) and the three
+            # fastest donor-eligible regions; dropping the bottleneck from
+            # those three leaves the two fastest donors excluding it --
+            # exactly ``_fastest_donors(..., (slow,), donor_tries)``.
+            slow = 0
+            ts = best_times[0]
+            t1 = t2 = t3 = 0.0
+            j1 = j2 = j3 = -1
+            for j, t in enumerate(best_times):
+                if t > ts:
+                    slow, ts = j, t
+                if best[j] > 1:
+                    if j1 < 0 or t < t1:
+                        t3, j3 = t2, j2
+                        t2, j2 = t1, j1
+                        t1, j1 = t, j
+                    elif j2 < 0 or t < t2:
+                        t3, j3 = t2, j2
+                        t2, j2 = t, j
+                    elif j3 < 0 or t < t3:
+                        t3, j3 = t, j
+            donors = [d for d in (j1, j2, j3)
+                      if d >= 0 and d != slow][:donor_tries]
+        else:
+            slow = 0
+            for j in range(1, n):
+                if best_times[j] > best_times[slow]:
+                    slow = j
+            donors = _fastest_donors(best_times, best, (slow,), donor_tries,
+                                     groups, slow)
         improved = False
         for fast in donors:
             lat, trial, times = mv(best, best_times, slow, fast, 1)
@@ -340,6 +397,27 @@ def _fastest_donors(times, alloc, exclude, k, groups=None, receiver=None):
     never cross a flavor boundary).
     """
     pool = None if groups is None or receiver is None else groups[receiver]
+    if k <= 2:
+        # Hot path (donor_tries <= 2): a two-min scan instead of building
+        # and sorting the full (t, j) list.  Strict ``<`` with ascending j
+        # reproduces the sort's lexicographic tie-break (smallest t, then
+        # smallest j) exactly.
+        t1 = t2 = 0.0
+        j1 = j2 = -1
+        for j, t in enumerate(times):
+            if alloc[j] > 1 and j not in exclude:
+                if pool is not None and groups[j] != pool:
+                    continue
+                if j1 < 0 or t < t1:
+                    t2, j2 = t1, j1
+                    t1, j1 = t, j
+                elif j2 < 0 or t < t2:
+                    t2, j2 = t, j
+        if j1 < 0:
+            return []
+        if k == 1 or j2 < 0:
+            return [j1]
+        return [j1, j2]
     out = []
     for j, t in enumerate(times):
         if alloc[j] > 1 and j not in exclude:

@@ -177,19 +177,68 @@ def search_segment(
         prefill = getattr(sweeper, "prefill", None)
         if prefill is not None:
             prefill(seed)
-        for partitions, hint in partition_sets.items():
-
-            # One evaluator per (clustering, partitions): FastCostModel
-            # memoizes cluster costs, so the rebalance walk below only ever
-            # computes the clusters a chip move actually changed.
-            eval_fn = sweeper(partitions, transition=hint)
+        # Batched transition sweep (fastcost.sweep_transitions): every
+        # candidate's seed score as one gather over per-slot value tables,
+        # instead of K x n_cl scalar probes.  Each candidate's rebalance
+        # walk then starts from its batch row (times0) without re-evaluating
+        # the seed allocation.
+        sweep_batch = getattr(sweeper, "sweep_transitions", None)
+        seed_lats = seed_times = heads = None
+        if sweep_batch is not None:
+            if mode is RegionMode.FREE and not paper_strict:
+                # Also batch the first rebalance iteration: most walks end
+                # right there (both donors fail), and the rest resume the
+                # scalar walk from their post-move state.
+                seed_lats, seed_times, heads = sweep_batch(
+                    seed, list(partition_sets.values()), first_moves=True
+                )
+            else:
+                seed_lats, seed_times = sweep_batch(
+                    seed, list(partition_sets.values())
+                )
+        for r, (partitions, hint) in enumerate(partition_sets.items()):
 
             if mode is RegionMode.UNIFORM:
-                lat, times = eval_fn(seed)
+                if seed_lats is not None:
+                    lat, times = float(seed_lats[r]), seed_times[r]
+                else:
+                    lat, times = sweeper(partitions, transition=hint)(seed)
                 alloc = seed
             else:
-                alloc, lat, times = rebalance(seed, eval_fn,
-                                              paper_strict=paper_strict)
+                head = None if heads is None else heads[r]
+                if head is not None and head[0] == "done":
+                    # Batched first iteration proved no donor move improves:
+                    # the walk terminates at the seed without configuring.
+                    alloc, lat, times = seed, float(seed_lats[r]), seed_times[r]
+                    if lat < (best.latency if best else INF):
+                        best = SegmentResult(
+                            clusters=build_clusters(
+                                seg_lo, clustering, partitions, alloc, chip_type
+                            ),
+                            latency=lat,
+                            cluster_times=tuple(times),
+                        )
+                    continue
+                # One evaluator per (clustering, partitions): FastCostModel
+                # memoizes cluster costs, so the rebalance walk below only
+                # ever computes the clusters a chip move actually changed.
+                eval_fn = sweeper(partitions, transition=hint)
+                if head is not None:
+                    # ("cont", alloc2, lat2, times2): resume after the one
+                    # accepted move (max_iters=255: iteration 1 is spent).
+                    alloc, lat, times = rebalance(
+                        head[1], eval_fn, max_iters=255,
+                        paper_strict=paper_strict,
+                        times0=(head[2], head[3]),
+                    )
+                else:
+                    t0 = (
+                        None if seed_lats is None
+                        else (float(seed_lats[r]), seed_times[r])
+                    )
+                    alloc, lat, times = rebalance(seed, eval_fn,
+                                                  paper_strict=paper_strict,
+                                                  times0=t0)
             if lat < (best.latency if best else INF):
                 best = SegmentResult(
                     clusters=build_clusters(
@@ -297,6 +346,12 @@ def search_segment_mixed(
         ]
         for seq in _flavor_sequences(len(flavor_budgets), n_cluster):
             eff_caps = [flavor_budgets[f][1] * scales[f] for f in seq]
+            # Materialize every feasible cut of this flavor assignment first,
+            # so the whole candidate set can be scored as one population:
+            # each cut re-seeds the same cluster spans at different region
+            # sizes, and FastCostModel.prefill_spans batch-fills all those
+            # bodies in one matrix pass per span before the per-cut sweeps.
+            cut_plans = []
             for cuts in _run_cut_candidates(loads, eff_caps, cut_window):
                 bounds = (0, *cuts, n_cluster)
                 runs = list(zip(bounds[:-1], bounds[1:]))
@@ -319,22 +374,48 @@ def search_segment_mixed(
                         seed += alloc_r
                     else:
                         seed += proportional_allocate(loads[lo:hi], budget)
-                if not feasible:
-                    continue
-                ctypes = tuple(ctypes)
+                if feasible:
+                    cut_plans.append((tuple(ctypes), groups, seed))
+            if not cut_plans:
+                continue
+            prefill_spans = getattr(cost, "prefill_spans", None)
+            if prefill_spans is not None and len(cut_plans) > 1:
+                span_ns: dict[tuple, set] = {}
+                for ctypes, _g, seed in cut_plans:
+                    for j, (lo, hi) in enumerate(clustering):
+                        key = (seg_lo + lo, seg_lo + hi, ctypes[j])
+                        span_ns.setdefault(key, set()).add(seed[j])
+                prefill_spans(graph, [
+                    (lo, hi, sorted(ns), ct)
+                    for (lo, hi, ct), ns in span_ns.items()
+                ])
+            for ctypes, groups, seed in cut_plans:
                 sweeper = cost.segment_sweeper(graph, seg_lo, clustering, ctypes)
                 prefill = getattr(sweeper, "prefill", None)
                 if prefill is not None:
                     prefill(seed)
-                for partitions, hint in partition_sets.items():
-                    eval_fn = sweeper(partitions, transition=hint)
+                sweep_batch = getattr(sweeper, "sweep_transitions", None)
+                seed_lats = seed_times = None
+                if sweep_batch is not None:
+                    seed_lats, seed_times = sweep_batch(
+                        seed, list(partition_sets.values())
+                    )
+                for r, (partitions, hint) in enumerate(partition_sets.items()):
                     if mode is RegionMode.UNIFORM:
-                        lat, times = eval_fn(seed)
+                        if seed_lats is not None:
+                            lat, times = float(seed_lats[r]), seed_times[r]
+                        else:
+                            lat, times = sweeper(partitions, transition=hint)(seed)
                         alloc = seed
                     else:
+                        eval_fn = sweeper(partitions, transition=hint)
+                        t0 = (
+                            None if seed_lats is None
+                            else (float(seed_lats[r]), seed_times[r])
+                        )
                         alloc, lat, times = rebalance(
                             seed, eval_fn, paper_strict=paper_strict,
-                            groups=groups,
+                            groups=groups, times0=t0,
                         )
                     if lat < (best.latency if best else INF):
                         best = SegmentResult(

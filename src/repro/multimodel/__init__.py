@@ -42,6 +42,10 @@ from .quota import (  # noqa: F401
     search_partitioned,
     search_partitioned_mixed,
 )
-from .interleave import merged_graph, search_merged  # noqa: F401
+from .interleave import (  # noqa: F401
+    merged_graph,
+    search_merged,
+    search_merged_groups,
+)
 from .baselines import equal_split, time_multiplexed  # noqa: F401
 from .coschedule import co_schedule, describe  # noqa: F401

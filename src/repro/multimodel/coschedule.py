@@ -10,7 +10,6 @@ is by construction at least as good as either fig11 baseline.
 from __future__ import annotations
 
 import time
-import warnings
 
 from ..core.costmodel import CostModel
 from ..core.fastcost import FastCostModel
@@ -19,9 +18,37 @@ from ..core.hw import HardwareModel, validate_region_types
 from ..obs import current_tracer
 from .baselines import time_multiplexed
 from .curves import build_curves
-from .interleave import merged_graph, search_merged
+from .interleave import merged_graph, search_merged, search_merged_groups
 from .quota import package_flavors, search_partitioned, search_partitioned_mixed
 from .spec import ModelSpec
+
+
+def _warm_fits(warm: MultiModelSchedule, flavors) -> bool:
+    """Whether the incumbent's allocation still fits this package's flavor
+    capacities.  A degraded re-solve (chips died under the incumbent) must
+    re-open the full search -- anchoring quota windows to an allocation the
+    surviving package cannot hold would steer the refinement into the dead
+    zone's former capacity."""
+    used: dict[str | None, int] = {}
+    seen: set[tuple] = set()
+    for a in warm.assignments:
+        # merged groups share one schedule and one resource claim
+        key = (id(a.schedule), a.chip_type, a.chips,
+               tuple(a.chip_quota or ()))
+        if key in seen:
+            continue
+        seen.add(key)
+        if a.chip_quota:
+            for t, q in a.chip_quota:
+                used[t] = used.get(t, 0) + q
+        else:
+            used[a.chip_type] = used.get(a.chip_type, 0) + a.chips
+    caps = dict(flavors)
+    if warm.mode == "time_mux":         # whole-package time slices overlap
+        return max(used.values(), default=0) <= max(caps.values(), default=0)
+    return all(used.get(t, 0) <= cap for t, cap in caps.items()) and all(
+        t in caps for t in used
+    )
 
 
 def co_schedule(
@@ -39,18 +66,28 @@ def co_schedule(
     mixed_step: int | None = None,
     switch_cost: bool = False,
     switch_period_s: float = 1.0,
+    warm_start: MultiModelSchedule | None = None,
 ) -> MultiModelSchedule | None:
     """Jointly schedule ``specs`` onto one package.
 
     ``step`` coarsens the quota grid (1 = exhaustive; ``curve_refine``
-    re-samples the coarse curves -- 1D *and* mixed 2D -- around each
-    argmax); ``cost`` lets callers supply a pre-warmed engine (its memo
-    then carries over between calls).  On two-flavor heterogeneous packages
-    ``include_mixed`` also searches quotas that span flavors (one model's
-    pipeline on big *and* little chips); packages with 3+ flavors fall
-    back to single-flavor quotas with a warning and
-    ``meta["mixed_fallback"]``.  ``switch_cost`` charges the time-mux mode
-    for per-slice weight re-deployment (see ``baselines.time_multiplexed``).
+    re-samples the coarse curves -- 1D *and* mixed F-dimensional -- around
+    each argmax); ``cost`` lets callers supply a pre-warmed engine (its
+    memo then carries over between calls).  On heterogeneous packages (any
+    flavor count >= 2) ``include_mixed`` also searches quotas that span
+    flavors -- one model's pipeline on big *and* little chips.
+    ``switch_cost`` charges the time-mux mode for per-slice weight
+    re-deployment (see ``baselines.time_multiplexed``).
+
+    ``warm_start`` (an incumbent :class:`MultiModelSchedule` for the same
+    model set -- e.g. the deployment a serving re-solve is drifting away
+    from) turns the search into a local refinement: curves sample only a
+    window around each model's incumbent chip count
+    (:func:`~.curves.build_curves` ``windows``), and the expensive
+    families the incumbent did not use (spanning quotas, merged
+    pipelines) are skipped.  The result is a valid co-schedule found in a
+    fraction of the cold solve's time, not a certificate of global
+    optimality -- interactive re-solves trade exhaustiveness for latency.
     """
     validate_region_types(hw)
     names = [s.name for s in specs]
@@ -61,19 +98,34 @@ def co_schedule(
     t0 = time.time()
     tr = current_tracer()
     flavors = package_flavors(hw)
+
+    windows = None
+    if warm_start is not None:
+        inc = {a.model: a.chips for a in warm_start.assignments}
+        if set(inc) == set(names) and _warm_fits(warm_start, flavors):
+            windows = inc
+            # Only re-search the families the incumbent landed in (plus
+            # the always-cheap partitioned quotas and time-mux): the warm
+            # re-solve's job is tracking a drifted mix, not re-opening
+            # every scheduling dimension.
+            merged_inc = (warm_start.mode == "merged"
+                          or bool(warm_start.meta.get("merge_groups")))
+            include_merged = include_merged and merged_inc
+            include_mixed = include_mixed and any(
+                a.chip_quota for a in warm_start.assignments
+            )
     with tr.span("coschedule:curves", models=len(specs),
-                 flavors=len(flavors)):
+                 flavors=len(flavors), warm=windows is not None):
         curves = build_curves(specs, cost, flavors, step, paper_strict,
-                              refine=curve_refine)
+                              refine=curve_refine, windows=windows)
 
     candidates: list[tuple[str, MultiModelSchedule]] = []
-    mixed_fallback = None
     with tr.span("coschedule:partitioned"):
         part = search_partitioned(specs, cost, step, paper_strict,
                                   curves=curves)
     if part is not None:
         candidates.append((part.mode, part))
-    if include_mixed and len(flavors) == 2:
+    if include_mixed and len(flavors) >= 2:
         with tr.span("coschedule:partitioned-mixed"):
             mixed = search_partitioned_mixed(
                 specs, cost, step, paper_strict, curves=curves,
@@ -81,21 +133,6 @@ def co_schedule(
             )
         if mixed is not None:
             candidates.append(("partitioned:mixed", mixed))
-    elif include_mixed and len(flavors) > 2:
-        # Spanning quotas cover exactly the big/little pair today; don't let
-        # a 3+-flavor package silently degrade to single-flavor quotas.
-        mixed_fallback = {
-            "n_flavors": len(flavors),
-            "flavors": [t for t, _ in flavors],
-            "reason": "spanning quotas support exactly two flavors; "
-                      "falling back to single-flavor quotas",
-        }
-        warnings.warn(
-            f"{hw.name}: {len(flavors)}-flavor package -- "
-            f"{mixed_fallback['reason']} (the per-cluster mixed DSE itself "
-            "handles any flavor count; only the quota enumeration is 2-flavor)",
-            stacklevel=2,
-        )
     if include_merged and len(specs) > 1:
         with tr.span("coschedule:merged", flavors=len(flavors)):
             for ctype, _cap in flavors:
@@ -104,6 +141,16 @@ def co_schedule(
                 if merged is not None:
                     label = f"{merged.mode}:{ctype}" if ctype else merged.mode
                     candidates.append((label, merged))
+        # Between all-merged and fully-partitioned: merged sub-groups
+        # sharing the package through the quota search (proper partitions
+        # of the model set; gated to small N inside).
+        with tr.span("coschedule:merged-groups"):
+            grouped = search_merged_groups(
+                specs, cost, step=step, paper_strict=paper_strict,
+                curves=curves,
+            )
+        if grouped is not None:
+            candidates.append(("partitioned:merged-groups", grouped))
     if include_time_mux:
         with tr.span("coschedule:time-mux"):
             tm = time_multiplexed(specs, cost, curves=curves,
@@ -118,16 +165,22 @@ def co_schedule(
     best.meta.update({
         "dse_s": time.time() - t0,
         "engine_stats": dict(cost.stats),
+        "warm_start": windows is not None,
         "mode_rates": {
             label: c.weighted_throughput for label, c in candidates
         },
     })
-    if mixed_fallback is not None:
-        best.meta["mixed_fallback"] = mixed_fallback
     if validate:
         graphs = {s.name: s.graph for s in specs}
         if best.mode == "merged":
             mg, _ = merged_graph(specs)
+            graphs[mg.name] = mg
+        by_name = {s.name: s for s in specs}
+        for group in best.meta.get("merge_groups", ()):
+            # Merged sub-groups validate against their group's merged graph
+            # (deterministic rebuild: merged_graph is a pure function of
+            # the members and their default batch scales).
+            mg, _ = merged_graph([by_name[m] for m in group])
             graphs[mg.name] = mg
         type_capacity = dict(flavors)
         validate_multimodel(best, graphs, type_capacity)

@@ -23,17 +23,19 @@ Two extensions for large / heterogeneous packages:
   search's winning candidates live.  ~10x fewer searches on 512+ chip
   packages.
 * **Mixed-flavor curves** (:class:`MixedCurve`): throughput over per-flavor
-  chip budget *pairs*, each point a full mixed-flavor DSE
-  (:func:`repro.core.search.search_mixed`) that may land different clusters
-  of the pipeline on different flavors.  The quota search combines these
-  with the single-flavor envelopes so one model of a co-schedule can span
-  flavors.
+  chip budget *tuples* (any flavor count), each point a full mixed-flavor
+  DSE (:func:`repro.core.search.search_mixed`) that may land different
+  clusters of the pipeline on different flavors.  The quota search combines
+  these with the single-flavor envelopes so one model of a co-schedule can
+  span flavors.
 """
 from __future__ import annotations
 
 import itertools
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from ..core.costmodel import INF, CostModel
 from ..core.graph import LayerGraph, ScopeSchedule
@@ -88,6 +90,16 @@ def candidate_counts(max_chips: int, step: int = 1) -> list[int]:
     return sorted(pts)
 
 
+def warm_counts(center: int, max_chips: int, width: int) -> list[int]:
+    """Warm-start sample window: counts within ``width`` of the incumbent's
+    ``center`` chips, plus {1, max_chips} so the monotone envelope stays
+    defined at every quota (tiny quotas forward-fill from 1; quotas above
+    the window forward-fill from its top)."""
+    lo = max(1, min(center, max_chips) - width)
+    hi = min(max_chips, center + width)
+    return sorted({1, max_chips} | set(range(lo, hi + 1)))
+
+
 def throughput_curve(
     cost: CostModel,
     graph: LayerGraph,
@@ -96,6 +108,7 @@ def throughput_curve(
     step: int = 1,
     paper_strict: bool = False,
     refine: bool = False,
+    counts: list[int] | None = None,
 ) -> ThroughputCurve:
     curve = ThroughputCurve(graph.name, chip_type)
 
@@ -113,7 +126,8 @@ def throughput_curve(
     with current_tracer().span("curve", model=graph.name,
                                flavor=chip_type or "base",
                                max_chips=max_chips, step=step) as sp:
-        for c in candidate_counts(max_chips, step):
+        for c in (counts if counts is not None
+                  else candidate_counts(max_chips, step)):
             sample(c)
         if refine and step > 1:
             # Coarse-to-fine: fill the one-coarse-cell neighborhood of the
@@ -140,24 +154,41 @@ def build_curves(
     step: int = 1,
     paper_strict: bool = False,
     refine: bool = False,
+    windows: dict[str, int] | None = None,
 ) -> dict[tuple[str, str | None], ThroughputCurve]:
-    """Curves for every (model, flavor) pair, all through one shared memo."""
+    """Curves for every (model, flavor) pair, all through one shared memo.
+
+    ``windows`` maps model name -> incumbent chip count (a warm start):
+    each curve samples only :func:`warm_counts` around the incumbent
+    instead of the full grid, making a re-solve's curve pass a handful of
+    (mostly memo-hit) searches.  The envelopes stay defined everywhere --
+    quotas off the window just resolve to the nearest sampled schedule
+    below them -- so the quota enumeration is unchanged, merely anchored
+    near the incumbent allocation.
+    """
     out = {}
     for spec in specs:
+        counts_by_cap: dict[int, list[int]] = {}
+        if windows is not None and spec.name in windows:
+            center = windows[spec.name]
+            for _, cap in flavors:
+                width = max(2, step, cap // 16)
+                counts_by_cap[cap] = warm_counts(center, cap, width)
         for ctype, cap in flavors:
             out[(spec.name, ctype)] = throughput_curve(
-                cost, spec.graph, cap, ctype, step, paper_strict, refine
+                cost, spec.graph, cap, ctype, step, paper_strict, refine,
+                counts=counts_by_cap.get(cap),
             )
     return out
 
 
 # ---------------------------------------------------------------------------
-# Mixed-flavor curves: one model spanning two chip flavors
+# Mixed-flavor curves: one model spanning several chip flavors
 # ---------------------------------------------------------------------------
 
 @dataclass
 class MixedPoint:
-    quota: tuple[int, int]         # chips per flavor, aligned with curve.flavors
+    quota: tuple[int, ...]         # chips per flavor, aligned with curve.flavors
     latency: float
     throughput: float
     schedule: ScopeSchedule | None
@@ -165,43 +196,43 @@ class MixedPoint:
 
 @dataclass
 class MixedCurve:
-    """throughput(c_a, c_b) for one model over two chip flavors."""
+    """throughput(c_0, ..., c_{F-1}) for one model over F chip flavors."""
     model: str
-    flavors: tuple[str | None, str | None]
-    points: dict[tuple[int, int], MixedPoint] = field(default_factory=dict)
+    flavors: tuple[str | None, ...]
+    points: dict[tuple[int, ...], MixedPoint] = field(default_factory=dict)
 
-    def envelope(self, caps, env_a, env_b):
-        """2D monotone envelope combining this curve with the flavors' 1D
-        envelopes.
+    def envelope(self, caps, *envs):
+        """F-dimensional monotone envelope combining this curve with the
+        flavors' 1D envelopes.
 
-        ``table[a][b]`` is the best record reachable with at most ``a``
-        chips of flavor 0 and ``b`` of flavor 1: ``(throughput, kind,
+        ``table[c_0][c_1]...[c_{F-1}]`` is the best record reachable with
+        at most ``c_f`` chips of flavor ``f``: ``(throughput, kind,
         flavor_idx, point)`` where ``kind`` is ``"single"`` (a 1D
         CurvePoint on one flavor) or ``"mixed"`` (a MixedPoint spanning
-        both), or ``None`` when nothing fits.  O(caps[0] * caps[1]) DP.
+        flavors), or ``None`` when nothing fits.  The table is an
+        object-dtype ndarray (``prod(caps + 1)`` cells, one DP pass in C
+        order); 2-flavor callers keep their ``table[a][b]`` indexing.
         """
-        A, B = caps
-
         def better(x, y):
             return y if x is None or (y is not None and y[0] > x[0]) else x
 
-        table = [[None] * (B + 1) for _ in range(A + 1)]
-        for a in range(A + 1):
-            row = table[a]
-            for b in range(B + 1):
-                cand = None
-                if a > 0 and env_a[a] is not None:
-                    cand = better(cand, (env_a[a].throughput, "single", 0, env_a[a]))
-                if b > 0 and env_b[b] is not None:
-                    cand = better(cand, (env_b[b].throughput, "single", 1, env_b[b]))
-                pt = self.points.get((a, b))
-                if pt is not None and pt.schedule is not None:
-                    cand = better(cand, (pt.throughput, "mixed", None, pt))
-                if a > 0:
-                    cand = better(cand, table[a - 1][b])
-                if b > 0:
-                    cand = better(cand, row[b - 1])
-                row[b] = cand
+        shape = tuple(c + 1 for c in caps)
+        table = np.empty(shape, dtype=object)
+        get_point = self.points.get
+        for idx in np.ndindex(shape):
+            cand = None
+            for f, env in enumerate(envs):
+                c = idx[f]
+                if c > 0 and env[c] is not None:
+                    cand = better(cand, (env[c].throughput, "single", f, env[c]))
+            pt = get_point(idx)
+            if pt is not None and pt.schedule is not None:
+                cand = better(cand, (pt.throughput, "mixed", None, pt))
+            for f in range(len(caps)):
+                if idx[f] > 0:
+                    prev = idx[:f] + (idx[f] - 1,) + idx[f + 1:]
+                    cand = better(cand, table[prev])
+            table[idx] = cand
         return table
 
 
@@ -231,46 +262,56 @@ def mixed_throughput_curve(
     cut_window: int = 2,
     refine: bool = False,
 ) -> MixedCurve:
-    """Sample mixed-flavor DSEs over the two flavors' budget grid.
+    """Sample mixed-flavor DSEs over the flavors' budget grid (any F >= 2).
 
-    Only genuinely mixed budgets (both > 0) are sampled -- pure quotas are
-    covered by the 1D curves, and :meth:`MixedCurve.envelope` merges both.
-    ``step`` walks the same coarse grid as the 1D curves (a point's budget
-    pair is a *cap*, so coarse points stay valid under the envelope).
+    Only genuinely mixed budgets (at least two flavors > 0) are sampled --
+    pure quotas are covered by the 1D curves, and :meth:`MixedCurve.envelope`
+    merges both.  With three or more flavors each axis grid also includes 0,
+    so points spanning any flavor *subset* are reachable.  ``step`` walks
+    the same coarse grid as the 1D curves (a point's budget tuple is a
+    *cap*, so coarse points stay valid under the envelope).
 
-    ``refine=True`` is the 2D analogue of the 1D coarse-to-fine curves:
-    after the coarse grid, the one-coarse-cell neighborhood of the argmax
-    budget pair is re-sampled down to step 1.  Small cells are filled
-    exactly (mirroring the 1D pass); cells larger than
-    ``_MAX_REFINE_CELL`` pairs are narrowed by successive halving --
+    ``refine=True`` is the F-dimensional analogue of the 1D coarse-to-fine
+    curves: after the coarse grid, the one-coarse-cell neighborhood of the
+    argmax budget tuple is re-sampled down to step 1.  Small cells are
+    filled exactly (mirroring the 1D pass); cells larger than
+    ``_MAX_REFINE_CELL`` tuples are narrowed by successive halving --
     re-sample the window at a quarter of the current stride around the
     running argmax until stride 1 -- so the pass stays a bounded multiple
     of the coarse grid even at 512-chip flavors.
     """
-    assert len(flavors) == 2, "mixed curves span exactly two flavors"
-    (ta, cap_a), (tb, cap_b) = flavors
-    curve = MixedCurve(graph.name, (ta, tb))
+    assert len(flavors) >= 2, "mixed curves need at least two flavors"
+    types = tuple(t for t, _ in flavors)
+    caps = [cap for _, cap in flavors]
+    F = len(flavors)
+    curve = MixedCurve(graph.name, types)
 
-    def sample(qa: int, qb: int) -> None:
+    def sample(quota: tuple[int, ...]) -> None:
         sched = search_mixed(
-            graph, cost, [(ta, qa), (tb, qb)],
+            graph, cost, [(t, q) for t, q in zip(types, quota) if q > 0],
             paper_strict=paper_strict, cut_window=cut_window,
             include_single_flavor=False,
         )
         if sched is None or sched.latency == INF:
-            curve.points[(qa, qb)] = MixedPoint((qa, qb), INF, 0.0, None)
+            curve.points[quota] = MixedPoint(quota, INF, 0.0, None)
             return
         sched.meta["m_samples"] = cost.m
-        curve.points[(qa, qb)] = MixedPoint(
-            (qa, qb), sched.latency, cost.m / sched.latency, sched
+        curve.points[quota] = MixedPoint(
+            quota, sched.latency, cost.m / sched.latency, sched
         )
 
+    # Per-axis sample grids: the 1D candidate counts, plus 0 when a third
+    # flavor exists (a point may skip flavors; with F == 2 skipping either
+    # flavor degenerates to a pure quota the 1D curves already cover).
+    grids = [
+        ([0] if F > 2 else []) + candidate_counts(cap, step) for cap in caps
+    ]
     with current_tracer().span("curve:mixed", model=graph.name,
-                               flavors=f"{ta}/{tb}", step=step) as sp:
-        for qa, qb in itertools.product(
-            candidate_counts(cap_a, step), candidate_counts(cap_b, step)
-        ):
-            sample(qa, qb)
+                               flavors="/".join(str(t) for t in types),
+                               step=step) as sp:
+        for quota in itertools.product(*grids):
+            if sum(1 for q in quota if q > 0) >= 2:
+                sample(quota)
 
         s = step
         while refine and s > 1:
@@ -282,11 +323,18 @@ def mixed_throughput_curve(
             if best is None:
                 break
             span = s - 1
-            stride = 1 if (2 * span + 1) ** 2 <= _MAX_REFINE_CELL else max(2, s // 4)
-            for qa in _refine_grid(best.quota[0], span, cap_a, stride):
-                for qb in _refine_grid(best.quota[1], span, cap_b, stride):
-                    if (qa, qb) not in curve.points:
-                        sample(qa, qb)
+            stride = (
+                1 if (2 * span + 1) ** F <= _MAX_REFINE_CELL
+                else max(2, s // 4)
+            )
+            for quota in itertools.product(*[
+                _refine_grid(best.quota[f], span, caps[f], stride)
+                for f in range(F)
+            ]):
+                if quota not in curve.points and (
+                    sum(1 for q in quota if q > 0) >= 2
+                ):
+                    sample(quota)
             if stride == 1:
                 break
             s = stride

@@ -25,6 +25,7 @@ from dataclasses import replace
 from ..core.costmodel import INF, CostModel
 from ..core.graph import (
     MM_MERGED,
+    MM_PARTITIONED,
     LayerGraph,
     ModelAssignment,
     MultiModelSchedule,
@@ -62,6 +63,129 @@ def merged_graph(specs, scales=None) -> tuple[LayerGraph, list[int]]:
         f"{s.name}x{k}" if k > 1 else s.name for s, k in zip(specs, scales)
     )
     return LayerGraph(name, tuple(layers)), list(scales)
+
+
+def _set_partitions(items: list):
+    """All partitions of ``items`` into non-empty groups (Bell enumeration;
+    callers gate on small N, so the growth is harmless)."""
+    if not items:
+        yield []
+        return
+    first, rest = items[0], items[1:]
+    for part in _set_partitions(rest):
+        for i in range(len(part)):
+            yield part[:i] + [[first] + part[i]] + part[i + 1:]
+        yield [[first]] + part
+
+
+def search_merged_groups(
+    specs,
+    cost: CostModel,
+    step: int = 1,
+    paper_strict: bool = False,
+    curves=None,
+    max_models: int = 4,
+) -> MultiModelSchedule | None:
+    """Partitioned quotas over *merged sub-groups* of the model set.
+
+    The all-merged pipeline (:func:`search_merged`) and fully-partitioned
+    quotas (:func:`~.quota.search_partitioned`) are the two extremes of a
+    spectrum: any partition of the model set into groups -- each group
+    merged into one pipeline, the groups sharing the package through the
+    quota search -- is a legal co-schedule.  This enumerates the proper
+    partitions (at least two groups, at least one of size >= 2; the
+    extremes are already separate ``co_schedule`` candidates) for small
+    model sets and returns the best, so the co-scheduler's result is by
+    construction at least as good as either extreme.
+
+    A merged group enters the quota search as a pseudo-model whose curve
+    points are beat rates; its traffic weight is ``max_i(w_i / scale_i)``
+    -- the beats each mix unit demands -- so the quota search's
+    ``min(tp / weight)`` objective prices the group exactly.  Group curves
+    are cached across partitions (the same pair appears in several), and
+    singleton models reuse the caller's curves; everything flows through
+    the one shared FastCostModel memo.
+    """
+    from .curves import throughput_curve
+    from .quota import package_flavors, search_partitioned
+    from .spec import ModelSpec
+
+    hw = cost.hw
+    n = len(specs)
+    if n < 3 or n > max_models:
+        return None
+    flavors = package_flavors(hw)
+    group_cache: dict[tuple[int, ...], tuple] = {}
+    curve_cache: dict[tuple[str, str | None], object] = {}
+    best = None
+    for part in _set_partitions(list(range(n))):
+        if len(part) < 2 or all(len(g) == 1 for g in part):
+            continue
+        pseudo, expand = [], []
+        for g in part:
+            if len(g) == 1:
+                spec = specs[g[0]]
+                pseudo.append(spec)
+                expand.append([(spec, 1.0)])
+            else:
+                key = tuple(sorted(g))
+                ent = group_cache.get(key)
+                if ent is None:
+                    members = [specs[i] for i in g]
+                    mg, scales = merged_graph(members)
+                    w_unit = max(
+                        m.weight / s for m, s in zip(members, scales)
+                    )
+                    ent = group_cache[key] = (
+                        ModelSpec(mg, w_unit), members, scales
+                    )
+                pseudo.append(ent[0])
+                expand.append(list(zip(ent[1], ent[2])))
+        pcurves = {}
+        for s in pseudo:
+            for ctype, cap in flavors:
+                ckey = (s.name, ctype)
+                if curves is not None and ckey in curves:
+                    pcurves[ckey] = curves[ckey]
+                    continue
+                c = curve_cache.get(ckey)
+                if c is None:
+                    c = curve_cache[ckey] = throughput_curve(
+                        cost, s.graph, cap, ctype, step, paper_strict
+                    )
+                pcurves[ckey] = c
+        res = search_partitioned(pseudo, cost, step, paper_strict,
+                                 curves=pcurves)
+        if res is None:
+            continue
+        assignments = []
+        for a, members in zip(res.assignments, expand):
+            for m, scale in members:
+                assignments.append(ModelAssignment(
+                    model=m.name, weight=m.weight, chips=a.chips,
+                    schedule=a.schedule, chip_type=a.chip_type,
+                    samples_per_beat=float(scale),
+                ))
+        assignments = tuple(assignments)
+        lam = mix_rate(assignments)
+        wt = lam * sum(s.weight for s in specs)
+        if best is None or wt > best.weighted_throughput:
+            best = MultiModelSchedule(
+                package=hw.name,
+                chips=hw.chips,
+                mode=MM_PARTITIONED,
+                assignments=assignments,
+                mix_rate=lam,
+                weighted_throughput=wt,
+                meta={
+                    "family": "partitioned_merged_groups",
+                    "merge_groups": [
+                        [specs[i].name for i in g] for g in part
+                        if len(g) > 1
+                    ],
+                },
+            )
+    return best
 
 
 def search_merged(

@@ -31,6 +31,8 @@ from __future__ import annotations
 import itertools
 import math
 
+import numpy as np
+
 from ..core.costmodel import INF, CostModel
 from ..core.graph import (
     MM_PARTITIONED,
@@ -68,35 +70,6 @@ def _flavor_splits(cap: int, parts: int, step: int):
         yield [c * step + (rem if i == 0 else 0) for i, c in enumerate(comp)]
 
 
-def _enumerate_quotas(
-    n_models: int, flavors: list[tuple[str | None, int]], step: int = 1
-):
-    """Yield ``[(flavor_idx, chips), ...]`` per model: every assignment of
-    models to flavors x every split of each flavor's chips among its models
-    (on the ``step`` quota grid).
-
-    Splits are compositions of the full pool; quotas that would be better
-    served by fewer chips are handled by the curves' monotone envelope
-    (idle chips), so exact-sum compositions lose no generality.
-    """
-    for type_assign in itertools.product(range(len(flavors)), repeat=n_models):
-        groups: dict[int, list[int]] = {}
-        for i, t in enumerate(type_assign):
-            groups.setdefault(t, []).append(i)
-        if any(len(g) > flavors[t][1] for t, g in groups.items()):
-            continue
-        per_flavor = [
-            (t, g, list(_flavor_splits(flavors[t][1], len(g), step)))
-            for t, g in groups.items()
-        ]
-        for combo in itertools.product(*[opts for _, _, opts in per_flavor]):
-            quota = [None] * n_models
-            for (t, g, _), comp in zip(per_flavor, combo):
-                for i, c in zip(g, comp):
-                    quota[i] = (t, c)
-            yield quota
-
-
 def search_partitioned(
     specs,
     cost: CostModel,
@@ -104,7 +77,17 @@ def search_partitioned(
     paper_strict: bool = False,
     curves=None,
 ) -> MultiModelSchedule | None:
-    """Best spatial partitioning of the package across the specs."""
+    """Best spatial partitioning of the package across the specs.
+
+    The quota enumeration is evaluated as array programs, not a per-candidate
+    Python loop: for each assignment of models to flavors, every flavor's
+    chip splits are scored as one gather over the curves' envelope tables
+    (per-split group minimum of weighted throughput).  The mix rate of a
+    full candidate is the minimum across flavors, and the per-flavor maxima
+    are independent, so the best split combination is recovered per flavor
+    -- picking, for parity with the scalar scan this replaces, the *first*
+    split on each flavor's grid that achieves the optimum.
+    """
     hw = cost.hw
     flavors = package_flavors(hw)
     if curves is None:
@@ -113,22 +96,63 @@ def search_partitioned(
         (name, ctype): curve.envelope(dict(flavors)[ctype])
         for (name, ctype), curve in curves.items()
     }
+    # Weighted-throughput lookup tables over 0..cap chips, one per
+    # (model, flavor): the whole quota grid reads from these via fancy
+    # indexing instead of per-candidate attribute chasing.
+    tp = {
+        (name, ctype): np.array(
+            [0.0 if pt is None else pt.throughput for pt in env],
+            dtype=np.float64,
+        )
+        for (name, ctype), env in envelopes.items()
+    }
     n = len(specs)
     best_lam, best_quota, n_candidates = -1.0, None, 0
-    for quota in _enumerate_quotas(n, flavors, step):
-        n_candidates += 1
-        lam = INF
-        picks = []
-        for spec, (t, c) in zip(specs, quota):
+    for type_assign in itertools.product(range(len(flavors)), repeat=n):
+        groups: dict[int, list[int]] = {}
+        for i, t in enumerate(type_assign):
+            groups.setdefault(t, []).append(i)
+        if any(len(g) > flavors[t][1] for t, g in groups.items()):
+            continue
+        # Per flavor: splits matrix (n_splits x group) and the per-split
+        # group minimum of throughput/weight, in one vectorized pass.
+        per_flavor = []
+        count = 1
+        for t, g in groups.items():
+            splits = np.array(
+                list(_flavor_splits(flavors[t][1], len(g), step)),
+                dtype=np.int64,
+            )
             ctype = flavors[t][0]
-            pt = envelopes[(spec.name, ctype)][c]
-            tp = pt.throughput if pt else 0.0
-            picks.append((ctype, pt))
-            lam = min(lam, tp / spec.weight)
-            if lam <= best_lam:
-                break
+            vals = np.full(len(splits), INF)
+            for col, i in enumerate(g):
+                np.minimum(
+                    vals,
+                    tp[(specs[i].name, ctype)][splits[:, col]]
+                    / specs[i].weight,
+                    out=vals,
+                )
+            per_flavor.append((t, g, splits, vals))
+            count *= len(splits)
+        n_candidates += count
+        # The candidate value is min over flavors; flavors split
+        # independently, so the achievable optimum is the min of the
+        # per-flavor maxima.
+        lam = min(float(vals.max()) for _, _, _, vals in per_flavor)
         if lam > best_lam:
-            best_lam, best_quota = lam, picks
+            best_lam = lam
+            picks = [None] * n
+            for t, g, splits, vals in per_flavor:
+                # First split achieving >= lam: reproduces the scalar
+                # product scan's pick (its first strict improvement to the
+                # optimum is the lexicographically first combination whose
+                # every flavor meets the bottleneck rate).
+                row = int(np.argmax(vals >= lam))
+                ctype = flavors[t][0]
+                for col, i in enumerate(g):
+                    c = int(splits[row, col])
+                    picks[i] = (ctype, envelopes[(specs[i].name, ctype)][c])
+            best_quota = picks
     if best_quota is None or best_lam <= 0.0:
         return None
     assignments = tuple(
@@ -192,27 +216,29 @@ def search_partitioned_mixed(
     cut_window: int = 2,
     mixed_refine: bool = False,
 ) -> MultiModelSchedule | None:
-    """Partitioned quotas where a model's quota may span two chip flavors.
+    """Partitioned quotas where a model's quota may span chip flavors.
 
-    Requires a heterogeneous package with exactly two flavors (the
-    big/little setting of SCAR / Odema et al.; more flavors fall back to
-    ``search_partitioned``'s single-flavor quotas -- ``co_schedule`` makes
-    that fallback explicit with a warning and result meta).  ``mixed_step``
-    walks the mixed curves' budget grid (default: quarter-capacity steps --
-    each point is a full mixed DSE, so the grid is deliberately coarser
-    than the single-flavor curves'); ``mixed_refine`` adds the 2D
-    coarse-to-fine pass around each curve's argmax
-    (:func:`~.curves.mixed_throughput_curve`).
+    Works on any heterogeneous package with two or more flavors (the
+    big/little setting of SCAR / Odema et al. is the two-flavor case):
+    per-flavor chip splits are enumerated independently per flavor and
+    every split combination is scored as one array program over the models'
+    F-dimensional mixed envelopes.  ``mixed_step`` walks the mixed curves'
+    budget grid (default: quarter-capacity steps -- each point is a full
+    mixed DSE, so the grid is deliberately coarser than the single-flavor
+    curves'); ``mixed_refine`` adds the F-dimensional coarse-to-fine pass
+    around each curve's argmax (:func:`~.curves.mixed_throughput_curve`).
     """
     hw = cost.hw
     flavors = package_flavors(hw)
-    if len(flavors) != 2:
+    F = len(flavors)
+    if F < 2:
         return None
-    (ta, cap_a), (tb, cap_b) = flavors
+    types = [t for t, _ in flavors]
+    caps = [cap for _, cap in flavors]
     if curves is None:
         curves = build_curves(specs, cost, flavors, step, paper_strict)
     if mixed_step is None:
-        mixed_step = max(1, min(cap_a, cap_b) // 4)
+        mixed_step = max(1, min(caps) // 4)
     if mixed_curves is None:
         mixed_curves = {
             spec.name: mixed_throughput_curve(
@@ -224,42 +250,49 @@ def search_partitioned_mixed(
         }
     env2 = {
         spec.name: mixed_curves[spec.name].envelope(
-            (cap_a, cap_b),
-            curves[(spec.name, ta)].envelope(cap_a),
-            curves[(spec.name, tb)].envelope(cap_b),
+            tuple(caps),
+            *[curves[(spec.name, t)].envelope(c) for t, c in flavors],
         )
         for spec in specs
     }
     n = len(specs)
-    # The enumeration is the cross-product of the two flavors' weak splits
-    # (O((cap/step + 1)^(2(n-1))) candidates): coarsen the quota grid until
+    # The enumeration is the cross-product of the flavors' weak splits
+    # (O((cap/step + 1)^(F(n-1))) candidates): coarsen the quota grid until
     # it is tractable -- the envelopes' "at most" semantics keep every
     # coarse quota valid, just less finely optimized (same policy as
     # _flavor_splits' step grid).
     quota_step = max(1, step)
-    while (
-        math.comb(cap_a // quota_step + n - 1, n - 1)
-        * math.comb(cap_b // quota_step + n - 1, n - 1)
-        > _MAX_SPLIT_CANDIDATES
-    ):
+    while math.prod(
+        math.comb(cap // quota_step + n - 1, n - 1) for cap in caps
+    ) > _MAX_SPLIT_CANDIDATES:
         quota_step *= 2
-    best_lam, best_picks, n_candidates = -1.0, None, 0
-    for split_a in _weak_splits(cap_a, n, quota_step):
-        for split_b in _weak_splits(cap_b, n, quota_step):
-            n_candidates += 1
-            lam = INF
-            picks = []
-            for spec, a, b in zip(specs, split_a, split_b):
-                rec = env2[spec.name][a][b]
-                tp = rec[0] if rec is not None else 0.0
-                picks.append(rec)
-                lam = min(lam, tp / spec.weight)
-                if lam <= best_lam:
-                    break
-            if lam > best_lam:
-                best_lam, best_picks = lam, picks
-    if best_picks is None or best_lam <= 0.0:
+    # One splits matrix per flavor; the whole cross-product is scored as a
+    # single F-dimensional tensor: per model, gather its envelope value at
+    # every (split_0, ..., split_{F-1}) combination with np.ix_, take the
+    # weighted min across models, and let the flat argmax (C order = the
+    # nested-loop enumeration order this replaces, so first-occurrence
+    # tie-breaks match) name the winning combination.
+    splits = [
+        np.array(list(_weak_splits(caps[f], n, quota_step)), dtype=np.int64)
+        for f in range(F)
+    ]
+    n_candidates = math.prod(len(s) for s in splits)
+    val = None
+    for i, spec in enumerate(specs):
+        env_tp = np.frompyfunc(
+            lambda r: 0.0 if r is None else r[0], 1, 1
+        )(env2[spec.name]).astype(np.float64) / spec.weight
+        t = env_tp[np.ix_(*[splits[f][:, i] for f in range(F)])]
+        val = t if val is None else np.minimum(val, t, out=val)
+    flat = int(np.argmax(val))
+    best_lam = float(val.flat[flat])
+    if best_lam <= 0.0:
         return None
+    combo = np.unravel_index(flat, val.shape)
+    best_picks = [
+        env2[spec.name][tuple(int(splits[f][combo[f], i]) for f in range(F))]
+        for i, spec in enumerate(specs)
+    ]
     assignments = []
     for spec, rec in zip(specs, best_picks):
         _tp, kind, fidx, pt = rec
@@ -269,11 +302,13 @@ def search_partitioned_mixed(
                 schedule=pt.schedule, chip_type=flavors[fidx][0],
             ))
         else:
-            qa, qb = pt.quota
             assignments.append(ModelAssignment(
-                model=spec.name, weight=spec.weight, chips=qa + qb,
+                model=spec.name, weight=spec.weight,
+                chips=int(sum(pt.quota)),
                 schedule=pt.schedule,
-                chip_quota=((ta, qa), (tb, qb)),
+                chip_quota=tuple(
+                    (t, int(q)) for t, q in zip(types, pt.quota) if q
+                ),
             ))
     assignments = tuple(assignments)
     lam = mix_rate(assignments)

@@ -194,7 +194,16 @@ def allocate_submeshes(
     front = {f: 0 for f, _ in counts}
     back = {f: len(zones[f]) for f, _ in counts}
     out: dict[str, dict[str | None, list[tuple[int, int]]]] = {}
+    shared: dict[tuple, dict[str | None, list[tuple[int, int]]]] = {}
     for a in mm.assignments:
+        # Merged sub-group members share one schedule *and* one resource
+        # claim; both must match before they share the carved region.
+        share_key = (id(a.schedule), a.chip_type, a.chips,
+                     tuple(a.chip_quota or ()))
+        prior = shared.get(share_key)
+        if prior is not None:
+            out[a.model] = prior
+            continue
         needs = list(a.chip_quota) if a.chip_quota else [(a.chip_type, a.chips)]
         live = [n for n in needs if n[1] > 0]
         spanning = len(live) > 1
@@ -216,6 +225,7 @@ def allocate_submeshes(
                 got[f] = zone[front[f]:front[f] + c]    # zone front
                 front[f] += c
         out[a.model] = got
+        shared[share_key] = got
     return out
 
 

@@ -395,3 +395,47 @@ class TestSolutionValidation:
                           strategy="full_pipeline")
         assert not sol.feasible
         assert sol.throughput == 0.0
+
+
+class TestWarmStart:
+    """options.warm_start: interactive re-solves seeded by an incumbent."""
+
+    def test_coschedule_drift_refinement(self):
+        prob = scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16)
+        sol = scope.solve(prob)
+        drifted = scope.problem("alexnet:3,resnet18:1", "mcm16", m_samples=16)
+        cold = scope.solve(drifted)
+        warm = scope.solve(drifted.with_options(warm_start=sol))
+        assert warm.feasible
+        assert warm.multi.meta.get("warm_start") is True
+        assert cold.multi.meta.get("warm_start") is False
+        # a local refinement, not a cold-quality regression
+        assert warm.weighted_throughput >= 0.9 * cold.weighted_throughput
+
+    def test_single_model_warm_matches_cold(self):
+        prob = scope.problem("resnet18", "mcm16", m_samples=16)
+        cold = scope.solve(prob)
+        warm = scope.solve(prob.with_options(warm_start=cold))
+        # the window contains the incumbent's segment count, and the sweep
+        # is deterministic: the warm solve lands on the same schedule
+        assert warm.schedule.latency == cold.schedule.latency
+        assert warm.schedule.segments == cold.schedule.segments
+
+    def test_warm_rejected_when_incumbent_does_not_fit(self):
+        big = scope.solve(scope.problem(
+            "alexnet:1,resnet18:1", "mcm64", m_samples=16))
+        small = scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16)
+        warm = scope.solve(small.with_options(warm_start=big))
+        # the 64-chip incumbent cannot anchor a 16-chip package: the solve
+        # must fall back to the full (cold) search
+        assert warm.feasible
+        assert warm.multi.meta.get("warm_start") is False
+        cold = scope.solve(small)
+        assert warm.weighted_throughput == cold.weighted_throughput
+
+    def test_warm_start_excluded_from_fingerprint(self):
+        prob = scope.problem("alexnet:1,resnet18:1", "mcm16", m_samples=16)
+        sol = scope.solve(prob)
+        fp_cold = scope.problem_fingerprint(prob)
+        fp_warm = scope.problem_fingerprint(prob.with_options(warm_start=sol))
+        assert fp_cold == fp_warm

@@ -396,3 +396,78 @@ class TestMemoSoundness:
         assert close(lr, lf1)
         for a, b in zip(tr, tf):
             assert close(a, b)
+
+
+class TestBatchedPopulationParity:
+    """cluster_population (batched array program) vs the scalar memo path.
+
+    The tentpole contract: batching is an execution strategy, not a
+    semantic -- the batched evaluator must be *bit-identical* to scoring
+    the same rows one at a time through the scalar memoized path, across
+    region flavors, explicit/hint partition specs and EP expert layers,
+    and must leave the memo in the same warmed state.
+    """
+
+    @staticmethod
+    def _random_rows(g, hw, rng, k_rows):
+        from repro.core.costmodel import SAME_FLAVOR
+
+        L = len(g)
+        flavors = [t.name for t in hw.region_types] or [None]
+        rows = []
+        for _ in range(k_rows):
+            lo = rng.randrange(0, L)
+            hi = rng.randint(lo + 1, L)
+            span = hi - lo
+            ctype = rng.choice(flavors)
+            if rng.random() < 0.5:
+                spec = (rng.randint(0, span), rng.random() < 0.5)
+            else:
+                t = rng.randint(0, span)
+                parts = ["WSP"] * t + ["ISP"] * (span - t)
+                if rng.random() < 0.5:
+                    for d, layer in enumerate(g.layers[lo:hi]):
+                        if layer.n_experts > 1:
+                            parts[d] = "EP"
+                spec = tuple(parts)
+            n = rng.randint(1, max(2, hw.chips // 2))
+            if hi < L and rng.random() < 0.8:
+                next_p0 = rng.choice(["WSP", "ISP"])
+                next_n = rng.randint(1, 8)
+                next_ctype = rng.choice([SAME_FLAVOR] + flavors)
+            else:
+                next_p0, next_n, next_ctype = None, None, SAME_FLAVOR
+            rows.append((lo, hi, spec, n, next_p0, next_n, ctype, next_ctype))
+        return rows
+
+    @given(
+        arch=st.sampled_from(
+            ["cnn:alexnet", "cnn:resnet18", "lm:granite-moe-1b-a400m"]
+        ),
+        hetero=st.booleans(),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_population_matches_scalar_bitwise(self, arch, hetero, seed):
+        kind, name = arch.split(":")
+        g = (get_cnn(name) if kind == "cnn"
+             else lm_graph(get_smoke_config(name), seq_len=256))
+        hw = mcm_hetero(16) if hetero else mcm_table_iii(16)
+        rng = random.Random(seed)
+        rows = self._random_rows(g, hw, rng, 40)
+        fast_batched = FastCostModel(hw, m_samples=16)
+        fast_scalar = FastCostModel(hw, m_samples=16)
+        got = fast_batched.cluster_population(g, rows)
+        # The base-class implementation loops the scalar memoized
+        # cluster_time -- the exact path the batched evaluator replaces.
+        want = CostModel.cluster_population(fast_scalar, g, rows)
+        assert got.tolist() == want.tolist()
+        # and rtol-parity against the reference engine
+        ref = CostModel(hw, m_samples=16)
+        for a, b in zip(got, ref.cluster_population(g, rows)):
+            assert close(float(a), float(b))
+        # the batch warmed the memo: a repeat is pure cache hits
+        misses0 = fast_batched.stats["cluster_computes"]
+        again = fast_batched.cluster_population(g, rows)
+        assert again.tolist() == got.tolist()
+        assert fast_batched.stats["cluster_computes"] == misses0

@@ -574,51 +574,128 @@ class TestSeamAccounting:
         assert all(v == 0 for v in report["seam_crossings"].values())
 
 
-# ------------------------------------------------- 3+ flavor fallback
+# ------------------------------------------------- 3+ flavor spanning quotas
 
-class TestThreeFlavorFallback:
+class TestThreeFlavorMixed:
     def test_preset_registered_and_valid(self):
         hw = get_hw("mcm48_hetero3")
         assert [t.name for t in hw.region_types] == ["big", "mid", "little"]
         assert sum(t.chips for t in hw.region_types) == 48
 
-    def test_fallback_warns_and_records_meta(self):
+    def test_three_flavor_spanning_quotas_solve(self):
         hw = mcm_hetero3(6)    # 2 chips per flavor: tiny regression case
         specs = [
             ModelSpec(tiny_graph("a", 1.0), 1.0),
             ModelSpec(tiny_graph("b", 2.0), 1.0),
         ]
         cost = FastCostModel(hw, m_samples=16)
-        with pytest.warns(UserWarning, match="single-flavor quotas"):
-            co = co_schedule(specs, hw, cost=cost)
-        assert co is not None
-        assert co.meta["mixed_fallback"]["n_flavors"] == 3
-        # the spanning family never ran: no partitioned:mixed mode rate
-        assert "partitioned:mixed" not in co.meta["mode_rates"]
-        # and search_partitioned_mixed's own fallback stays explicit (None)
-        assert search_partitioned_mixed(specs, cost) is None
+        mixed = search_partitioned_mixed(specs, cost)
+        assert mixed is not None
+        assert mixed.meta["family"] == "partitioned_mixed"
+        # k-flavor spanning quotas subsume single-flavor quotas: the mixed
+        # envelope contains every single-flavor point, so the result is at
+        # least as good as the best single-flavor partitioning.
+        part = search_partitioned(specs, cost)
+        if part is not None:
+            assert (
+                mixed.weighted_throughput
+                >= part.weighted_throughput - 1e-12
+            )
+        for a in mixed.assignments:
+            if a.chip_quota:
+                assert sum(c for _, c in a.chip_quota) == a.chips
 
-    def test_no_warning_when_mixed_disabled(self):
+    def test_coschedule_runs_mixed_without_warning(self):
         import warnings as _warnings
 
         hw = mcm_hetero3(6)
-        specs = [ModelSpec(tiny_graph("a", 1.0), 1.0)]
+        specs = [
+            ModelSpec(tiny_graph("a", 1.0), 1.0),
+            ModelSpec(tiny_graph("b", 2.0), 1.0),
+        ]
         with _warnings.catch_warnings():
             _warnings.simplefilter("error")
-            co = co_schedule(specs, hw, include_mixed=False)
-        assert co is not None and "mixed_fallback" not in co.meta
+            co = co_schedule(specs, hw)
+        assert co is not None
+        assert "mixed_fallback" not in co.meta
+        # the spanning family ran and is listed among the mode rates
+        assert "partitioned:mixed" in co.meta["mode_rates"]
+        # co_schedule picks the max, so it is >= the best single flavor
+        assert co.weighted_throughput >= max(
+            co.meta["mode_rates"].values()
+        ) - 1e-12
 
-    def test_facade_surfaces_fallback(self):
+    def test_facade_three_flavor_mixed(self):
         from repro import scope
 
         hw = mcm_hetero3(6)
         g1, g2 = tiny_graph("a", 1.0), tiny_graph("b", 2.0)
-        with pytest.warns(UserWarning, match="single-flavor quotas"):
-            sol = scope.solve(scope.problem(
-                scope.WorkloadSpec.graphs([g1, g2]), hw,
-                strategy="coschedule",
-            ))
-        assert sol.diagnostics["mixed_fallback"]["n_flavors"] == 3
+        sol = scope.solve(scope.problem(
+            scope.WorkloadSpec.graphs([g1, g2]), hw,
+            strategy="coschedule",
+        ))
+        assert sol.multi is not None
+        assert "mixed_fallback" not in sol.diagnostics
+        assert "partitioned:mixed" in sol.diagnostics["mode_rates"]
+
+
+# ------------------------------------------------- merged sub-groups
+
+class TestMergedGroups:
+    def _specs(self):
+        return [
+            ModelSpec(tiny_graph("a", 1.0), 2.0),
+            ModelSpec(tiny_graph("b", 2.0), 1.0),
+            ModelSpec(tiny_graph("c", 0.5), 1.0),
+        ]
+
+    def test_groups_share_schedule_and_validate(self):
+        from repro.multimodel import search_merged_groups
+
+        hw = mcm_table_iii(8)
+        specs = self._specs()
+        cost = FastCostModel(hw, m_samples=16)
+        mm = search_merged_groups(specs, cost)
+        assert mm is not None
+        assert mm.mode == MM_PARTITIONED
+        groups = mm.meta["merge_groups"]
+        assert groups and all(len(g) >= 2 for g in groups)
+        # group members share one schedule object over one chip region
+        for group in groups:
+            scheds = {
+                id(a.schedule) for a in mm.assignments if a.model in group
+            }
+            assert len(scheds) == 1
+        # shared-schedule chips count once against capacity
+        graphs = {s.name: s.graph for s in specs}
+        by_name = {s.name: s for s in specs}
+        for group in groups:
+            mg, _ = merged_graph([by_name[m] for m in group])
+            graphs[mg.name] = mg
+        validate_multimodel(mm, graphs, {None: hw.chips})
+
+    def test_coschedule_at_least_both_extremes(self):
+        hw = mcm_table_iii(8)
+        specs = self._specs()
+        cost = FastCostModel(hw, m_samples=16)
+        co = co_schedule(specs, hw, cost=cost)
+        assert co is not None
+        part = search_partitioned(specs, cost)
+        merged = search_merged(specs, cost)
+        for extreme in (part, merged):
+            if extreme is not None:
+                assert (
+                    co.weighted_throughput
+                    >= extreme.weighted_throughput - 1e-12
+                )
+
+    def test_two_models_skip_groups(self):
+        from repro.multimodel import search_merged_groups
+
+        hw = mcm_table_iii(8)
+        specs = self._specs()[:2]
+        cost = FastCostModel(hw, m_samples=16)
+        assert search_merged_groups(specs, cost) is None
 
 
 # ------------------------------------------------------ batched seed fill
@@ -653,3 +730,75 @@ class TestBatchedSeedFill:
             cell_l = lazy._cluster_cell_hint(gdl, 0, L, k, False, None)
             body_l = lazy._cluster_body(cell_l[_STATIC], 33)
             assert cell_b[_BODY][33] == body_l, k
+
+
+class TestKFlavorEnvelopeParity:
+    """The F-dimensional MixedCurve DP vs its 2-flavor special case.
+
+    The k-flavor generalization must be an exact superset: embedding a
+    2-flavor problem as a 3-flavor one whose third flavor has zero
+    capacity yields cell-for-cell the same winning (throughput, kind)
+    records, and the 2-flavor candidate ordering (tie-breaks included)
+    is unchanged.
+    """
+
+    @staticmethod
+    def _env(tps):
+        from repro.multimodel.curves import CurvePoint, ThroughputCurve
+
+        sentinel = object()
+        curve = ThroughputCurve("m", None, {
+            c: CurvePoint(c, 1.0 / tp, tp, sentinel)
+            for c, tp in tps.items()
+        })
+        return curve.envelope(max(tps))
+
+    def test_degenerate_third_flavor_matches_two_flavor(self):
+        from repro.multimodel.curves import MixedCurve, MixedPoint
+
+        env_big = self._env({1: 2.0, 2: 5.0, 3: 4.0})
+        env_little = self._env({1: 1.0, 2: 5.0, 3: 6.0})
+        sentinel = object()
+        pts2 = {
+            (1, 1): (0.2, 5.5), (2, 1): (0.1, 7.0), (1, 3): (0.5, 5.8),
+        }
+        curve2 = MixedCurve("m", ("big", "little"), {
+            q: MixedPoint(q, lat, tp, sentinel)
+            for q, (lat, tp) in pts2.items()
+        })
+        curve3 = MixedCurve("m", ("big", "little", "ghost"), {
+            q + (0,): MixedPoint(q + (0,), lat, tp, sentinel)
+            for q, (lat, tp) in pts2.items()
+        })
+        table2 = curve2.envelope((3, 3), env_big, env_little)
+        table3 = curve3.envelope((3, 3, 0), env_big, env_little, [None])
+        for a in range(4):
+            for b in range(4):
+                r2, r3 = table2[a][b], table3[a][b][0]
+                assert (r2 is None) == (r3 is None), (a, b)
+                if r2 is not None:
+                    assert r2[0] == r3[0], (a, b)      # same throughput
+                    assert r2[1] == r3[1], (a, b)      # same kind
+                    if r2[1] == "single":
+                        assert r2[2] == r3[2], (a, b)  # same flavor pick
+
+    def test_ties_break_identically(self):
+        """Equal-throughput single vs mixed candidates pick the same winner
+        in both formulations (candidate order: singles in flavor order,
+        then mixed, then predecessors in flavor order)."""
+        from repro.multimodel.curves import MixedCurve, MixedPoint
+
+        env_a = self._env({1: 4.0})
+        env_b = self._env({1: 4.0})
+        sentinel = object()
+        mixed = {(1, 1): MixedPoint((1, 1), 0.25, 4.0, sentinel)}
+        curve2 = MixedCurve("m", ("big", "little"), dict(mixed))
+        curve3 = MixedCurve("m", ("big", "little", "ghost"), {
+            (1, 1, 0): MixedPoint((1, 1, 0), 0.25, 4.0, sentinel)
+        })
+        r2 = curve2.envelope((1, 1), env_a, env_b)[1][1]
+        r3 = curve3.envelope((1, 1, 0), env_a, env_b, [None])[1][1][0]
+        # strict > in the DP's better(): first candidate (flavor 0's
+        # single) wins every tie, in both formulations
+        assert r2[1] == r3[1] == "single"
+        assert r2[2] == r3[2] == 0
