@@ -10,6 +10,14 @@ every committed mix, so a deployment that loses the DSE also saturates in
 simulation: the co-schedule must achieve weighted goodput >= both
 baselines (asserted), and its p95 is reported alongside.
 
+A token-level scenario does the same for LLM serving: the ``llm-phase``
+DSE picks a prefill/decode deployment (disaggregated vs colocated) for a
+two-model smoke mix, and the chosen plan under continuous batching must
+beat the best *whole-request* baseline -- both solved modes replayed with
+static batching on the identical token trace -- by >= 1.1x SLO-gated
+token goodput, with KV occupancy never exceeding the searched bound
+(asserted, conservation strict).
+
 A second scenario exercises the autoscale hook: traffic whose mix flips
 hot/cold between phases, served once by the static co-schedule and once
 with ``autoscale=`` enabled.  The autoscaler must demonstrably re-solve on
@@ -118,6 +126,99 @@ def run_mix(mix: str, hw_name: str, cache: scope.SolutionCache) -> dict:
             )
     row["co_wins_goodput"] = True
     return row
+
+
+# LLM scenario knobs: a gemma2+granite smoke mix on mcm16, decode-heavy
+# requests (64 expected output tokens, cv 1.0 -- the long tail is what
+# static batching drains on) at 90% of the chosen plan's capacity.
+LLM_ARCHS = [("gemma2-9b", 2.0), ("granite-3-8b", 1.0)]
+LLM_HW = "mcm16"
+LLM_SEQ = 128
+LLM_OUT = 64.0
+LLM_SLO_TTFT_S = 0.05
+LLM_SLO_TPOT_S = 0.002
+LLM_GOODPUT_MARGIN = 1.1
+
+
+def _llm_row(rep) -> dict:
+    for m, mm in rep.per_model.items():
+        assert mm.kv_peak_bytes <= mm.kv_capacity_bytes + 1e-6, (
+            "KV occupancy exceeded the searched bound", m,
+            mm.kv_peak_bytes, mm.kv_capacity_bytes)
+    return {
+        "mode": rep.mode,
+        "batching": rep.batching,
+        "token_goodput": rep.token_goodput,
+        "token_throughput": rep.token_throughput,
+        "ttft_p95_ms": rep.ttft_p95_s * 1e3,
+        "tpot_p95_ms": rep.tpot_p95_s * 1e3,
+        "slo_attainment": rep.slo_attainment,
+        "admitted_midbatch": rep.admitted_midbatch,
+        "completed": rep.total_completed,
+        "arrived": rep.total_arrived,
+        "conserved": rep.conserved,
+        "utilization": rep.utilization,
+        "kv_peak_mib": {m: mm.kv_peak_bytes / 2**20
+                        for m, mm in rep.per_model.items()},
+        "kv_capacity_mib": {m: mm.kv_capacity_bytes / 2**20
+                            for m, mm in rep.per_model.items()},
+    }
+
+
+def run_llm() -> dict:
+    """Token-level serving: the llm-phase DSE choice (continuous batching)
+    vs the best whole-request baseline -- both solved deployment modes
+    replayed with static batching on the identical token trace.  The
+    chosen plan must win SLO-gated token goodput by >= 1.1x (asserted),
+    admit mid-batch, keep KV under the searched bound, and conserve."""
+    from repro.configs import get_smoke_config
+    from repro.serving import TokenLengths
+
+    cfgs = [get_smoke_config(n) for n, _ in LLM_ARCHS]
+    wl = scope.WorkloadSpec.lm(cfgs, LLM_SEQ, [w for _, w in LLM_ARCHS])
+    prob = scope.problem(wl, LLM_HW, strategy="llm-phase",
+                         output_tokens=LLM_OUT, m_samples=M_SAMPLES)
+    sol = scope.solve(prob)
+    assert sol.feasible
+    traffic, horizon = sol.offered_traffic(0.9, 1200)
+    lengths = TokenLengths(prompt_mean=LLM_SEQ, output_mean=LLM_OUT,
+                           output_cv=1.0, output_max=512)
+    trace = request_trace(traffic, horizon, seed=SEED, lengths=lengths)
+    kw = dict(trace=trace, horizon_s=horizon, seed=SEED,
+              ttft_slo=LLM_SLO_TTFT_S, tpot_slo=LLM_SLO_TPOT_S)
+    chosen = sol.serve(**kw)
+    assert chosen.conserved
+    assert chosen.admitted_midbatch > 0, \
+        "continuous batching must admit into running decode batches"
+    baselines = {}
+    best = 0.0
+    for mode, plan in sol.diagnostics["plans"].items():
+        if plan is None:
+            baselines[f"{mode}-static"] = None
+            continue
+        rep = sol.serve(plan=plan, static_batching=True, **kw)
+        assert rep.conserved
+        baselines[f"{mode}-static"] = _llm_row(rep)
+        best = max(best, rep.token_goodput)
+    ratio = chosen.token_goodput / max(1e-12, best)
+    assert ratio >= LLM_GOODPUT_MARGIN, (
+        "phase DSE must beat the best whole-request baseline",
+        chosen.token_goodput, best, ratio)
+    return {
+        "archs": [f"{n}:{w:g}" for n, w in LLM_ARCHS],
+        "hw": LLM_HW, "seed": SEED,
+        "seq_len": LLM_SEQ, "output_tokens": LLM_OUT,
+        "ttft_slo_ms": LLM_SLO_TTFT_S * 1e3,
+        "tpot_slo_ms": LLM_SLO_TPOT_S * 1e3,
+        "load_fraction": 0.9,
+        "n_requests": len(trace),
+        "mode_rates": sol.diagnostics["mode_rates"],
+        "chosen_mode": sol.llm.mode,
+        "solved_token_rate": sol.llm.token_rate,
+        "chosen": _llm_row(chosen),
+        "baselines": baselines,
+        "goodput_vs_best_static": ratio,
+    }
 
 
 def run_drift() -> dict:
@@ -254,6 +355,7 @@ def run(refresh: bool = False, mixes=None) -> dict:
         "load_fraction": LOAD_FRACTION,
         "n_requests": N_REQUESTS,
         "mixes": [run_mix(m, h, cache) for m, h in (mixes or MIXES)],
+        "llm": run_llm(),
         "drift": run_drift(),
         "faults": run_faults(),
         "solve_cache": cache.stats,
@@ -276,6 +378,17 @@ def report(result: dict) -> list[str]:
             f"{g('equal-split', 'goodput'):.0f},{g('time-mux', 'goodput'):.0f},"
             f"{g('coschedule', 'p95_ms'):.2f},"
             f"{g('equal-split', 'p95_ms'):.2f},{g('time-mux', 'p95_ms'):.2f}"
+        )
+    llm = result.get("llm")
+    if llm:
+        c = llm["chosen"]
+        lines.append(
+            f"# llm: {','.join(llm['archs'])} on {llm['hw']} -> "
+            f"{llm['chosen_mode']} chosen, token goodput "
+            f"{c['token_goodput']:.0f}/s continuous vs best static "
+            f"({llm['goodput_vs_best_static']:.2f}x), TTFT p95 "
+            f"{c['ttft_p95_ms']:.2f}ms, TPOT p95 {c['tpot_p95_ms']:.3f}ms, "
+            f"midbatch {c['admitted_midbatch']}"
         )
     d = result["drift"]
     lines.append(

@@ -163,6 +163,55 @@ assert co["goodput"] >= tm["goodput"] - 1e-9, "co-schedule below time-mux"
 assert dt <= budget, f"serving smoke regression: {dt:.2f}s > {budget:.0f}s"
 PY
 
+  echo "== LLM token-level serving smoke (via python -m repro serve --llm) =="
+  python - <<'PY'
+import json
+import os
+import subprocess
+import sys
+import time
+
+budget = float(os.environ.get("CI_LLM_SERVE_BUDGET_S", "60"))
+args = ["--llm", "gemma2-9b:2,granite-3-8b:1", "--llm-smoke", "--hw", "mcm16",
+        "--seq-len", "128", "--output-tokens", "64",
+        "--requests", "800", "--rate-scale", "0.9", "--seed", "0",
+        "--ttft-slo-ms", "50", "--tpot-slo-ms", "2",
+        "--baselines", "--json"]
+t0 = time.time()
+out = subprocess.run(
+    [sys.executable, "-m", "repro", "serve", *args],
+    capture_output=True, text=True, check=True,
+    env={**os.environ, "PYTHONPATH": "src"},
+)
+dt = time.time() - t0
+payload = json.loads(out.stdout)
+sol = payload["solution"]
+rep = payload["serving"]
+assert sol["strategy"] == "llm-phase" and sol["feasible"], sol["strategy"]
+# strict request conservation with attributed drops, on every replay
+for name, r in [("chosen", rep)] + list(payload["baselines"].items()):
+    assert r is not None and r["conserved"], f"{name}: not conserved"
+    assert r["total_arrived"] == rep["total_arrived"], f"{name}: trace mismatch"
+# continuous batching must actually admit into running decode batches
+assert rep["admitted_midbatch"] > 0, "no mid-batch admissions"
+for m, mm in rep["per_model"].items():
+    assert mm["kv_peak_bytes"] <= mm["kv_capacity_bytes"] + 1e-6, \
+        f"{m}: KV occupancy exceeded the searched bound"
+# TTFT SLO gate: the chosen deployment must meet its p95 TTFT target
+ttft_p95 = rep["ttft_p95_s"]
+assert ttft_p95 <= 0.05, f"TTFT p95 {ttft_p95*1e3:.2f}ms > 50ms SLO"
+# and win SLO-gated token goodput vs the best whole-request static replay
+best = max(r["token_goodput"] for r in payload["baselines"].values() if r)
+assert rep["token_goodput"] >= best - 1e-9, "chosen plan lost to a baseline"
+print(f"llm smoke: {dt:.2f}s (budget {budget:.0f}s), mode={rep['mode']}, "
+      f"{rep['total_completed']}/{rep['total_arrived']} requests, "
+      f"token goodput {rep['token_goodput']:.0f}/s "
+      f"(best static {best:.0f}), TTFT p95 {ttft_p95*1e3:.2f}ms, "
+      f"TPOT p95 {rep['tpot_p95_s']*1e3:.3f}ms, "
+      f"midbatch {rep['admitted_midbatch']}")
+assert dt <= budget, f"llm serve smoke regression: {dt:.2f}s > {budget:.0f}s"
+PY
+
   echo "== chaos smoke: zone failure + degraded re-solve (serve --faults) =="
   python - <<'PY'
 import json

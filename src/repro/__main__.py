@@ -79,8 +79,29 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
         description="Solve a workload x package DSE and simulate serving "
                     "it (repro.serving).",
     )
-    ap.add_argument("--mix", "--workload", dest="mix", required=True,
+    ap.add_argument("--mix", "--workload", dest="mix", default=None,
                     help="comma list of net[:weight[:slo_ms]]")
+    ap.add_argument("--llm", default=None, metavar="ARCHS",
+                    help="token-level LLM mix: comma list of arch[:weight] "
+                         "from the LM registry (e.g. gemma2-9b:2,"
+                         "granite-3-8b:1); solves with strategy llm-phase "
+                         "and runs the TokenExecutor (exclusive with --mix)")
+    ap.add_argument("--llm-smoke", action="store_true",
+                    help="use the reduced smoke configs for --llm archs")
+    ap.add_argument("--seq-len", type=int, default=128,
+                    help="prompt length the LLM phase DSE plans for")
+    ap.add_argument("--output-tokens", type=float, default=64.0,
+                    help="expected decode tokens per request (LLM DSE)")
+    ap.add_argument("--phase-mode", default="auto",
+                    choices=("auto", "disaggregated", "colocated"),
+                    help="LLM phase deployment mode to search")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None,
+                    help="time-to-first-token SLO (gates token goodput)")
+    ap.add_argument("--tpot-slo-ms", type=float, default=None,
+                    help="time-per-output-token SLO (gates token goodput)")
+    ap.add_argument("--queue-policy", default="fifo",
+                    choices=("fifo", "edf"),
+                    help="LLM prefill queue order / coloc arbitration")
     ap.add_argument("--hw", default="mcm64", help="hardware preset name")
     ap.add_argument("--strategy", default="auto",
                     help="solver strategy (default: auto-select)")
@@ -116,7 +137,9 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
                     help="disable the degraded re-solve: down servers stay "
                          "down until repair (the static-degraded baseline)")
     ap.add_argument("--baselines", action="store_true",
-                    help="replay the same trace on equal-split and time-mux")
+                    help="replay the same trace on equal-split and time-mux "
+                         "(--mix) or the static whole-request deployments "
+                         "(--llm)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome trace-event JSON of the whole run "
                          "(solver spans + server lanes + queue/fault "
@@ -126,6 +149,13 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
 
 
 def _cmd_serve(args) -> None:
+    if args.mix and args.llm:
+        raise SystemExit("pass --mix or --llm, not both")
+    if args.llm:
+        _cmd_serve_llm(args)
+        return
+    if not args.mix:
+        raise SystemExit("serve needs --mix or --llm")
     # one Tracer spans the whole command: the primary solve's spans, every
     # baseline solve, the executor's sim-time lanes, and any mid-run
     # re-solves all land on one timeline
@@ -209,6 +239,83 @@ def _cmd_serve(args) -> None:
                   f"(vs {report.goodput:.1f}), p95 "
                   f"{rep['latency_p95_s'] * 1e3:.2f}ms "
                   f"(vs {report.latency_p95_s * 1e3:.2f})")
+
+
+def _cmd_serve_llm(args) -> None:
+    """Token-level serving: llm-phase DSE + TokenExecutor replay, with the
+    static whole-request deployments as --baselines on the same trace."""
+    from .api import SolutionCache, WorkloadSpec
+    from .configs import get_config, get_smoke_config
+    from .serving import TokenLengths, request_trace
+
+    obs_tracer = None
+    if args.trace:
+        from .obs import Tracer
+
+        obs_tracer = Tracer()
+    names, weights = [], []
+    for entry in args.llm.split(","):
+        parts = entry.strip().split(":")
+        names.append(parts[0])
+        weights.append(float(parts[1]) if len(parts) > 1 else 1.0)
+    get = get_smoke_config if args.llm_smoke else get_config
+    wl = WorkloadSpec.lm([get(n) for n in names], args.seq_len, weights)
+    options = SearchOptions(
+        strategy="llm-phase", m_samples=args.m_samples, step=args.step,
+        output_tokens=args.output_tokens, phase_mode=args.phase_mode,
+        trace=obs_tracer,
+    )
+    prob = problem(wl, args.hw, options=options)
+    cache = SolutionCache()
+    sol = cache.solve(prob)
+    if not sol.feasible:
+        raise SystemExit(f"no feasible LLM plan for {args.llm} on {args.hw}")
+    # one token trace (arrivals + prompt/output lengths) shared by the
+    # chosen deployment and every --baselines replay
+    traffic, horizon = sol.offered_traffic(args.rate_scale, args.requests)
+    lengths = TokenLengths(prompt_mean=float(args.seq_len),
+                           output_mean=float(args.output_tokens))
+    trace = request_trace(traffic, horizon, seed=args.seed, lengths=lengths)
+    ttft = args.ttft_slo_ms / 1e3 if args.ttft_slo_ms is not None else None
+    tpot = args.tpot_slo_ms / 1e3 if args.tpot_slo_ms is not None else None
+    serve_kw = dict(trace=trace, horizon_s=horizon, seed=args.seed,
+                    max_delay_s=args.max_delay_ms / 1e3,
+                    max_batch=args.max_batch,
+                    queue_policy=args.queue_policy,
+                    ttft_slo=ttft, tpot_slo=tpot)
+    report = sol.serve(tracer=obs_tracer, **serve_kw)
+    out = {"solution": sol.to_json(), "serving": report.to_json()}
+    if args.baselines:
+        out["baselines"] = {}
+        for mode, alt in sol.diagnostics.get("plans", {}).items():
+            if alt is None:
+                out["baselines"][f"{mode}-static"] = None
+                continue
+            b = sol.serve(plan=alt, static_batching=True, **serve_kw)
+            out["baselines"][f"{mode}-static"] = b.to_json()
+    if obs_tracer is not None:
+        obs_tracer.write(args.trace)
+    if args.as_json:
+        print(json.dumps(out, indent=1))
+        return
+    for line in sol.describe():
+        print(line)
+    print()
+    for line in report.describe():
+        print(line)
+    if obs_tracer is not None:
+        print()
+        print(obs_tracer.summary())
+        print(f"trace written to {args.trace} (open in Perfetto)")
+    for name, rep in out.get("baselines", {}).items():
+        if rep is None:
+            print(f"{name}: infeasible")
+        else:
+            ratio = (report.token_goodput / rep["token_goodput"]
+                     if rep["token_goodput"] else float("inf"))
+            print(f"{name}: token goodput {rep['token_goodput']:.1f} tok/s "
+                  f"({ratio:.2f}x vs solution), TTFT p95 "
+                  f"{rep['ttft_p95_s'] * 1e3:.2f}ms")
 
 
 def _cmd_solve(args) -> None:

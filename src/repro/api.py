@@ -119,6 +119,7 @@ class WorkloadSpec:
     models: tuple[ModelSpec, ...]
     cfgs: tuple = ()                 # optional ModelConfigs aligned to models
     seq_len: int | None = None
+    phase: str = "prefill"           # LM graph phase: "prefill" | "decode"
 
     def __post_init__(self):
         if not self.models:
@@ -165,20 +166,33 @@ class WorkloadSpec:
         return cls(models=tuple(models))
 
     @classmethod
-    def lm(cls, cfgs, seq_len: int, weights=None) -> "WorkloadSpec":
+    def lm(cls, cfgs, seq_len: int, weights=None, *,
+           phase: str = "prefill",
+           decode: bool | None = None) -> "WorkloadSpec":
         """LM configs -> exported layer graphs (``lm_graph``), keeping the
-        configs attached for :meth:`Solution.deploy`."""
+        configs attached for :meth:`Solution.deploy`.
+
+        ``phase`` selects which per-phase graph to export: ``"prefill"``
+        (the default, full-sequence attention FLOPs) or ``"decode"``
+        (one-token KV-append costs).  ``decode=True/False`` is an alias
+        that overrides ``phase``; graph names embed the phase
+        (``name@decode128``), so fingerprints distinguish the two.
+        """
         from .core.workloads.lm import lm_graph
 
+        if decode is not None:
+            phase = "decode" if decode else "prefill"
+        if phase not in ("prefill", "decode"):
+            raise ValueError(f"phase must be prefill|decode, got {phase!r}")
         cfgs = tuple(cfgs)
         weights = list(weights) if weights else [1.0] * len(cfgs)
         if len(weights) != len(cfgs):
             raise ValueError(f"{len(weights)} weights for {len(cfgs)} configs")
         models = tuple(
-            ModelSpec(lm_graph(cfg, seq_len, decode=False), w)
+            ModelSpec(lm_graph(cfg, seq_len, decode=(phase == "decode")), w)
             for cfg, w in zip(cfgs, weights)
         )
-        return cls(models=models, cfgs=cfgs, seq_len=seq_len)
+        return cls(models=models, cfgs=cfgs, seq_len=seq_len, phase=phase)
 
     @classmethod
     def of(cls, workload) -> "WorkloadSpec":
@@ -253,6 +267,11 @@ class SearchOptions:
     include_time_mux: bool = True
     switch_cost: bool = False
     switch_period_s: float = 1.0
+    # token-level LLM serving (strategy "llm-phase"): expected decode
+    # tokens per request, and the phase-deployment mode to search --
+    # "auto" (best of both) | "disaggregated" | "colocated"
+    output_tokens: float = 64.0
+    phase_mode: str = "auto"
     # validation searches
     samples: int = 10_000
     seed: int = 0
@@ -345,11 +364,14 @@ class Solution:
     hw: HardwareModel
     schedule: ScopeSchedule | None = None
     multi: MultiModelSchedule | None = None
+    llm: Any = None                  # LLMPlan (strategy "llm-phase")
     diagnostics: dict = field(default_factory=dict)
 
     # ----------------------------------------------------------- accessors
     @property
     def feasible(self) -> bool:
+        if self.llm is not None:
+            return self.llm.mix_rate > 0
         if self.schedule is not None:
             return self.schedule.latency < INF
         if self.multi is not None:
@@ -366,6 +388,8 @@ class Solution:
     @property
     def throughput(self) -> float:
         """Samples/s (single-model: m / latency; multi-model: weighted)."""
+        if self.llm is not None:
+            return self.llm.token_rate
         if self.schedule is not None:
             lat = self.schedule.latency
             m = self.diagnostics.get("m_samples",
@@ -453,7 +477,7 @@ class Solution:
         seq_len: int | None = None,
         global_batch: int = 8,
         mesh_axes: tuple[str, ...] = ("data", "model"),
-        kind: str = "train",
+        kind: str | None = None,
         step: int = 1,
         switch_cost: bool = False,
     ) -> "Deployment":
@@ -463,9 +487,15 @@ class Solution:
         ``plan_for_multimodel`` (reusing this solution's co-schedule when
         its model names match, so solve-then-deploy never searches twice).
         ``cfgs``/``seq_len`` default to the ones the workload was built
-        from (:meth:`WorkloadSpec.lm`).
+        from (:meth:`WorkloadSpec.lm`).  ``kind`` defaults by workload
+        phase: a decode-phase workload plans decode ShardPlans, anything
+        else keeps the legacy ``"train"``.
         """
         from .runtime.planner import plan_for_cell, plan_for_multimodel
+
+        if kind is None:
+            kind = ("decode" if self.problem.workload.phase == "decode"
+                    else "train")
 
         cfgs = tuple(cfgs) if cfgs is not None else self.problem.workload.cfgs
         if not cfgs:
@@ -560,6 +590,13 @@ class Solution:
         with the horizon sized so ~``n_requests`` arrive.  Returns
         ``(traffic, horizon_s)`` -- the single source the CLI and the
         serving bench use to replay identical traces across deployments."""
+        if self.llm is not None:
+            traffic = {a.model: a.rate * rate_scale
+                       for a in self.llm.assignments}
+            total = sum(traffic.values())
+            if total <= 0:
+                raise ValueError(f"[{self.strategy}] zero solved capacity")
+            return traffic, n_requests / total
         mm = self.as_multimodel()
         lam = mm.mix_rate * rate_scale
         traffic = {a.model: lam * a.weight for a in mm.assignments}
@@ -589,6 +626,13 @@ class Solution:
         mesh=None,
         seq_len: int = 16,
         tracer=None,
+        # token-level serving (strategy "llm-phase" solutions only)
+        plan=None,
+        static_batching: bool = False,
+        queue_policy: str = "fifo",
+        lengths=None,
+        ttft_slo=None,
+        tpot_slo=None,
     ):
         """Run this solution under synthetic traffic
         (:class:`repro.serving.ServingExecutor`); returns a
@@ -631,6 +675,15 @@ class Solution:
         the same timeline; mid-run re-solves (autoscale or fault recovery)
         add their solver spans too.
         """
+        if self.llm is not None or plan is not None:
+            return self._serve_llm(
+                traffic, trace=trace, n_requests=n_requests,
+                horizon_s=horizon_s, seed=seed, rate_scale=rate_scale,
+                max_batch=max_batch, max_delay_s=max_delay_s,
+                max_queue=max_queue, queue_policy=queue_policy,
+                plan=plan, static_batching=static_batching, lengths=lengths,
+                ttft_slo=ttft_slo, tpot_slo=tpot_slo, tracer=tracer,
+            )
         from .serving import (
             AutoscalePolicy,
             Autoscaler,
@@ -825,11 +878,139 @@ class Solution:
                 report.meta["trace_path"] = obs_path
         return report
 
+    def _serve_llm(
+        self,
+        traffic=None,
+        *,
+        trace=None,
+        n_requests: int = 1000,
+        horizon_s: float | None = None,
+        seed: int = 0,
+        rate_scale: float = 0.8,
+        max_batch: int | None = None,
+        max_delay_s: float = 2e-3,
+        max_queue: int | None = None,
+        queue_policy: str = "fifo",
+        plan=None,
+        static_batching: bool = False,
+        lengths=None,
+        ttft_slo=None,
+        tpot_slo=None,
+        tracer=None,
+    ):
+        """Token-level serving path of :meth:`serve` (``llm-phase``
+        solutions): replay a token trace through the
+        :class:`~repro.serving.llm.TokenExecutor`.
+
+        ``plan`` overrides the solved :class:`~repro.serving.llm.LLMPlan`
+        (e.g. to replay the losing deployment mode from
+        ``diagnostics["plans"]`` on the identical trace);
+        ``static_batching=True`` runs the whole-request baseline;
+        ``lengths`` is a :class:`~repro.serving.TokenLengths` (or per-model
+        dict) for the prompt/output draws -- default matches the plan's
+        searched ``seq_len`` / ``output_tokens``; ``ttft_slo`` / ``tpot_slo``
+        are seconds (float for all models, or per-model dicts).  Returns an
+        :class:`~repro.serving.LLMReport`.
+        """
+        from .serving import BatchingPolicy, TokenLengths, request_trace
+        from .serving.llm import TokenExecutor
+
+        plan = plan if plan is not None else self.llm
+        if plan is None:
+            raise ValueError(
+                f"[{self.strategy}] no LLMPlan to serve: solve with "
+                "strategy='llm-phase' or pass plan="
+            )
+        hw = self.hw
+
+        obs_tracer, obs_path = None, None
+        if tracer is not None and tracer is not False:
+            if isinstance(tracer, Tracer):
+                obs_tracer = tracer
+            elif isinstance(tracer, str):
+                obs_tracer, obs_path = Tracer(), tracer
+            elif tracer is True:
+                obs_tracer = Tracer()
+            else:
+                raise TypeError(
+                    f"tracer= takes a Tracer, True, or a path; got {tracer!r}")
+
+        if traffic is not None and trace is not None:
+            raise ValueError("pass traffic= or trace=, not both")
+        if trace is None:
+            if traffic is None:
+                traffic, default_horizon = self.offered_traffic(
+                    rate_scale, n_requests)
+                if horizon_s is None:
+                    horizon_s = default_horizon
+            if horizon_s is None:
+                total_rate = sum(
+                    (spec if isinstance(spec, (int, float))
+                     else getattr(spec, "mean_rate", 0.0))
+                    for spec in traffic.values()
+                )
+                if total_rate <= 0:
+                    raise ValueError(
+                        "cannot derive a horizon from rate-free traffic: "
+                        "pass horizon_s="
+                    )
+                horizon_s = n_requests / total_rate
+            if lengths is None:
+                lengths = TokenLengths(
+                    prompt_mean=float(plan.seq_len),
+                    output_mean=float(plan.output_tokens),
+                )
+            trace = request_trace(traffic, horizon_s, seed=seed,
+                                  lengths=lengths)
+        elif horizon_s is None:
+            horizon_s = trace[-1].t_arrive if trace else 0.0
+
+        if max_batch is None:
+            max_batch = max(1, int(plan.meta.get(
+                "m_samples", self.problem.options.m_samples)))
+        batching = BatchingPolicy(max_batch=max_batch,
+                                  max_delay_s=max_delay_s,
+                                  max_queue_samples=max_queue,
+                                  queue_policy=queue_policy)
+
+        def _slo_for(spec, model):
+            if isinstance(spec, dict):
+                return spec.get(model)
+            return spec
+
+        slos = {
+            a.model: (_slo_for(ttft_slo, a.model), _slo_for(tpot_slo, a.model))
+            for a in plan.assignments
+        }
+        ex = TokenExecutor(plan, hw, batching=batching, slos=slos,
+                           static=static_batching, seed=seed,
+                           tracer=obs_tracer)
+        if obs_tracer is not None:
+            with use_tracer(obs_tracer):
+                report = ex.run(trace, horizon_s=horizon_s)
+        else:
+            report = ex.run(trace, horizon_s=horizon_s)
+        report.meta.update(
+            strategy=self.strategy,
+            solved_mix_rate=plan.mix_rate,
+            solved_token_rate=plan.token_rate,
+        )
+        if obs_tracer is not None:
+            report.tracer = obs_tracer
+            if obs_path:
+                obs_tracer.write(obs_path)
+                report.meta["trace_path"] = obs_path
+        return report
+
     # ------------------------------------------------------------- display
     def describe(self) -> list[str]:
         """Human-readable summary lines (CLI / examples)."""
         lines = []
-        if self.multi is not None:
+        if self.llm is not None:
+            from .serving.llm import describe_llm
+
+            lines += describe_llm(self.llm)
+        elif self.multi is not None:
             from .multimodel.coschedule import describe as _describe_mm
 
             lines += _describe_mm(self.multi)
@@ -892,6 +1073,28 @@ class Solution:
                         "samples_per_beat": a.samples_per_beat,
                     }
                     for a in self.multi.assignments
+                ],
+            )
+        if self.llm is not None:
+            p = self.llm
+            out.update(
+                mode=p.mode,
+                mix_rate=p.mix_rate,
+                token_rate=p.token_rate,
+                seq_len=p.seq_len,
+                output_tokens=p.output_tokens,
+                handoff_bw=p.handoff_bw,
+                assignments=[
+                    {
+                        "model": a.model, "weight": a.weight,
+                        "prefill_chips": a.prefill_chips,
+                        "decode_chips": a.decode_chips,
+                        "rate": a.rate,
+                        "max_seqs": a.max_seqs,
+                        "kv_seq_bytes": a.kv_seq_bytes,
+                        "kv_capacity_bytes": a.kv_capacity_bytes,
+                    }
+                    for a in p.assignments
                 ],
             )
         if "population" in self.diagnostics:
@@ -1171,6 +1374,32 @@ def _solve_random(prob, hw, cost) -> Solution:
     )
 
 
+@register_strategy("llm-phase")
+def _solve_llm_phase(prob: Problem, hw: HardwareModel,
+                     cost: CostModel) -> Solution:
+    """Token-level phase DSE (``serving.llm.solve_phases``): disaggregated
+    vs colocated prefill/decode deployments over KV-bounded throughput
+    curves.  Needs an LM workload (:meth:`WorkloadSpec.lm`): the decode
+    graphs and KV footprints come from the attached ModelConfigs."""
+    from .serving.llm import solve_phases
+
+    wl = prob.workload
+    if not wl.cfgs or wl.seq_len is None:
+        raise ValueError(
+            "strategy 'llm-phase' needs ModelConfigs: build the workload "
+            "with WorkloadSpec.lm(...)"
+        )
+    o = prob.options
+    plan, diag = solve_phases(
+        list(wl.cfgs), [m.weight for m in wl.models], hw, cost,
+        seq_len=wl.seq_len, output_tokens=o.output_tokens,
+        mode=o.phase_mode, step=o.step, paper_strict=o.paper_strict,
+        m_samples=o.m_samples,
+    )
+    return Solution(problem=prob, strategy="llm-phase", hw=hw, llm=plan,
+                    diagnostics=diag)
+
+
 # ---------------------------------------------------------------------------
 # solve(): the front door
 # ---------------------------------------------------------------------------
@@ -1291,7 +1520,8 @@ def problem_fingerprint(prob: Problem, hw: HardwareModel | None = None) -> tuple
         o.max_clusters, o.chip_type,
         o.step, o.mixed, o.mixed_step, o.refine, o.cut_window,
         o.include_merged, o.include_time_mux, o.switch_cost,
-        o.switch_period_s, o.samples, o.seed, o.engine,
+        o.switch_period_s, o.output_tokens, o.phase_mode,
+        o.samples, o.seed, o.engine,
         o.distributed_weights,
     )
     caps = (tuple(tuple(c) for c in prob.package.flavor_caps)

@@ -65,6 +65,13 @@ class HardwareModel:
     act_capacity_per_chip: float   # bytes of activation buffering
     m_granule: int                 # activation-dim tiling granule (WSP dim)
     n_granule: int                 # weight-output-dim tiling granule (ISP dim)
+    # KV-cache budget for autoregressive decode (bytes per chip).  This is
+    # the memory axis the phase DSE trades against: a decode quota of ``c``
+    # chips holds at most ``c * kv_bytes_per_chip / kv_seq_bytes`` concurrent
+    # sequences, which caps its sustainable batch below the compute optimum
+    # when KV runs out before compute does.  0 falls back to the activation
+    # buffer (packages without a dedicated KV slice).
+    kv_capacity_per_chip: float = 0.0
     # energy (J/unit)
     e_flop: float = 0.0            # J per FLOP (2 flops per MAC)
     e_nop_byte: float = 0.0
@@ -95,6 +102,11 @@ class HardwareModel:
         else:
             shape = (max(1, chips // max(1, side)), side)
         return replace(self, chips=chips, mesh_shape=shape)
+
+    @property
+    def kv_bytes_per_chip(self) -> float:
+        """Per-chip KV-cache budget (falls back to the activation buffer)."""
+        return self.kv_capacity_per_chip or self.act_capacity_per_chip
 
     # ------------------------------------------------------- chip flavors
     @property
@@ -269,6 +281,7 @@ def mcm_table_iii(chips: int = 256) -> HardwareModel:
         dram_bw_total=100e9,
         weight_capacity_per_chip=16 * 64 * 1024,   # 16 PEs x 64 KB = 1 MiB
         act_capacity_per_chip=64 * 1024,           # 64 KB global buffer
+        kv_capacity_per_chip=32 * 2**20,           # LPDDR KV slice per chiplet
         m_granule=1,                          # row-stripe quantization (rows/chip)
         n_granule=16,                         # out-channels spread across 16 PEs;
                                               # lanes/MACs consume the reduction dim

@@ -32,6 +32,7 @@ Two extensions for large / heterogeneous packages:
 from __future__ import annotations
 
 import itertools
+import math
 
 from dataclasses import dataclass, field
 
@@ -49,6 +50,9 @@ class CurvePoint:
     latency: float
     throughput: float
     schedule: ScopeSchedule | None
+    # KV-cache concurrency bound at this quota (set by kv_bound_curve when
+    # the memory bound binds; None on pure compute-bound points).
+    max_seqs: int | None = None
 
 
 @dataclass
@@ -179,6 +183,57 @@ def build_curves(
                 cost, spec.graph, cap, ctype, step, paper_strict, refine,
                 counts=counts_by_cap.get(cap),
             )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache-bounded curves: the memory axis of autoregressive decode
+# ---------------------------------------------------------------------------
+
+def service_law(sched: ScopeSchedule) -> tuple[int, float]:
+    """``(stages, beat)`` of a solved schedule -- the serving executor's
+    inversion ``beat = latency / (stages - 1 + m)`` of the pipeline model,
+    so ``(stages - 1 + b) * beat`` is the service time of a ``b``-sample
+    batch on this schedule."""
+    m = sched.meta.get("m_samples", 1)
+    stages = sum(len(seg.clusters) for seg in sched.segments) or 1
+    return stages, sched.latency / (stages - 1 + m)
+
+
+def kv_bound_curve(curve: ThroughputCurve, seq_bytes: float,
+                   capacity_per_chip: float) -> ThroughputCurve:
+    """KV-capacity-bounded view of a decode throughput curve.
+
+    A quota of ``c`` chips holds at most ``K = floor(c * capacity_per_chip
+    / seq_bytes)`` concurrent sequences of KV cache.  A server whose batch
+    is capped at ``K`` sustains ``K / ((stages - 1 + K) * beat)`` samples/s
+    under the point's own service law, which falls below the compute rate
+    ``m / latency`` exactly when ``K < m``.  Points where the memory bound
+    does not bind are returned as the *same object* -- with infinite
+    capacity (or zero per-sequence state) the result is bit-identical to
+    the input curve -- while KV-starved points flatten to the bound
+    (``max_seqs`` records ``K``) and quotas too small for even one
+    sequence become infeasible.
+    """
+    if seq_bytes <= 0:
+        return curve
+    out = ThroughputCurve(curve.model, curve.chip_type)
+    for c, pt in curve.points.items():
+        cap = capacity_per_chip * pt.chips
+        if pt.schedule is None or math.isinf(cap):
+            out.points[c] = pt
+            continue
+        K = int(cap // seq_bytes)
+        if K <= 0:
+            out.points[c] = CurvePoint(pt.chips, INF, 0.0, None, max_seqs=0)
+            continue
+        stages, beat = service_law(pt.schedule)
+        bound = K / ((stages - 1 + K) * beat)
+        if bound >= pt.throughput:
+            out.points[c] = pt
+        else:
+            out.points[c] = CurvePoint(pt.chips, pt.latency, bound,
+                                       pt.schedule, max_seqs=K)
     return out
 
 

@@ -13,10 +13,14 @@ The pieces, in data-flow order:
 * :mod:`.autoscale` -- the online re-solve hook (sliding-window mix drift
   -> re-plan through the facade's cached solver);
 * :mod:`.faults` -- seeded chip/zone/seam failure injection and the
-  degraded-package recovery path (shared with the ft trainer).
+  degraded-package recovery path (shared with the ft trainer);
+* :mod:`.llm` -- token-level LLM serving: prefill/decode phase plans,
+  KV-cache-bounded quotas, continuous batching, TTFT/TPOT metrics
+  (:class:`~.llm.TokenExecutor` / :class:`~.llm.LLMReport`).
 
 Front doors: :meth:`repro.api.Solution.serve` and
-``python -m repro serve`` (``--faults`` for chaos scenarios).
+``python -m repro serve`` (``--faults`` for chaos scenarios, ``--llm``
+for token-level mixes).
 """
 from .autoscale import AutoscalePolicy, Autoscaler
 from .faults import FaultEvent, FaultInjector, InjectedFault, parse_faults
@@ -29,12 +33,20 @@ from .executor import (
     service_from_assignment,
     simulate,
 )
+from .llm import (
+    LLMPlan,
+    LLMReport,
+    TokenExecutor,
+    simulate_tokens,
+    solve_phases,
+)
 from .metrics import ModelMetrics, ServingReport, percentile
 from .traffic import (
     MMPP,
     Diurnal,
     Poisson,
     Request,
+    TokenLengths,
     phased_trace,
     request_trace,
 )
@@ -47,6 +59,8 @@ __all__ = [
     "FaultEvent",
     "FaultInjector",
     "InjectedFault",
+    "LLMPlan",
+    "LLMReport",
     "MMPP",
     "ModelMetrics",
     "Poisson",
@@ -54,6 +68,8 @@ __all__ = [
     "ServiceModel",
     "ServingExecutor",
     "ServingReport",
+    "TokenExecutor",
+    "TokenLengths",
     "allocate_submeshes",
     "measure_service_models",
     "parse_faults",
@@ -62,4 +78,6 @@ __all__ = [
     "request_trace",
     "service_from_assignment",
     "simulate",
+    "simulate_tokens",
+    "solve_phases",
 ]

@@ -73,16 +73,26 @@ class BatchingPolicy:
     ``samples_per_beat`` is k dispatches up to ``max_batch * k`` samples
     per batch (k = 1 everywhere else), so a saturated server of any mode
     reproduces its DSE throughput when ``max_batch`` equals the DSE batch.
+
+    ``queue_policy`` selects the dequeue order: ``"fifo"`` (arrival order,
+    the whole-request executor's only order) or ``"edf"`` -- earliest SLO
+    deadline first, honored by the token-level executor
+    (:class:`repro.serving.llm.TokenExecutor`), where a colocated server
+    also uses the deadlines to arbitrate prefill batches against decode
+    steps.
     """
     max_batch: int = 16
     max_delay_s: float = 2e-3
     max_queue_samples: int | None = None    # admission cap (None = unbounded)
+    queue_policy: str = "fifo"
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch {self.max_batch} < 1")
         if self.max_delay_s < 0:
             raise ValueError(f"max_delay_s {self.max_delay_s} < 0")
+        if self.queue_policy not in ("fifo", "edf"):
+            raise ValueError(f"unknown queue_policy {self.queue_policy!r}")
 
 
 @dataclass(frozen=True)

@@ -33,6 +33,7 @@ __all__ = [
     "MMPP",
     "Poisson",
     "Request",
+    "TokenLengths",
     "model_rng",
     "phased_trace",
     "request_trace",
@@ -41,11 +42,18 @@ __all__ = [
 
 @dataclass(frozen=True, order=True)
 class Request:
-    """One admitted unit of work: ``samples`` inputs for ``model``."""
+    """One admitted unit of work: ``samples`` inputs for ``model``.
+
+    Token-level serving stamps each request with its prompt and output
+    lengths (seeded draws from a :class:`TokenLengths` distribution); the
+    whole-request executor ignores both fields.
+    """
     t_arrive: float
     model: str
     samples: int = 1
     seq: int = 0          # global arrival index (deterministic tie-break)
+    prompt_tokens: int = 0
+    output_tokens: int = 0
 
 
 def model_rng(seed: int, model: str) -> np.random.Generator:
@@ -151,6 +159,45 @@ class Diurnal:
                 out.append(t)
 
 
+@dataclass(frozen=True)
+class TokenLengths:
+    """Seeded per-request (prompt, output) token-length distribution.
+
+    Lengths are lognormal with the given means and coefficients of
+    variation (the long right tail is what makes static whole-request
+    batching waste decode slots), rounded to ints and clamped to
+    ``[1, *_max]``.  Draws come from a dedicated ``(seed, model)`` stream
+    so stamping lengths never perturbs the arrival process.
+    """
+    prompt_mean: float = 512.0
+    output_mean: float = 128.0
+    prompt_cv: float = 0.5
+    output_cv: float = 0.5
+    prompt_max: int | None = None
+    output_max: int | None = None
+
+    @staticmethod
+    def _draw(rng: np.random.Generator, n: int, mean: float, cv: float,
+              cap: int | None) -> np.ndarray:
+        if cv <= 0:
+            out = np.full(n, mean)
+        else:
+            sigma2 = np.log1p(cv * cv)
+            mu = np.log(mean) - 0.5 * sigma2
+            out = rng.lognormal(mu, np.sqrt(sigma2), size=n)
+        out = np.maximum(1, np.rint(out)).astype(int)
+        return np.minimum(out, cap) if cap is not None else out
+
+    def sample(self, rng: np.random.Generator,
+               n: int) -> tuple[np.ndarray, np.ndarray]:
+        return (
+            self._draw(rng, n, self.prompt_mean, self.prompt_cv,
+                       self.prompt_max),
+            self._draw(rng, n, self.output_mean, self.output_cv,
+                       self.output_max),
+        )
+
+
 def _coerce(model: str, spec) -> object:
     if isinstance(spec, (int, float)):
         return Poisson(rate=float(spec))
@@ -169,12 +216,19 @@ def request_trace(
     seed: int = 0,
     t0: float = 0.0,
     seq0: int = 0,
+    lengths: "TokenLengths | dict[str, TokenLengths] | None" = None,
 ) -> list[Request]:
     """Merge per-model arrival streams into one sorted request trace.
 
     ``traffic`` maps model name -> arrival process (or a bare number,
     taken as a Poisson rate in requests/s).  Ties are broken by model name
     then per-model order, so the trace is bytewise deterministic.
+
+    ``lengths`` (one :class:`TokenLengths` for all models, or a per-model
+    dict) stamps each request with seeded prompt/output token counts for
+    the token-level executor; length draws use a separate per-model stream
+    (``model_rng(seed, model + "/tokens")``), so the same arrivals are
+    produced with or without lengths.
     """
     merged: list[tuple[float, str, int]] = []
     for model in sorted(traffic):
@@ -184,10 +238,26 @@ def request_trace(
         merged.extend((t, model, hint)
                       for t in proc.arrival_times(rng, horizon_s))
     merged.sort(key=lambda e: (e[0], e[1]))
-    return [
-        Request(t_arrive=t0 + t, model=m, samples=s, seq=seq0 + i)
-        for i, (t, m, s) in enumerate(merged)
-    ]
+    toks: dict[str, tuple] = {}
+    if lengths is not None:
+        counts: dict[str, int] = {}
+        for _, m, _ in merged:
+            counts[m] = counts.get(m, 0) + 1
+        for model, n in sorted(counts.items()):
+            dist = lengths.get(model) if isinstance(lengths, dict) else lengths
+            if dist is None:
+                continue
+            prompts, outs = dist.sample(
+                model_rng(seed, model + "/tokens"), n)
+            toks[model] = (iter(prompts), iter(outs))
+    out = []
+    for i, (t, m, s) in enumerate(merged):
+        p = o = 0
+        if m in toks:
+            p, o = int(next(toks[m][0])), int(next(toks[m][1]))
+        out.append(Request(t_arrive=t0 + t, model=m, samples=s, seq=seq0 + i,
+                           prompt_tokens=p, output_tokens=o))
+    return out
 
 
 def phased_trace(

@@ -1,0 +1,297 @@
+"""Token-level LLM serving tests: KV accounting, KV-bounded curves
+(parity + strict lowering), phase DSE, the TokenExecutor (conservation,
+KV-bound enforcement, continuous vs static batching, EDF no-starvation),
+and the llm-phase facade plumbing."""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro import scope
+from repro.configs import get_smoke_config
+from repro.core.fastcost import FastCostModel
+from repro.core.hw import get_hw
+from repro.core.workloads.lm import lm_graph
+from repro.multimodel.curves import kv_bound_curve, service_law, throughput_curve
+from repro.serving import (
+    BatchingPolicy,
+    TokenLengths,
+    request_trace,
+    simulate_tokens,
+)
+from repro.serving.llm import (
+    kv_capacity_bytes,
+    kv_seq_bytes,
+    max_concurrent_seqs,
+    solve_phases,
+)
+
+SEQ = 128
+OUT = 32.0
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+    return [get_smoke_config("gemma2-9b"), get_smoke_config("granite-3-8b")]
+
+
+@pytest.fixture(scope="module")
+def llm_sol(cfgs):
+    wl = scope.WorkloadSpec.lm(cfgs, SEQ, [2.0, 1.0])
+    prob = scope.problem(wl, "mcm16", strategy="llm-phase",
+                         output_tokens=OUT, m_samples=8)
+    sol = scope.solve(prob)
+    assert sol.feasible
+    return sol
+
+
+@pytest.fixture(scope="module")
+def token_trace(llm_sol):
+    traffic, horizon = llm_sol.offered_traffic(0.8, 400)
+    lengths = TokenLengths(prompt_mean=SEQ, output_mean=OUT, output_max=256)
+    return request_trace(traffic, horizon, seed=3, lengths=lengths), horizon
+
+
+# ---------------------------------------------------------------- kv model
+
+def test_kv_seq_bytes_families(cfgs):
+    gemma, granite = cfgs
+    for cfg in cfgs:
+        assert kv_seq_bytes(cfg, SEQ) > 0
+    # attention KV grows with context; gemma2-smoke mixes local layers whose
+    # window caps their share, so growth is sublinear but strictly positive
+    assert kv_seq_bytes(granite, 2 * SEQ) == 2 * kv_seq_bytes(granite, SEQ)
+    assert kv_seq_bytes(gemma, 2 * SEQ) > kv_seq_bytes(gemma, SEQ)
+
+
+def test_kv_capacity_and_max_seqs(cfgs):
+    hw = get_hw("mcm16")
+    assert hw.kv_bytes_per_chip > 0
+    cap = kv_capacity_bytes(hw, 4)
+    assert cap == 4 * hw.kv_bytes_per_chip
+    k = max_concurrent_seqs(hw, 4, cfgs[0], SEQ)
+    assert k == int(cap // kv_seq_bytes(cfgs[0], SEQ)) and k > 0
+
+
+# ------------------------------------------------------- kv-bounded curves
+
+@pytest.fixture(scope="module")
+def decode_curve(cfgs):
+    hw = get_hw("mcm16")
+    cost = FastCostModel(hw, m_samples=8)
+    g = lm_graph(cfgs[0], SEQ, decode=True)
+    return throughput_curve(cost, g, hw.chips)
+
+
+def test_kv_bound_parity_infinite_capacity(decode_curve):
+    """Satellite: with KV never binding, the bounded curve is bit-identical
+    to the unbounded one (the same CurvePoint objects)."""
+    sb = 1024.0
+    bounded = kv_bound_curve(decode_curve, sb, float("inf"))
+    assert set(bounded.points) == set(decode_curve.points)
+    for c, pt in decode_curve.points.items():
+        assert bounded.points[c] is pt
+    # zero per-sequence state short-circuits to the identical curve object
+    assert kv_bound_curve(decode_curve, 0.0, 1.0) is decode_curve
+
+
+def test_kv_bound_lowers_envelope(decode_curve, cfgs):
+    """Satellite: a tight capacity strictly lowers the decode envelope and
+    flattens it (memory-bound rate, not compute-bound)."""
+    sb = kv_seq_bytes(cfgs[0], SEQ)
+    # capacity for ~2 sequences per chip: K < m_samples=8 on small quotas
+    bounded = kv_bound_curve(decode_curve, sb, 2 * sb)
+    lowered = 0
+    for c, pt in decode_curve.points.items():
+        bpt = bounded.points[c]
+        assert bpt.throughput <= pt.throughput + 1e-12
+        if bpt.throughput < pt.throughput:
+            lowered += 1
+            stages, beat = service_law(pt.schedule)
+            k = bpt.max_seqs
+            assert k == int(2 * c)  # floor(c * 2*sb / sb)
+            assert bpt.throughput == pytest.approx(
+                k / ((stages - 1 + k) * beat))
+    assert lowered > 0
+    # infeasibly small capacity: every point is memory-infeasible
+    n = max(decode_curve.points)
+    cap = sb / (2 * n)
+    starved = kv_bound_curve(decode_curve, sb, cap)
+    pts = list(starved.points.values())
+    assert pts and all(p.max_seqs == 0 and p.throughput == 0.0
+                       for p in pts if p.chips * cap < sb)
+
+
+# ------------------------------------------------------------ phase DSE
+
+def test_solve_phases_modes(cfgs):
+    hw = get_hw("mcm16")
+    cost = FastCostModel(hw, m_samples=8)
+    plan, diag = solve_phases(cfgs, [2.0, 1.0], hw, cost, seq_len=SEQ,
+                              output_tokens=OUT, m_samples=8)
+    assert plan is not None and plan.mix_rate > 0
+    assert set(diag["plans"]) == {"disaggregated", "colocated"}
+    assert plan.mix_rate == max(diag["mode_rates"].values())
+    for mode, p in diag["plans"].items():
+        if p is None:
+            continue
+        used = sum(
+            (a.prefill_chips if mode == "colocated"
+             else a.prefill_chips + a.decode_chips)
+            for a in p.assignments
+        )
+        assert 0 < used <= hw.chips
+        for a in p.assignments:
+            assert a.kv_capacity_bytes > 0 and a.max_seqs > 0
+            assert a.prefill_schedule is not None
+            assert a.decode_schedule is not None  # OUT > 1
+    # pinning a mode returns that mode
+    p_col, _ = solve_phases(cfgs, [2.0, 1.0], hw, cost, seq_len=SEQ,
+                            output_tokens=OUT, mode="colocated", m_samples=8)
+    assert p_col.mode == "colocated"
+    with pytest.raises(ValueError):
+        solve_phases(cfgs, [2.0, 1.0], hw, cost, seq_len=SEQ, mode="bogus")
+
+
+# -------------------------------------------------------- token executor
+
+def test_token_executor_conservation_and_kv_bound(llm_sol, token_trace):
+    trace, horizon = token_trace
+    rep = llm_sol.serve(trace=trace, horizon_s=horizon, seed=3,
+                        ttft_slo=0.05, tpot_slo=0.005)
+    assert rep.conserved
+    assert rep.total_arrived == len(trace)
+    assert rep.total_completed > 0
+    for m in rep.per_model.values():
+        # occupancy never exceeds the searched KV bound
+        assert m.kv_peak_bytes <= m.kv_capacity_bytes + 1e-6
+        assert m.ttft_p95_s >= 0 and m.tpot_p95_s >= 0
+    assert rep.metrics.counter("llm.admitted_midbatch").value == \
+        rep.admitted_midbatch
+
+
+def test_continuous_beats_static(llm_sol, token_trace):
+    """Continuous batching admits mid-batch and never loses to the static
+    whole-request baseline on the identical trace."""
+    trace, horizon = token_trace
+    kw = dict(trace=trace, horizon_s=horizon, seed=3,
+              ttft_slo=0.05, tpot_slo=0.005)
+    cont = llm_sol.serve(**kw)
+    stat = llm_sol.serve(static_batching=True, **kw)
+    assert cont.batching == "continuous" and stat.batching == "static"
+    assert cont.admitted_midbatch > 0
+    assert stat.admitted_midbatch == 0
+    assert stat.conserved
+    assert cont.token_goodput >= stat.token_goodput
+
+
+def test_token_executor_deterministic(llm_sol, token_trace):
+    trace, horizon = token_trace
+    kw = dict(trace=trace, horizon_s=horizon, seed=3, ttft_slo=0.05,
+              tpot_slo=0.005)
+    a = llm_sol.serve(**kw).to_json()
+    b = llm_sol.serve(**kw).to_json()
+    assert a == b
+
+
+def test_static_replay_of_other_mode(llm_sol, token_trace):
+    """The losing deployment mode replays on the identical trace via
+    serve(plan=...) -- the bench's baseline path."""
+    trace, horizon = token_trace
+    plans = llm_sol.diagnostics["plans"]
+    other = plans["colocated" if llm_sol.llm.mode == "disaggregated"
+                  else "disaggregated"]
+    assert other is not None
+    rep = llm_sol.serve(plan=other, static_batching=True, trace=trace,
+                        horizon_s=horizon, seed=3)
+    assert rep.mode == other.mode and rep.conserved
+
+
+def test_edf_no_starvation(cfgs):
+    """Satellite regression: EDF reorder never starves a model -- every
+    request still completes (or is accounted) under strict conservation,
+    for both deployment modes."""
+    wl = scope.WorkloadSpec.lm(cfgs, SEQ, [2.0, 1.0])
+    for mode in ("colocated", "disaggregated"):
+        prob = scope.problem(wl, "mcm16", strategy="llm-phase",
+                             output_tokens=OUT, phase_mode=mode, m_samples=8)
+        sol = scope.solve(prob)
+        assert sol.feasible and sol.llm.mode == mode
+        traffic, horizon = sol.offered_traffic(0.9, 300)
+        lengths = TokenLengths(prompt_mean=SEQ, output_mean=OUT)
+        trace = request_trace(traffic, horizon, seed=5, lengths=lengths)
+        # mixed SLO tightness across models: EDF favors the tight one but
+        # must not starve the loose one
+        rep = sol.serve(trace=trace, horizon_s=horizon, seed=5,
+                        queue_policy="edf",
+                        ttft_slo={cfgs[0].name + "-smoke": 0.001,
+                                  cfgs[1].name + "-smoke": 1.0},
+                        tpot_slo=0.005)
+        assert rep.conserved
+        assert rep.meta["queue_policy"] == "edf"
+        for m in rep.per_model.values():
+            # drained run: nothing starved in queue forever
+            assert m.completed_requests + m.dropped_requests == \
+                m.arrived_requests
+            assert m.completed_requests > 0
+
+
+def test_edf_matches_fifo_population(llm_sol, token_trace):
+    """EDF reorders but conserves: same completed-request population size
+    as FIFO on the identical trace."""
+    trace, horizon = token_trace
+    kw = dict(trace=trace, horizon_s=horizon, seed=3, ttft_slo=0.02,
+              tpot_slo=0.005)
+    fifo = llm_sol.serve(queue_policy="fifo", **kw)
+    edf = llm_sol.serve(queue_policy="edf", **kw)
+    assert fifo.conserved and edf.conserved
+    assert edf.total_completed == fifo.total_completed
+
+
+# ------------------------------------------------------------- facade
+
+def test_workloadspec_lm_phase(cfgs):
+    wl_p = scope.WorkloadSpec.lm(cfgs, SEQ)
+    wl_d = scope.WorkloadSpec.lm(cfgs, SEQ, phase="decode")
+    assert wl_p.phase == "prefill" and wl_d.phase == "decode"
+    assert "@prefill" in wl_p.models[0].graph.name
+    assert "@decode" in wl_d.models[0].graph.name
+    # decode= overrides phase=
+    wl_o = scope.WorkloadSpec.lm(cfgs, SEQ, phase="prefill", decode=True)
+    assert wl_o.phase == "decode"
+    with pytest.raises(ValueError):
+        scope.WorkloadSpec.lm(cfgs, SEQ, phase="train")
+
+
+def test_batching_policy_queue_policy_validated():
+    assert BatchingPolicy(queue_policy="edf").queue_policy == "edf"
+    with pytest.raises(ValueError):
+        BatchingPolicy(queue_policy="lifo")
+
+
+def test_llm_fingerprint_sensitivity(cfgs):
+    wl = scope.WorkloadSpec.lm(cfgs, SEQ, [2.0, 1.0])
+    prob = scope.problem(wl, "mcm16", strategy="llm-phase",
+                         output_tokens=OUT, m_samples=8)
+    fp = scope.problem_fingerprint(prob)
+    assert fp != scope.problem_fingerprint(
+        prob.with_options(output_tokens=OUT * 2))
+    assert fp != scope.problem_fingerprint(
+        prob.with_options(phase_mode="colocated"))
+
+
+def test_llm_solution_json_and_describe(llm_sol):
+    js = llm_sol.to_json()
+    assert js["feasible"] and js["mode"] in ("disaggregated", "colocated")
+    assert js["token_rate"] > 0 and len(js["assignments"]) == 2
+    for a in js["assignments"]:
+        assert a["max_seqs"] > 0 and a["kv_capacity_bytes"] > 0
+    assert any("mode=" in line for line in llm_sol.describe())
+
+
+def test_simulate_tokens_wrapper(llm_sol, token_trace):
+    trace, horizon = token_trace
+    rep = simulate_tokens(llm_sol.llm, llm_sol.hw, trace,
+                          horizon_s=horizon, seed=3)
+    assert rep.conserved and rep.total_arrived == len(trace)
