@@ -68,6 +68,12 @@ def _serve_row(rep) -> dict:
         assert 0 <= mm.queue_p95 <= mm.queue_max, (
             "queue p95 outside [0, max]", m, mm.queue_p95, mm.queue_max)
         queue_p95[m] = mm.queue_p95
+    # per-row bottleneck labels: the dominant waterfall component (queue
+    # wait / batch delay / service / dead time) per model, gated on the
+    # exact-conservation invariant
+    ex = rep.explain() if rep.waterfalls else None
+    if ex is not None:
+        assert ex["conserved"], "serving waterfalls not conserved"
     return {
         "mode": rep.mode,
         "goodput": rep.goodput,
@@ -80,6 +86,10 @@ def _serve_row(rep) -> dict:
         "conserved": rep.conserved,
         "makespan_s": rep.makespan_s,
         "queue_p95": queue_p95,
+        "bottleneck": ({m: r["dominant"] for m, r in ex["per_model"].items()}
+                       if ex else {}),
+        "bottleneck_overall": (ex["overall"]["dominant"]
+                               if ex and "overall" in ex else None),
     }
 
 
@@ -145,6 +155,9 @@ def _llm_row(rep) -> dict:
         assert mm.kv_peak_bytes <= mm.kv_capacity_bytes + 1e-6, (
             "KV occupancy exceeded the searched bound", m,
             mm.kv_peak_bytes, mm.kv_capacity_bytes)
+    ex = rep.explain() if rep.waterfalls else None
+    if ex is not None:
+        assert ex["conserved"], "LLM waterfalls not conserved"
     return {
         "mode": rep.mode,
         "batching": rep.batching,
@@ -162,6 +175,10 @@ def _llm_row(rep) -> dict:
                         for m, mm in rep.per_model.items()},
         "kv_capacity_mib": {m: mm.kv_capacity_bytes / 2**20
                             for m, mm in rep.per_model.items()},
+        "bottleneck": ({m: r["dominant"] for m, r in ex["per_model"].items()}
+                       if ex else {}),
+        "bottleneck_overall": (ex["overall"]["dominant"]
+                               if ex and "overall" in ex else None),
     }
 
 

@@ -11,6 +11,8 @@ Usage::
     python scripts/check_trace.py trace.json
     python scripts/check_trace.py trace.json --expect-faults \
         --expect-groups dse,serving
+    python scripts/check_trace.py llm_trace.json --expect-llm \
+        --expect-groups dse,serving,llm
 """
 from __future__ import annotations
 
@@ -35,13 +37,18 @@ def main() -> int:
     ap.add_argument("--expect-groups", default="",
                     help="comma-separated process groups that must appear "
                          "(e.g. dse,serving)")
+    ap.add_argument("--expect-llm", action="store_true",
+                    help="require token-level serving lanes: prefill/decode "
+                         "spans per model, admit_midbatch instants, and "
+                         "kv_bytes/<model> counter tracks")
     args = ap.parse_args()
 
     with open(args.trace) as f:
         payload = json.load(f)
     groups = [g for g in args.expect_groups.split(",") if g]
     problems = validate_chrome_trace(
-        payload, expect_fault_events=args.expect_faults, expect_groups=groups
+        payload, expect_fault_events=args.expect_faults, expect_groups=groups,
+        expect_llm=args.expect_llm,
     )
     events = payload.get("traceEvents", [])
     if problems:

@@ -149,6 +149,9 @@ tm = payload["baselines"]["time-mux"]
 for name, rep in (("co", co), ("equal-split", eq), ("time-mux", tm)):
     assert rep["conserved"], f"{name}: requests not conserved"
     assert rep["total_arrived"] == co["total_arrived"], f"{name}: trace mismatch"
+    # latency-waterfall conservation: per-request components fold back to
+    # end-to-end latency exactly, aggregated per model and overall
+    assert rep["explain"]["conserved"], f"{name}: waterfalls not conserved"
 print(f"serving smoke: {dt:.2f}s (budget {budget:.0f}s), "
       f"{co['total_completed']}/{co['total_arrived']} requests conserved; "
       f"goodput co {co['goodput']:.0f}/s vs equal-split {eq['goodput']:.0f} "
@@ -176,6 +179,7 @@ args = ["--llm", "gemma2-9b:2,granite-3-8b:1", "--llm-smoke", "--hw", "mcm16",
         "--seq-len", "128", "--output-tokens", "64",
         "--requests", "800", "--rate-scale", "0.9", "--seed", "0",
         "--ttft-slo-ms", "50", "--tpot-slo-ms", "2",
+        "--trace", "/tmp/repro_llm_trace.json",
         "--baselines", "--json"]
 t0 = time.time()
 out = subprocess.run(
@@ -194,6 +198,9 @@ for name, r in [("chosen", rep)] + list(payload["baselines"].items()):
     assert r["total_arrived"] == rep["total_arrived"], f"{name}: trace mismatch"
 # continuous batching must actually admit into running decode batches
 assert rep["admitted_midbatch"] > 0, "no mid-batch admissions"
+# token waterfalls (queue/prefill/hand-off/admission/decode) conserve TTFT
+# + decode latency exactly for every completed request
+assert rep["explain"]["conserved"], "LLM waterfalls not conserved"
 for m, mm in rep["per_model"].items():
     assert mm["kv_peak_bytes"] <= mm["kv_capacity_bytes"] + 1e-6, \
         f"{m}: KV occupancy exceeded the searched bound"
@@ -224,7 +231,8 @@ budget = float(os.environ.get("CI_CHAOS_BUDGET_S", "90"))
 args = ["--mix", "alexnet:1:500,resnet18:1:500", "--hw", "mcm16_hetero",
         "--requests", "8000", "--rate-scale", "0.75", "--seed", "0",
         "--faults", "zone:little@35%:65%",
-        "--trace", "/tmp/repro_trace.json", "--json"]
+        "--trace", "/tmp/repro_trace.json",
+        "--dashboard", "/tmp/repro_dash.html", "--json"]
 t0 = time.time()
 out = subprocess.run(
     [sys.executable, "-m", "repro", "serve", *args],
@@ -236,6 +244,11 @@ rep = json.loads(out.stdout)["serving"]
 f = rep["faults"]
 # strict conservation: arrived == completed + dropped(by cause) + queued
 assert rep["conserved"], "requests not conserved through the failure"
+# waterfall conservation must hold through kills, spills and redeploys,
+# with the fault dead time attributed to its cause
+assert rep["explain"]["conserved"], "chaos waterfalls not conserved"
+assert rep["explain"]["dead_time_s"]["fault"] > 0, \
+    "zone failure charged no fault dead time"
 for m, mm in rep["per_model"].items():
     by_cause = sum(s for _, s in mm["drop_causes"].values())
     assert by_cause == mm["dropped_samples"], f"{m}: unattributed drops"
@@ -259,6 +272,26 @@ PY
   echo "== trace schema check (repro.obs Chrome trace from the chaos smoke) =="
   python scripts/check_trace.py /tmp/repro_trace.json \
     --expect-faults --expect-groups dse,serving
+  python scripts/check_trace.py /tmp/repro_llm_trace.json \
+    --expect-llm --expect-groups dse,serving,llm
+
+  echo "== dashboard sanity (Scope Lens HTML from the chaos smoke) =="
+  python - <<'PY'
+html = open("/tmp/repro_dash.html").read()
+assert len(html) > 10_000, f"dashboard suspiciously small: {len(html)} bytes"
+assert "fault-window" in html, "no fault/recovery windows rendered"
+assert "latency waterfalls" in html, "no waterfall tables rendered"
+assert "DSE cost attribution" in html, "no cost attribution tables rendered"
+assert "<script" not in html, "dashboard must stay dependency-free"
+print(f"dashboard sanity: {len(html)} bytes, fault windows + waterfall "
+      f"+ attribution tables present")
+PY
+
+  echo "== trace_diff self-diff (must report zero deltas) =="
+  python scripts/trace_diff.py /tmp/repro_trace.json /tmp/repro_trace.json \
+    --fail-on-delta
+  python scripts/trace_diff.py /tmp/repro_llm_trace.json \
+    /tmp/repro_llm_trace.json --fail-on-delta
 
   echo "== perf regression gate (tracing-off DSE vs committed baseline) =="
   python scripts/perf_gate.py

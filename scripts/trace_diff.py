@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Diff two Chrome trace-event JSON files from ``repro.obs``.
+
+Aggregates each trace into (process, span-name) self-time/total/count rows
+-- the same nesting-aware accounting as ``Tracer.summary()`` -- plus
+(process, counter-name) last/max/sample rows, then prints the B-vs-A
+deltas.  A self-diff reports zero deltas by construction, which CI
+asserts; between two runs the table answers "where did the time move?".
+
+Usage::
+
+    python scripts/trace_diff.py before.json after.json
+    python scripts/trace_diff.py trace.json trace.json --fail-on-delta
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> list[dict]:
+    with open(path) as fh:
+        if path.endswith(".jsonl"):
+            return [json.loads(line) for line in fh if line.strip()]
+        payload = json.load(fh)
+    return payload.get("traceEvents", [])
+
+
+def aggregate(events: list[dict]) -> tuple[dict, dict]:
+    """-> (span rows, counter rows).
+
+    Span rows: ``(process, name) -> [count, total_us, self_us]`` with child
+    time subtracted per (pid, tid) lane.  Counter rows:
+    ``(process, name) -> [samples, last, max]``.
+    """
+    pid_name: dict = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            pid_name[ev.get("pid")] = ev.get("args", {}).get("name", "")
+
+    lanes: dict[tuple, list] = {}
+    counters: dict[tuple, list] = {}
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "X":
+            lanes.setdefault((ev.get("pid"), ev.get("tid")), []).append(ev)
+        elif ph == "C":
+            key = (pid_name.get(ev.get("pid"), str(ev.get("pid"))),
+                   ev.get("name"))
+            row = counters.setdefault(key, [0, 0.0, float("-inf")])
+            v = float(ev.get("args", {}).get("value", 0.0))
+            row[0] += 1
+            row[1] = v
+            row[2] = max(row[2], v)
+
+    spans: dict[tuple, list] = {}
+    for (pid, _tid), evs in lanes.items():
+        evs.sort(key=lambda e: (e.get("ts", 0), -e.get("dur", 0)))
+        stack: list = []
+        for ev in evs:
+            t0 = ev.get("ts", 0)
+            dur = ev.get("dur", 0)
+            t1 = t0 + dur
+            while stack and t0 >= stack[-1][1] - 1e-9:
+                stack.pop()
+            key = (pid_name.get(pid, str(pid)), ev.get("name"))
+            row = spans.setdefault(key, [0, 0.0, 0.0])
+            row[0] += 1
+            row[1] += dur
+            row[2] += dur
+            if stack:
+                spans[stack[-1][2]][2] -= dur
+            stack.append((t0, t1, key))
+    return spans, counters
+
+
+def _diff(a: dict, b: dict, cols) -> list[tuple]:
+    out = []
+    for key in sorted(set(a) | set(b), key=str):
+        ra, rb = a.get(key), b.get(key)
+        za = ra if ra is not None else [0] * len(cols)
+        zb = rb if rb is not None else [0] * len(cols)
+        deltas = [zb[i] - za[i] for i in range(len(cols))]
+        if any(d != 0 for d in deltas) or ra is None or rb is None:
+            out.append((key, za, zb, deltas))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace_a", help="baseline Chrome trace JSON")
+    ap.add_argument("trace_b", help="comparison Chrome trace JSON")
+    ap.add_argument("--tol-us", type=float, default=0.0,
+                    help="ignore span-time deltas at or below this many µs")
+    ap.add_argument("--fail-on-delta", action="store_true",
+                    help="exit 1 if any delta survives the tolerance")
+    args = ap.parse_args()
+
+    spans_a, ctr_a = aggregate(_load(args.trace_a))
+    spans_b, ctr_b = aggregate(_load(args.trace_b))
+
+    span_rows = [
+        row for row in _diff(spans_a, spans_b, ("count", "total", "self"))
+        if row[0] not in spans_a or row[0] not in spans_b
+        or row[3][0] != 0 or abs(row[3][1]) > args.tol_us
+        or abs(row[3][2]) > args.tol_us
+    ]
+    ctr_rows = _diff(ctr_a, ctr_b, ("samples", "last", "max"))
+
+    n = len(span_rows) + len(ctr_rows)
+    if span_rows:
+        print(f"{'span':<42} {'d_count':>8} {'d_total_us':>12} "
+              f"{'d_self_us':>12}")
+        for (proc, name), _a, _b, d in span_rows:
+            print(f"{proc + '/' + str(name):<42.42} {d[0]:>8} "
+                  f"{d[1]:>12.3f} {d[2]:>12.3f}")
+    if ctr_rows:
+        print(f"{'counter':<42} {'d_samples':>9} {'d_last':>12} "
+              f"{'d_max':>12}")
+        for (proc, name), _a, _b, d in ctr_rows:
+            print(f"{proc + '/' + str(name):<42.42} {d[0]:>9} "
+                  f"{d[1]:>12.4g} {d[2]:>12.4g}")
+    print(f"trace_diff: {args.trace_a} vs {args.trace_b}: "
+          f"{n} delta row(s)")
+    if args.fail_on_delta and n:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

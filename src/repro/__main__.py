@@ -67,6 +67,10 @@ def _build_solve_parser(sub) -> argparse.ArgumentParser:
                     help="write a Chrome trace-event JSON of the solve "
                          "(open in Perfetto / chrome://tracing; .jsonl for "
                          "one event per line)")
+    ap.add_argument("--dashboard", default=None, metavar="PATH",
+                    help="write a self-contained HTML dashboard: per-stage "
+                         "cost attribution tables plus the solve timeline "
+                         "(no external assets)")
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit a machine-readable JSON summary")
     return ap
@@ -144,6 +148,11 @@ def _build_serve_parser(sub) -> argparse.ArgumentParser:
                     help="write a Chrome trace-event JSON of the whole run "
                          "(solver spans + server lanes + queue/fault "
                          "timeline; open in Perfetto)")
+    ap.add_argument("--dashboard", default=None, metavar="PATH",
+                    help="write a self-contained HTML dashboard: cost "
+                         "attribution + latency waterfall tables, the run "
+                         "timeline with fault/recovery windows, and "
+                         "queue/KV counter sparklines")
     ap.add_argument("--json", action="store_true", dest="as_json")
     return ap
 
@@ -160,7 +169,7 @@ def _cmd_serve(args) -> None:
     # baseline solve, the executor's sim-time lanes, and any mid-run
     # re-solves all land on one timeline
     obs_tracer = None
-    if args.trace:
+    if args.trace or args.dashboard:
         from .obs import Tracer
 
         obs_tracer = Tracer()
@@ -217,8 +226,21 @@ def _cmd_serve(args) -> None:
                 out["baselines"][name] = None
                 continue
             out["baselines"][name] = b.serve(**serve_kw).to_json()
-    if obs_tracer is not None:
+    if obs_tracer is not None and args.trace:
         obs_tracer.write(args.trace)
+    if args.dashboard:
+        from .obs import write_dashboard
+
+        write_dashboard(
+            args.dashboard, title=f"Scope Lens: serve {args.mix}",
+            solution_explain=sol.explain(),
+            serving_explain=report.explain(),
+            tracer=obs_tracer,
+            meta={"hw": args.hw, "strategy": sol.strategy,
+                  "requests": report.total_arrived,
+                  "faults": args.faults or "-"},
+        )
+        print(f"dashboard written to {args.dashboard}", file=sys.stderr)
     if args.as_json:
         print(json.dumps(out, indent=1))
         return
@@ -230,7 +252,8 @@ def _cmd_serve(args) -> None:
     if obs_tracer is not None:
         print()
         print(obs_tracer.summary())
-        print(f"trace written to {args.trace} (open in Perfetto)")
+        if args.trace:
+            print(f"trace written to {args.trace} (open in Perfetto)")
     for name, rep in out.get("baselines", {}).items():
         if rep is None:
             print(f"{name}: infeasible")
@@ -249,7 +272,7 @@ def _cmd_serve_llm(args) -> None:
     from .serving import TokenLengths, request_trace
 
     obs_tracer = None
-    if args.trace:
+    if args.trace or args.dashboard:
         from .obs import Tracer
 
         obs_tracer = Tracer()
@@ -293,8 +316,21 @@ def _cmd_serve_llm(args) -> None:
                 continue
             b = sol.serve(plan=alt, static_batching=True, **serve_kw)
             out["baselines"][f"{mode}-static"] = b.to_json()
-    if obs_tracer is not None:
+    if obs_tracer is not None and args.trace:
         obs_tracer.write(args.trace)
+    if args.dashboard:
+        from .obs import write_dashboard
+
+        write_dashboard(
+            args.dashboard, title=f"Scope Lens: serve --llm {args.llm}",
+            solution_explain=sol.explain(),
+            serving_explain=report.explain(),
+            serving_title="Token-level latency waterfalls",
+            tracer=obs_tracer,
+            meta={"hw": args.hw, "mode": report.mode,
+                  "requests": report.total_arrived},
+        )
+        print(f"dashboard written to {args.dashboard}", file=sys.stderr)
     if args.as_json:
         print(json.dumps(out, indent=1))
         return
@@ -306,7 +342,8 @@ def _cmd_serve_llm(args) -> None:
     if obs_tracer is not None:
         print()
         print(obs_tracer.summary())
-        print(f"trace written to {args.trace} (open in Perfetto)")
+        if args.trace:
+            print(f"trace written to {args.trace} (open in Perfetto)")
     for name, rep in out.get("baselines", {}).items():
         if rep is None:
             print(f"{name}: infeasible")
@@ -319,6 +356,12 @@ def _cmd_serve_llm(args) -> None:
 
 
 def _cmd_solve(args) -> None:
+    trace_arg = args.trace
+    if args.dashboard and trace_arg is None:
+        # the dashboard wants a timeline even when no trace file was asked for
+        from .obs import Tracer
+
+        trace_arg = Tracer()
     options = SearchOptions(
         strategy=args.strategy,
         mode=args.mode,
@@ -333,7 +376,7 @@ def _cmd_solve(args) -> None:
         switch_period_s=args.switch_period_s,
         samples=args.samples,
         seed=args.seed,
-        trace=args.trace,
+        trace=trace_arg,
     )
     prob = problem(args.mix, args.hw, options=options)
     sol = solve(prob)
@@ -343,6 +386,17 @@ def _cmd_solve(args) -> None:
         raise SystemExit(
             f"no feasible {sol.strategy} solution for {args.mix} on {args.hw}"
         )
+    if args.dashboard:
+        from .obs import write_dashboard
+
+        write_dashboard(
+            args.dashboard, title=f"Scope Lens: solve {args.mix}",
+            solution_explain=sol.explain(),
+            tracer=sol.diagnostics.get("trace"),
+            meta={"hw": args.hw, "strategy": sol.strategy,
+                  "mode": args.mode},
+        )
+        print(f"dashboard written to {args.dashboard}", file=sys.stderr)
 
     if args.as_json:
         out = sol.to_json()
@@ -357,7 +411,8 @@ def _cmd_solve(args) -> None:
     if tr is not None:
         print()
         print(tr.summary())
-        print(f"trace written to {args.trace} (open in Perfetto)")
+        if args.trace:
+            print(f"trace written to {args.trace} (open in Perfetto)")
     if args.baselines:
         for name, tp in _baseline_rates(prob, sol).items():
             if tp is None:

@@ -55,7 +55,7 @@ from .core.baselines import (
     schedule_segmented,
     schedule_sequential,
 )
-from .core.costmodel import INF, CostModel
+from .core.costmodel import INF, CostBreakdown, CostModel
 from .core.fastcost import FastCostModel
 from .core.graph import (
     MM_PARTITIONED,
@@ -469,6 +469,106 @@ class Solution:
             )
             total += lat
         return total
+
+    # ---------------------------------------------------------- attribution
+    def explain(self) -> dict:
+        """Cost attribution for the solved deployment (Scope Lens).
+
+        Decomposes every stage/quota the solver priced -- single-model
+        segments, multimodel assignments (merged groups included), LLM
+        prefill/decode phase quotas -- into the additive
+        :data:`~repro.core.costmodel.BREAKDOWN_COMPONENTS` (compute, NoP
+        comm, seam crossing, DRAM weight load, input staging) with a
+        bottleneck label per stage (compute- / link- / seam- / dram- /
+        staging- / kv-bound).  The components of each stage sum
+        *bit-identically* to the scalar the solver optimized
+        (``schedule.latency`` per stage), on whichever engine the search
+        used -- the conservation invariant the property tests assert.
+        """
+        opts = self.problem.options
+        cost = replace(opts, cost=None).make_cost(self.hw)
+        out: dict = {"strategy": self.strategy, "package": self.hw.name,
+                     "chips": self.hw.chips, "stages": []}
+
+        def stage_entry(label, graph, sched, *, chips, stage, model,
+                        kv=None):
+            seg_bds = []
+            for seg in sched.segments:
+                bd, per_cl = cost.segment_breakdown(graph, seg.clusters)
+                seg_bds.append((bd, per_cl))
+            total = sched.latency
+            merged = CostBreakdown.merge([bd for bd, _ in seg_bds], total)
+            bound = merged.bound
+            if kv is not None and kv.get("kv_bound"):
+                bound = "kv"
+            entry = {
+                "label": label, "model": model, "stage": stage,
+                "chips": chips, "latency": total, "bound": bound,
+                "breakdown": merged.to_json(),
+                "conserved": merged.conserved,
+                "segments": [
+                    dict(bd.to_json(), clusters=[c.to_json() for c in cls_])
+                    for bd, cls_ in seg_bds
+                ],
+            }
+            if kv:
+                entry["kv"] = kv
+            out["stages"].append(entry)
+
+        if self.llm is not None:
+            from .core.workloads.lm import lm_graph
+
+            plan = self.llm
+            out["mode"] = plan.mode
+            out["mix_rate"] = plan.mix_rate
+            m = int(self.diagnostics.get("m_samples", opts.m_samples))
+            for a in plan.assignments:
+                gp = lm_graph(a.cfg, plan.seq_len)
+                stage_entry(f"{a.model}/prefill", gp, a.prefill_schedule,
+                            chips=a.prefill_chips, stage="prefill",
+                            model=a.model)
+                if a.decode_schedule is not None:
+                    gd = lm_graph(a.cfg, plan.seq_len, decode=True)
+                    kv = {
+                        "kv_seq_bytes": a.kv_seq_bytes,
+                        "kv_capacity_bytes": a.kv_capacity_bytes,
+                        "max_seqs": a.max_seqs,
+                        # the decode envelope flattened at the memory bound
+                        # when the quota holds fewer sequences than the
+                        # batch the compute bound would fill
+                        "kv_bound": 0 <= a.max_seqs < m,
+                    }
+                    stage_entry(f"{a.model}/decode", gd, a.decode_schedule,
+                                chips=a.decode_chips, stage="decode",
+                                model=a.model, kv=kv)
+        elif self.multi is not None:
+            graphs = {mo.name: mo.graph for mo in self.problem.workload.models}
+            if self.multi.mode == "merged":
+                mg, _ = merged_graph(list(self.problem.workload.models))
+                graphs[mg.name] = mg
+            by_name = {mo.name: mo for mo in self.problem.workload.models}
+            for group in self.multi.meta.get("merge_groups", ()):
+                mg, _ = merged_graph([by_name[n] for n in group])
+                graphs[mg.name] = mg
+            out["mode"] = self.multi.mode
+            for a in self.multi.assignments:
+                quota = (dict(a.chip_quota) if a.chip_quota
+                         else {a.chip_type: a.chips})
+                stage_entry(a.model, graphs[a.schedule.workload], a.schedule,
+                            chips=a.chips, stage="quota", model=a.model)
+                out["stages"][-1]["quota"] = {str(k): v
+                                              for k, v in quota.items()}
+        elif self.schedule is not None and self.schedule.latency < INF:
+            stage_entry(self.schedule.workload, self.problem.workload.graph,
+                        self.schedule, chips=self.schedule.chips,
+                        stage="schedule", model=self.schedule.workload)
+
+        out["ranking"] = sorted(
+            ({"label": s["label"], "bound": s["bound"],
+              "latency": s["latency"]} for s in out["stages"]),
+            key=lambda r: -r["latency"],
+        )
+        return out
 
     def deploy(
         self,

@@ -67,6 +67,104 @@ def _flavor_tuple(chip_type, n_clusters: int) -> tuple:
     return types
 
 
+# --------------------------------------------------------------- attribution
+# Fixed component order: the conservation fold sums in exactly this order, so
+# "components sum to the scalar" is a bit-exact statement, not an approximate
+# one (see conserve_components).
+BREAKDOWN_COMPONENTS = ("compute", "nop_comm", "seam", "dram", "staging")
+
+# Component -> bottleneck label ("what is this stage bound by").
+BOUND_LABELS = {"compute": "compute", "nop_comm": "link", "seam": "seam",
+                "dram": "dram", "staging": "staging"}
+
+
+def fold_components(components: dict, order=BREAKDOWN_COMPONENTS) -> float:
+    """Left-to-right sum in a fixed component order."""
+    total = 0.0
+    for name in order:
+        total += components.get(name, 0.0)
+    return total
+
+
+def conserve_components(components: dict, total: float,
+                        order=BREAKDOWN_COMPONENTS) -> dict:
+    """Adjust ``components`` so :func:`fold_components` equals ``total``
+    *bit-identically*.
+
+    The per-component charges are recomputed with the same arithmetic the
+    scalar used, but accumulated per category rather than per layer -- a
+    different floating-point summation order, so the fold can differ from
+    the optimized scalar by a few ulps.  The residual is folded into the
+    dominant bucket until exact; if rounding refuses to converge (or the
+    scalar is non-finite: an infeasible placement), the degenerate-but-exact
+    fallback parks the whole scalar in one bucket (``x + 0.0 == x``).
+
+    The serving layer reuses this with its own ``order`` (latency-waterfall
+    components); the same bit-exactness argument applies.
+    """
+    out = {k: float(components.get(k, 0.0)) for k in order}
+    if not math.isfinite(total):
+        # Infeasible cluster: place_weights ran out of per-chip DRAM/SRAM
+        # residency, so the infinity is a memory fact.
+        out = dict.fromkeys(order, 0.0)
+        out["dram" if "dram" in out else order[0]] = total
+        return out
+    for _ in range(64):
+        residual = total - fold_components(out, order)
+        if residual == 0.0:
+            return out
+        out[max(out, key=lambda k: abs(out[k]))] += residual
+    top = max(out, key=lambda k: abs(out[k]))
+    out = dict.fromkeys(order, 0.0)
+    out[top] = total
+    return out
+
+
+@dataclass(frozen=True)
+class CostBreakdown:
+    """A scalar cost split into additive components that *conserve* it.
+
+    ``components`` maps every name in :data:`BREAKDOWN_COMPONENTS` to
+    seconds; folding them in that fixed order reproduces ``total``
+    bit-identically (the invariant ``conserved`` checks).  ``bottleneck``
+    names the largest component, ``bound`` its human label
+    (compute/link/seam/dram/staging).
+    """
+    total: float
+    components: dict
+
+    @property
+    def conserved(self) -> bool:
+        return fold_components(self.components) == self.total
+
+    @property
+    def bottleneck(self) -> str:
+        return max(self.components, key=lambda k: self.components[k])
+
+    @property
+    def bound(self) -> str:
+        return BOUND_LABELS[self.bottleneck]
+
+    def to_json(self) -> dict:
+        return {"total": self.total, "bound": self.bound,
+                "components": dict(self.components)}
+
+    @classmethod
+    def build(cls, components: dict, total: float) -> "CostBreakdown":
+        return cls(total=total,
+                   components=conserve_components(components, total))
+
+    @classmethod
+    def merge(cls, parts, total: float) -> "CostBreakdown":
+        """Sum breakdowns (e.g. per-segment -> whole schedule), re-conserved
+        against the combined scalar."""
+        buckets = dict.fromkeys(BREAKDOWN_COMPONENTS, 0.0)
+        for p in parts:
+            for k, v in p.components.items():
+                buckets[k] += v
+        return cls.build(buckets, total)
+
+
 @dataclass(frozen=True)
 class LayerTime:
     pre: float
@@ -436,6 +534,140 @@ class CostModel:
                     load += self.m * graph.layers[i].in_bytes / self.hw.dram_bw_total
         n_cl = len(clusters)
         return load + (self.m + n_cl - 1) * bottleneck, times
+
+    # ------------------------------------------------------------ attribution
+    def comm_kind(
+        self,
+        layer: LayerNode,
+        p: str,
+        n: int,
+        next_p: str | None,
+        next_n: int | None,
+        same_region: bool,
+        chip_type: str | None = None,
+        next_chip_type: str | None = SAME_FLAVOR,
+    ) -> str:
+        """Which component a :meth:`comm_time` charge belongs to.
+
+        Intra-region collectives ride the NoP injection links
+        (``nop_comm``); a region hand-off is ``seam`` when the boundary
+        links bind (the ZigZag cut, flavor seam or not) and ``nop_comm``
+        when the producer's injection bandwidth does.
+        """
+        if same_region:
+            return "nop_comm"
+        vol = self.comm_volume(layer, p, n, next_p, next_n, same_region)
+        if vol <= 0:
+            return "nop_comm"
+        hw = self.hw_for(chip_type)
+        if next_chip_type is SAME_FLAVOR or next_chip_type == chip_type:
+            link_bw = hw.link_bw
+        else:
+            link_bw = self.seam_bw(chip_type, next_chip_type)
+        links = max(1, round(math.sqrt(min(n, next_n or n))))
+        boundary = vol / (links * link_bw)
+        injection = vol / (n * hw.nop_bw_per_chip)
+        return "seam" if boundary >= injection else "nop_comm"
+
+    def cluster_breakdown(
+        self,
+        graph: LayerGraph,
+        cluster: ClusterAssignment,
+        next_cluster: ClusterAssignment | None,
+        first_in_segment: bool,
+        last_in_segment: bool,
+    ) -> CostBreakdown:
+        """Decompose :meth:`cluster_time` into BREAKDOWN_COMPONENTS.
+
+        The scalar is obtained through ``self.cluster_time`` -- i.e. the
+        *engine's own* entry point (memoized on FastCostModel) -- and the
+        per-layer charges are re-derived with the reference arithmetic this
+        class defines (FastCostModel inherits it unchanged), so the
+        conserved breakdown sums bit-identically to the number the solver
+        optimized on either engine.
+        """
+        total = self.cluster_time(graph, cluster, next_cluster,
+                                  first_in_segment, last_in_segment)
+        buckets = dict.fromkeys(BREAKDOWN_COMPONENTS, 0.0)
+        if total == INF:
+            return CostBreakdown.build(buckets, total)
+        placement = self.place_weights(graph, cluster)
+        n = cluster.region_chips
+        layers = graph.layers[cluster.layer_lo : cluster.layer_hi]
+        for k, (layer, p) in enumerate(zip(layers, cluster.partitions)):
+            last_layer = k == len(layers) - 1
+            nxt_t = SAME_FLAVOR
+            if not last_layer:
+                nxt_p, nxt_n, same = cluster.partitions[k + 1], n, True
+            elif next_cluster is not None:
+                nxt_p, nxt_n, same = (next_cluster.partitions[0],
+                                      next_cluster.region_chips, False)
+                nxt_t = next_cluster.chip_type
+            else:
+                nxt_p, nxt_n, same = None, None, False
+            if self.literal_pre:
+                buckets["dram"] += layer.weight_bytes / self.hw.dram_bw_total
+            gather = placement.gather_bytes[k]
+            if gather > 0:
+                buckets["nop_comm"] += (
+                    gather / self.hw_for(cluster.chip_type).nop_bw_per_chip)
+            comp = self.comp_time(layer, p, n, cluster.chip_type)
+            comm = self.comm_time(layer, p, n, nxt_p, nxt_n, same,
+                                  cluster.chip_type, nxt_t)
+            kind = self.comm_kind(layer, p, n, nxt_p, nxt_n, same,
+                                  cluster.chip_type, nxt_t)
+            if self.overlap:
+                # Eq. 7 keeps only the winner of the overlap race; ties go
+                # to comm, matching max(comm, comp) and the vectorized
+                # engine's select.
+                if comm >= comp:
+                    buckets[kind] += comm
+                else:
+                    buckets["compute"] += comp
+            else:
+                buckets["compute"] += comp
+                buckets[kind] += comm
+        return CostBreakdown.build(buckets, total)
+
+    def segment_breakdown(
+        self, graph: LayerGraph, clusters: tuple[ClusterAssignment, ...]
+    ) -> tuple[CostBreakdown, list[CostBreakdown]]:
+        """Decompose :meth:`segment_time`: ``(segment, per-cluster)``.
+
+        The pipeline wave repeats the bottleneck cluster's beat
+        ``m + Nc - 1`` times, so the segment inherits that cluster's
+        components at scale; the one-time deployment load splits into
+        ``dram`` (segment weights) and ``staging`` (batch input staging,
+        incl. mid-segment ``dram_input`` entries).
+        """
+        total, times = self.segment_time(graph, clusters)
+        per_cluster = []
+        for j, cl in enumerate(clusters):
+            nxt = clusters[j + 1] if j + 1 < len(clusters) else None
+            per_cluster.append(
+                self.cluster_breakdown(graph, cl, nxt, j == 0, nxt is None))
+        buckets = dict.fromkeys(BREAKDOWN_COMPONENTS, 0.0)
+        if total == INF:
+            return CostBreakdown.build(buckets, total), per_cluster
+        if not self.literal_pre:
+            seg_weights = sum(
+                graph.layers[i].weight_bytes
+                for cl in clusters
+                for i in range(cl.layer_lo, cl.layer_hi)
+            )
+            buckets["dram"] += seg_weights / self.hw.dram_bw_total
+        first_lo = clusters[0].layer_lo
+        stage_bytes = self.m * graph.layers[first_lo].in_bytes
+        for cl in clusters:
+            for i in range(cl.layer_lo, cl.layer_hi):
+                if i != first_lo and graph.layers[i].meta.get("dram_input"):
+                    stage_bytes += self.m * graph.layers[i].in_bytes
+        buckets["staging"] += stage_bytes / self.hw.dram_bw_total
+        beats = self.m + len(clusters) - 1
+        b = max(range(len(times)), key=lambda j: times[j])
+        for name, v in per_cluster[b].components.items():
+            buckets[name] += beats * v
+        return CostBreakdown.build(buckets, total), per_cluster
 
     # --------------------------------------------------------- DSE interface
     def segment_evaluator(self, graph, seg_lo, clustering, partitions,

@@ -1,10 +1,13 @@
 """Scope Observatory: unified tracing + metrics across the DSE and executor.
 
-See :mod:`repro.obs.trace` (span tracer, Chrome trace-event export) and
+See :mod:`repro.obs.trace` (span tracer, Chrome trace-event export),
 :mod:`repro.obs.metrics` (counters / gauges / histograms / time-weighted
-series).  Front doors elsewhere: ``SearchOptions(trace=...)``,
-``Solution.serve(tracer=...)``, and ``python -m repro solve/serve --trace``.
+series), and :mod:`repro.obs.dashboard` (self-contained HTML rendering of
+timelines, sparklines, and explain() breakdowns).  Front doors elsewhere:
+``SearchOptions(trace=...)``, ``Solution.serve(tracer=...)``, and
+``python -m repro solve/serve --trace ... --dashboard ...``.
 """
+from .dashboard import render_dashboard, write_dashboard
 from .metrics import (
     Counter,
     Gauge,
@@ -36,7 +39,9 @@ __all__ = [
     "TimeSeries",
     "Tracer",
     "current_tracer",
+    "render_dashboard",
     "traced",
     "use_tracer",
     "validate_chrome_trace",
+    "write_dashboard",
 ]

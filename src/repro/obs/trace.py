@@ -334,12 +334,18 @@ class Tracer:
 # ---------------------------------------------------------------------------
 
 def validate_chrome_trace(payload, expect_fault_events: bool = False,
-                          expect_groups=()) -> list[str]:
+                          expect_groups=(),
+                          expect_llm: bool = False) -> list[str]:
     """Schema-check a Chrome trace-event JSON object; returns problem strings.
 
     Checks: required keys per event phase, non-negative times, proper span
     nesting per (pid, tid) lane, monotone per-counter timestamps, requested
     process groups present, and (optionally) fault instant events.
+
+    ``expect_llm`` additionally requires the token-level serving signature:
+    ``prefill``/``decode`` spans on per-model ``<model>/<phase>`` lanes in
+    the ``llm`` group, at least one ``admit_midbatch`` instant, and
+    ``kv_bytes/<model>`` counter tracks.
     """
     problems: list[str] = []
     if not isinstance(payload, dict) or not isinstance(
@@ -353,6 +359,11 @@ def validate_chrome_trace(payload, expect_fault_events: bool = False,
     lanes: dict[tuple, list] = {}
     counter_last: dict[tuple, float] = {}
     saw_fault = False
+    pid_group: dict = {}            # pid -> process (group) name
+    lane_name: dict = {}            # (pid, tid) -> thread (lane) name
+    span_lanes: dict = {}           # span-name prefix evidence, per group
+    counter_names: set[str] = set()
+    saw_admit = False
 
     for i, ev in enumerate(events):
         if not isinstance(ev, dict):
@@ -370,18 +381,28 @@ def validate_chrome_trace(payload, expect_fault_events: bool = False,
         if ph == "M":
             if name == "process_name":
                 groups.add(ev.get("args", {}).get("name", ""))
+                pid_group[ev.get("pid")] = ev.get("args", {}).get("name", "")
+            elif name == "thread_name":
+                lane_name[(ev.get("pid"), ev.get("tid"))] = \
+                    ev.get("args", {}).get("name", "")
         elif ph == "X":
             dur = ev.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 problems.append(f"event {i} (X/{name}): bad dur {dur!r}")
             else:
-                lanes.setdefault((ev.get("pid"), ev.get("tid")), []).append(
-                    (ts, ts + dur, name))
+                key = (ev.get("pid"), ev.get("tid"))
+                lanes.setdefault(key, []).append((ts, ts + dur, name))
+                if isinstance(name, str):
+                    span_lanes.setdefault(
+                        pid_group.get(ev.get("pid"), ""), set()).add(
+                        (name.split(" ")[0], lane_name.get(key, "")))
         elif ph == "i":
             if ev.get("s") not in ("t", "p", "g"):
                 problems.append(f"event {i} (i/{name}): missing scope 's'")
             if isinstance(name, str) and name.startswith("fault"):
                 saw_fault = True
+            if name == "admit_midbatch":
+                saw_admit = True
         elif ph == "C":
             if "value" not in ev.get("args", {}):
                 problems.append(f"event {i} (C/{name}): missing args.value")
@@ -390,6 +411,8 @@ def validate_chrome_trace(payload, expect_fault_events: bool = False,
                 problems.append(
                     f"event {i} (C/{name}): non-monotone counter ts {ts}")
             counter_last[key] = ts
+            if isinstance(name, str):
+                counter_names.add(name)
         else:
             problems.append(f"event {i}: unknown phase {ph!r}")
 
@@ -415,4 +438,16 @@ def validate_chrome_trace(payload, expect_fault_events: bool = False,
                             f"(have {sorted(groups)})")
     if expect_fault_events and not saw_fault:
         problems.append("no fault instant events found")
+    if expect_llm:
+        llm_spans = span_lanes.get("llm", set())
+        for phase in ("prefill", "decode"):
+            if not any(n == phase and lane.endswith(f"/{phase}")
+                       for n, lane in llm_spans):
+                problems.append(
+                    f"no {phase} spans on a '<model>/{phase}' lane in "
+                    f"group 'llm'")
+        if not saw_admit:
+            problems.append("no admit_midbatch instant events found")
+        if not any(n.startswith("kv_bytes/") for n in counter_names):
+            problems.append("no kv_bytes/<model> counter tracks found")
     return problems

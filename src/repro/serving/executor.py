@@ -47,7 +47,7 @@ from ..core.hw import HardwareModel
 from ..core.regions import check_assignments_placement, flavor_zones
 from ..multimodel.quota import package_flavors
 from .faults import FaultEvent, FaultInjector
-from .metrics import ServingReport, summarize
+from .metrics import WATERFALL_COMPONENTS, ServingReport, conserve_waterfall, summarize
 from .traffic import Request
 
 INF = float("inf")
@@ -376,6 +376,11 @@ class ServingExecutor:
         # per-batch log: (t_start, t_done, work_s, samples, window) -- the
         # slice-enforcement invariant's evidence
         self.batch_log: dict[str, list[tuple]] = {m: [] for m in models}
+        # per-request latency waterfalls (Scope Lens): every completed
+        # request's latency decomposed into WATERFALL_COMPONENTS, conserved
+        # bit-identically against the measured latency
+        self.waterfalls: dict[str, list[dict]] = {m: [] for m in models}
+        self._acct: dict[int, dict] = {}     # id(request) -> open accounting
         self.redeploys: list[dict] = []
         self._heap: list[tuple] = []
         self._seq = 0
@@ -452,6 +457,16 @@ class ServingExecutor:
         self._trace_queue(t, model)
         start = max(t, srv.free_at)
         work = srv.service.service_s(samples)
+        # waterfall: older members waited for the newest one (queue_wait);
+        # the whole batch then waited for the dispatcher/server (batch_delay)
+        t_new = max(self._acct[id(r)]["entry"] for r in batch)
+        for r in batch:
+            a = self._acct[id(r)]
+            a["queue_wait"] += t_new - a["entry"]
+            a["batch_delay"] += start - t_new
+            a["waits"].append((a["entry"], start))
+            a["attempt_start"] = start
+            a["work"] = work
         done = srv.advance(start, work)
         srv.free_at = done
         self.busy_s[model] += work
@@ -461,6 +476,50 @@ class ServingExecutor:
         if self.tracer is not None:
             self._inflight_t0[model] = (start, samples)
         self._push(done, _DONE, (model, batch, self._epoch[model]))
+
+    # ------------------------------------------------------------ waterfall
+    def _finish_waterfall(self, model: str, r, t_done: float,
+                          lat: float) -> None:
+        """Close a completed request's latency waterfall.
+
+        Components telescope over the request's attempts -- queue_wait
+        (waiting for batchmates), batch_delay (dispatcher/server wait),
+        service (busy work), stall_time_mux (time-mux window dead time),
+        dead_fault (aborted in-flight attempts) -- then queue time spent
+        inside redeploy windows is re-attributed to its cause (fault vs
+        autoscale re-solve), and the whole thing is conserved bit-exactly
+        against the measured latency.
+        """
+        a = self._acct.pop(id(r), None)
+        if a is None:
+            return
+        service = a.get("work", 0.0)
+        stall = (t_done - a.get("attempt_start", t_done)) - service
+        comps = {
+            "queue_wait": a["queue_wait"],
+            "batch_delay": a["batch_delay"],
+            "service": service,
+            "stall_time_mux": stall,
+            "dead_fault": a["dead_fault"],
+            "dead_autoscale": 0.0,
+        }
+        for ev in self.redeploys:
+            dur = ev.get("redeploy_s", 0.0)
+            t0 = ev.get("t")
+            if t0 is None or dur <= 0:
+                continue
+            key = ("dead_fault" if ev.get("cause") == "fault"
+                   else "dead_autoscale")
+            for wlo, whi in a["waits"]:
+                ov = min(whi, t0 + dur) - max(wlo, t0)
+                if ov > 0:
+                    comps[key] += ov
+                    take = min(ov, comps["queue_wait"])
+                    comps["queue_wait"] -= take
+                    comps["batch_delay"] -= ov - take
+        wf = conserve_waterfall(comps, lat)
+        wf["total"] = lat
+        self.waterfalls[model].append(wf)
 
     # ------------------------------------------------------- fleet swapping
     def _current_hw(self) -> HardwareModel:
@@ -592,6 +651,11 @@ class ServingExecutor:
             self._epoch[model] += 1        # fences the stale _DONE
             for r in reversed(batch):
                 self.queues[model].appendleft(r)
+                # the aborted attempt's in-flight time is fault dead time;
+                # the request re-enters the queue at the kill
+                a = self._acct[id(r)]
+                a["dead_fault"] += t - a["attempt_start"]
+                a["entry"] = t
             spilled = sum(r.samples for r in batch)
             self.queued_samples[model] += spilled
             self._inflight[model] = None
@@ -743,6 +807,9 @@ class ServingExecutor:
                     self.autoscaler.observe(t, r.model, r.samples)
                 self.queues[r.model].append(r)
                 self.queued_samples[r.model] += r.samples
+                self._acct[id(r)] = {"entry": t, "queue_wait": 0.0,
+                                     "batch_delay": 0.0, "dead_fault": 0.0,
+                                     "waits": []}
                 self._trace_queue(t, r.model)
                 self._try_dispatch(r.model, t)
             elif kind == _TIMER:
@@ -766,6 +833,7 @@ class ServingExecutor:
                     self.latencies[model].append(lat)
                     self.req_samples[model].append(r.samples)
                     self._completions.append((t, model, r.samples, lat))
+                    self._finish_waterfall(model, r, t, lat)
                 self._try_dispatch(model, t)
             elif kind == _CHECK:
                 self._apply_autoscale(t)
@@ -973,6 +1041,7 @@ class ServingExecutor:
                 for m in self.servers
             },
             faults=self._fault_summary(makespan, horizon_s),
+            waterfalls=self.waterfalls,
         )
 
 

@@ -46,9 +46,10 @@ from ...core.hw import HardwareModel
 from ...multimodel.curves import service_law
 from ...obs import current_tracer
 from ..executor import BatchingPolicy
+from ..metrics import conserve_waterfall
 from ..traffic import Request
 from .kv import kv_seq_bytes
-from .metrics import LLMReport, summarize_llm
+from .metrics import LLM_WATERFALL_COMPONENTS, LLMReport, summarize_llm
 from .phases import LLMPlan, PhaseAssignment
 
 INF = float("inf")
@@ -68,6 +69,7 @@ class _Seq:
     kv: float                  # resident state bytes at full context
     t_first: float             # first-token time (prefill completion)
     remaining: int             # decode tokens still to emit
+    acct: dict = field(default_factory=dict)   # waterfall accumulators
 
 
 @dataclass
@@ -96,6 +98,7 @@ class _MState:
     admitted_midbatch: int = 0
     busy_chip_s: float = 0.0
     kv_trace: list = field(default_factory=list)
+    q_trace: list = field(default_factory=list)   # (t, queue depth)
 
 
 class TokenExecutor:
@@ -138,6 +141,7 @@ class TokenExecutor:
         self._arrived: dict[str, int] = {m: 0 for m in self.states}
         self._dropped: dict[str, dict[str, int]] = {m: {} for m in self.states}
         self._completions: dict[str, list] = {m: [] for m in self.states}
+        self.waterfalls: dict[str, list[dict]] = {m: [] for m in self.states}
         self._makespan = 0.0
 
     # ----------------------------------------------------------- plumbing
@@ -160,6 +164,25 @@ class TokenExecutor:
             (ttft, tpot, r.prompt_tokens, r.output_tokens))
         self._makespan = max(self._makespan, t)
 
+    def _finish_waterfall(self, r: Request, comps: dict, t_done: float) -> None:
+        """Close a per-request waterfall, conserved against end-to-end latency."""
+        total = t_done - r.t_arrive
+        wf = conserve_waterfall(comps, total, order=LLM_WATERFALL_COMPONENTS)
+        wf["total"] = total
+        self.waterfalls[r.model].append(wf)
+
+    def _note_queue(self, model: str, ms: _MState, t: float) -> None:
+        depth = len(ms.queue)
+        ms.q_trace.append((t, depth))
+        if self.tracer is not None:
+            self.tracer.counter(f"queue:{model}", t, depth, group="serving")
+
+    def _note_kv(self, model: str, ms: _MState, t: float) -> None:
+        ms.kv_trace.append((t, max(0.0, ms.pool_kv)))
+        if self.tracer is not None:
+            self.tracer.counter(f"kv_bytes/{model}", t,
+                                max(0.0, ms.pool_kv), group="llm")
+
     # ------------------------------------------------------------ arrival
     def _arrive(self, r: Request, t: float) -> None:
         ms = self.states.get(r.model)
@@ -176,6 +199,7 @@ class TokenExecutor:
             self._drop(r, "queue_full")
             return
         ms.queue.append(r)
+        self._note_queue(r.model, ms, t)
         self._schedule(r.model, t)
 
     # --------------------------------------------------------- scheduling
@@ -251,6 +275,7 @@ class TokenExecutor:
         else:
             batch = [ms.queue.popleft() for _ in range(
                 min(ms.p_max, len(ms.queue)))]
+        self._note_queue(model, ms, t)
         eff = sum(max(1, r.prompt_tokens) for r in batch) / max(
             1, self.plan.seq_len)
         dur = (ms.stages_p - 1 + eff) * ms.beat_p
@@ -265,22 +290,32 @@ class TokenExecutor:
         ms.prefill_batches += 1
         if self.tracer is not None:
             self.tracer.complete(f"prefill x{len(batch)}", t0, t,
-                                 group=model, lane="prefill",
+                                 group="llm", lane=f"{model}/prefill",
                                  reqs=len(batch))
         for r in batch:
             ttft = t - r.t_arrive
+            queue_wait = t0 - r.t_arrive
+            prefill = t - t0
             if r.output_tokens <= 1:
                 self._complete(r, ttft, None, t)
+                self._finish_waterfall(
+                    r, {"queue_wait": queue_wait, "prefill": prefill,
+                        "kv_handoff": 0.0, "admission_wait": 0.0,
+                        "decode": 0.0}, t)
                 continue
             seq = _Seq(req=r,
                        kv=kv_seq_bytes(ms.a.cfg,
                                        r.prompt_tokens + r.output_tokens),
                        t_first=t, remaining=r.output_tokens - 1)
+            seq.acct = {"queue_wait": queue_wait, "prefill": prefill,
+                        "kv_handoff": 0.0, "ready": t}
             if ms.coloc or self.plan.handoff_bw <= 0:
                 ms.waiting.append(seq)
             else:
                 delay = kv_seq_bytes(ms.a.cfg, r.prompt_tokens) \
                     / self.plan.handoff_bw
+                seq.acct["kv_handoff"] = delay
+                seq.acct["ready"] = t + delay
                 ms.inflight_hand += 1
                 self._push(t + delay, _HAND, (model, seq))
         self._makespan = max(self._makespan, t)
@@ -303,6 +338,7 @@ class TokenExecutor:
                     ms.pool_kv + ms.waiting[0].kv
                     <= ms.a.kv_capacity_bytes + _EPS):
                 s = ms.waiting.popleft()
+                s.acct["admit"] = t
                 ms.pool.append(s)
                 ms.pool_kv += s.kv
                 admitted += 1
@@ -312,6 +348,7 @@ class TokenExecutor:
                     ms.pool_kv + ms.waiting[0].kv
                     <= ms.a.kv_capacity_bytes + _EPS):
                 s = ms.waiting.popleft()
+                s.acct["admit"] = t
                 ms.pool.append(s)
                 ms.pool_kv += s.kv
                 admitted += 1
@@ -319,10 +356,11 @@ class TokenExecutor:
                 ms.admitted_midbatch += admitted
                 if self.tracer is not None:
                     self.tracer.instant("admit_midbatch", t=t,
-                                        group=ms.a.model, lane="decode",
+                                        group="llm",
+                                        lane=f"{ms.a.model}/decode",
                                         n=admitted)
         if admitted:
-            ms.kv_trace.append((t, ms.pool_kv))
+            self._note_kv(ms.a.model, ms, t)
 
     def _start_decode(self, model: str, ms: _MState, t: float) -> None:
         if not ms.pool:
@@ -352,13 +390,21 @@ class TokenExecutor:
             r = s.req
             tpot = (t - s.t_first) / max(1, r.output_tokens - 1)
             self._complete(r, s.t_first - r.t_arrive, tpot, t)
+            a = s.acct
+            admit = a.get("admit", a.get("ready", t))
+            self._finish_waterfall(
+                r, {"queue_wait": a.get("queue_wait", 0.0),
+                    "prefill": a.get("prefill", 0.0),
+                    "kv_handoff": a.get("kv_handoff", 0.0),
+                    "admission_wait": admit - a.get("ready", admit),
+                    "decode": t - admit}, t)
         if finished:
-            ms.kv_trace.append((t, max(0.0, ms.pool_kv)))
+            self._note_kv(model, ms, t)
         if not ms.pool:
             ms.static_slots = 0
             if self.tracer is not None and ms.run_steps:
                 self.tracer.complete(f"decode x{ms.run_steps}", ms.step_t0,
-                                     t, group=model, lane="decode",
+                                     t, group="llm", lane=f"{model}/decode",
                                      steps=ms.run_steps)
         self._makespan = max(self._makespan, t)
         self._schedule(model, t)
@@ -417,6 +463,8 @@ class TokenExecutor:
             admitted_midbatch={m: ms.admitted_midbatch
                                for m, ms in self.states.items()},
             kv_traces={m: ms.kv_trace for m, ms in self.states.items()},
+            queue_traces={m: ms.q_trace for m, ms in self.states.items()},
+            waterfalls=self.waterfalls,
             kv_capacity={m: ms.a.kv_capacity_bytes
                          for m, ms in self.states.items()},
             busy_chip_s={m: ms.busy_chip_s for m, ms in self.states.items()},

@@ -23,9 +23,18 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from ...obs import MetricsRegistry, TimeSeries
-from ..metrics import percentile
+from ..metrics import aggregate_waterfalls, percentile
 
-__all__ = ["LLMModelMetrics", "LLMReport", "summarize_llm"]
+__all__ = ["LLM_WATERFALL_COMPONENTS", "LLMModelMetrics", "LLMReport",
+           "summarize_llm"]
+
+#: Per-request latency waterfall for token-level serving, in causal order:
+#: arrival -> prefill-batch start -> first token -> decode-eligible ->
+#: pool admission -> last token.  Folding the components left-to-right
+#: reproduces end-to-end latency bit-exactly (single-token requests stop
+#: after ``prefill``).
+LLM_WATERFALL_COMPONENTS = (
+    "queue_wait", "prefill", "kv_handoff", "admission_wait", "decode")
 
 
 @dataclass
@@ -88,6 +97,7 @@ class LLMReport:
     slo_attainment: float = 1.0
     admitted_midbatch: int = 0
     utilization: float = 0.0
+    waterfalls: dict = field(default_factory=dict)  # model -> [per-request]
     meta: dict = field(default_factory=dict)
     metrics: Any = None             # MetricsRegistry
     tracer: Any = None
@@ -107,12 +117,20 @@ class LLMReport:
                 return False
         return True
 
+    def explain(self) -> dict:
+        """Aggregate per-request waterfalls: where does TTFT+decode time go?"""
+        return aggregate_waterfalls(self.waterfalls,
+                                    order=LLM_WATERFALL_COMPONENTS)
+
     def to_json(self) -> dict:
         out = {k: v for k, v in self.__dict__.items()
-               if k not in ("per_model", "meta", "metrics", "tracer")}
+               if k not in ("per_model", "meta", "metrics", "tracer",
+                            "waterfalls")}
         out["conserved"] = self.conserved
         out["per_model"] = {m: mm.to_json() for m, mm in self.per_model.items()}
         out["meta"] = self.meta
+        if self.waterfalls:
+            out["explain"] = self.explain()
         return out
 
     def describe(self) -> list[str]:
@@ -162,13 +180,16 @@ def summarize_llm(
     kv_traces: dict[str, list[tuple[float, float]]],
     kv_capacity: dict[str, float],
     busy_chip_s: dict[str, float],
+    queue_traces: dict[str, list[tuple[float, float]]] | None = None,
+    waterfalls: dict[str, list[dict]] | None = None,
     meta: dict | None = None,
 ) -> LLMReport:
     span = max(makespan_s, 1e-12)
     registry = MetricsRegistry()
     rep = LLMReport(mode=mode, batching=batching, package=package,
                     chips=chips, seed=seed, horizon_s=horizon_s,
-                    makespan_s=makespan_s, meta=meta or {}, metrics=registry)
+                    makespan_s=makespan_s, waterfalls=waterfalls or {},
+                    meta=meta or {}, metrics=registry)
     all_ttft: list[float] = []
     all_tpot: list[float] = []
     good_tokens = 0
@@ -190,6 +211,9 @@ def summarize_llm(
         out_tokens = sum(r[3] for r in recs)
         kv = registry.series[f"kv_bytes/{model}"] = TimeSeries()
         kv.extend(kv_traces.get(model, []))
+        if queue_traces and queue_traces.get(model):
+            qs = registry.series[f"queue_depth/{model}"] = TimeSeries()
+            qs.extend(queue_traces[model])
         registry.histogram(f"ttft_s/{model}").values.extend(ttfts)
         registry.histogram(f"tpot_s/{model}").values.extend(tpots)
         registry.counter(f"llm.admitted_midbatch/{model}").set(

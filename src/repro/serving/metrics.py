@@ -23,9 +23,68 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any
 
+from ..core.costmodel import conserve_components, fold_components
 from ..obs import MetricsRegistry, TimeSeries
 
-__all__ = ["ModelMetrics", "ServingReport", "percentile", "summarize"]
+__all__ = [
+    "WATERFALL_COMPONENTS",
+    "ModelMetrics",
+    "ServingReport",
+    "aggregate_waterfalls",
+    "conserve_waterfall",
+    "percentile",
+    "summarize",
+]
+
+# Latency-waterfall components (Scope Lens).  Per completed request they
+# fold -- in this fixed order -- bit-identically to the measured end-to-end
+# latency (same conservation machinery as the DSE CostBreakdown).
+WATERFALL_COMPONENTS = ("queue_wait", "batch_delay", "service",
+                        "stall_time_mux", "dead_fault", "dead_autoscale")
+
+
+def conserve_waterfall(components: dict, total: float,
+                       order=WATERFALL_COMPONENTS) -> dict:
+    """Waterfall components adjusted to fold bit-identically to ``total``."""
+    return conserve_components(components, total, order=order)
+
+
+def aggregate_waterfalls(waterfalls: dict[str, list[dict]],
+                         order=WATERFALL_COMPONENTS) -> dict:
+    """Aggregate per-request waterfalls into an attribution table.
+
+    Returns per-model and overall rows: request count, mean latency,
+    per-component mean seconds + share of total, the dominant component,
+    and whether every request's components conserved its latency exactly.
+    """
+    def rows(wfs: list[dict]) -> dict:
+        n = len(wfs)
+        sums = dict.fromkeys(order, 0.0)
+        total = 0.0
+        conserved = True
+        for wf in wfs:
+            for k in order:
+                sums[k] += wf.get(k, 0.0)
+            total += wf["total"]
+            if fold_components(wf, order) != wf["total"]:
+                conserved = False
+        comp = {
+            k: {"mean_s": sums[k] / n if n else 0.0,
+                "share": sums[k] / total if total > 0 else 0.0}
+            for k in order
+        }
+        dominant = (max(order, key=lambda k: sums[k]) if n else None)
+        return {"requests": n,
+                "latency_mean_s": total / n if n else 0.0,
+                "components": comp, "dominant": dominant,
+                "conserved": conserved}
+
+    out = {"per_model": {m: rows(wfs) for m, wfs in sorted(waterfalls.items())},
+           "overall": rows([wf for wfs in waterfalls.values() for wf in wfs])}
+    out["conserved"] = (out["overall"]["conserved"]
+                        and all(r["conserved"]
+                                for r in out["per_model"].values()))
+    return out
 
 
 def percentile(sorted_vals: list[float], q: float) -> float:
@@ -112,6 +171,26 @@ class ServingReport:
     # report.tracer is set by Solution.serve(tracer=...)
     metrics: Any = None             # MetricsRegistry
     tracer: Any = None              # Tracer
+    # per-request latency waterfalls: model -> [ {component: s, total: s} ]
+    waterfalls: dict = field(default_factory=dict)
+
+    def explain(self) -> dict:
+        """Latency attribution (Scope Lens): per-request waterfalls
+        aggregated per model and overall, dead time by cause.  Every
+        completed request's components fold bit-identically to its
+        measured latency (``["conserved"]``)."""
+        out = aggregate_waterfalls(self.waterfalls)
+        out["dead_time_s"] = {
+            "fault": sum(wf["dead_fault"] for wfs in self.waterfalls.values()
+                         for wf in wfs),
+            "autoscale": sum(wf["dead_autoscale"]
+                             for wfs in self.waterfalls.values()
+                             for wf in wfs),
+            "time_mux": sum(wf["stall_time_mux"]
+                            for wfs in self.waterfalls.values()
+                            for wf in wfs),
+        }
+        return out
 
     @property
     def conserved(self) -> bool:
@@ -131,9 +210,11 @@ class ServingReport:
         out = {
             k: v for k, v in self.__dict__.items()
             if k not in ("per_model", "placement", "autoscale", "meta",
-                         "metrics", "tracer")
+                         "metrics", "tracer", "waterfalls")
         }
         out["conserved"] = self.conserved
+        if self.waterfalls:
+            out["explain"] = self.explain()
         out["per_model"] = {m: mm.to_json() for m, mm in self.per_model.items()}
         out["placement"] = {
             m: {str(f): len(coords) for f, coords in zones.items()}
@@ -217,13 +298,15 @@ def summarize(
     package_busy_chip_s: float | None = None,
     queued_end: dict[str, tuple[int, int]] | None = None,
     faults: dict | None = None,
+    waterfalls: dict[str, list[dict]] | None = None,
 ) -> ServingReport:
     span = max(makespan_s, 1e-12)
     registry = MetricsRegistry()
     rep = ServingReport(mode=mode, package=package, chips=chips, seed=seed,
                         horizon_s=horizon_s, makespan_s=makespan_s,
                         placement=placement, autoscale=autoscale,
-                        faults=faults, meta=meta or {}, metrics=registry)
+                        faults=faults, meta=meta or {}, metrics=registry,
+                        waterfalls=waterfalls or {})
     all_lat: list[float] = []
     good_total = busy_chip_s = 0.0
     slo_met = slo_reqs = 0

@@ -1,0 +1,319 @@
+"""Scope Lens: cost attribution, latency waterfalls, dashboard rendering.
+
+Two conservation invariants anchor this suite, both *bit-exact* (``==``,
+not approx):
+
+* every :class:`~repro.core.costmodel.CostBreakdown` folds back to the
+  scalar the solver optimized, on the reference and fast engines alike,
+  across region modes, mixed flavors and LM graphs;
+* every completed request's latency waterfall folds back to its
+  end-to-end latency, through faults, redeploys, and mid-batch LLM
+  admission.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro as scope
+from repro.configs import get_smoke_config
+from repro.core.costmodel import (
+    BREAKDOWN_COMPONENTS,
+    CostBreakdown,
+    CostModel,
+    INF,
+    SAME_FLAVOR,
+    conserve_components,
+    fold_components,
+)
+from repro.core.fastcost import FastCostModel
+from repro.core.graph import ClusterAssignment
+from repro.core.hw import mcm_hetero, mcm_table_iii
+from repro.core.workloads import get_cnn
+from repro.core.workloads.lm import lm_graph
+from repro.obs import Tracer, use_tracer
+from repro.serving.metrics import WATERFALL_COMPONENTS
+from repro.serving.llm.metrics import LLM_WATERFALL_COMPONENTS
+
+
+def random_clusters(graph, hw, rng, *, mixed: bool):
+    """A random full-graph pipeline: contiguous clusters, random chips,
+    partitions and (optionally mixed) flavors."""
+    L = len(graph)
+    n_cl = rng.randint(1, min(L, 6))
+    cuts = sorted(rng.sample(range(1, L), n_cl - 1)) if n_cl > 1 else []
+    bounds, cursor = [], 0
+    for c in cuts + [L]:
+        bounds.append((cursor, c))
+        cursor = c
+    flavors = [t.name for t in hw.region_types] or [None]
+    out = []
+    for lo, hi in bounds:
+        span = hi - lo
+        t = rng.randint(0, span)
+        parts = tuple(["WSP"] * t + ["ISP"] * (span - t))
+        ctype = rng.choice(flavors) if mixed else flavors[0]
+        out.append(ClusterAssignment(
+            layer_lo=lo, layer_hi=hi,
+            region_chips=rng.randint(1, max(1, hw.chips // n_cl)),
+            partitions=parts, chip_type=ctype))
+    return tuple(out)
+
+
+class TestConserveHelpers:
+    @given(st.lists(st.floats(min_value=0.0, max_value=1e3), min_size=1,
+                    max_size=5),
+           total=st.floats(min_value=0.0, max_value=1e4))
+    @settings(max_examples=60, deadline=None)
+    def test_residual_fold_is_exact(self, vals, total):
+        names = BREAKDOWN_COMPONENTS[:len(vals)]
+        comps = dict(zip(names, vals))
+        out = conserve_components(comps, total, order=names)
+        assert fold_components(out, names) == total
+
+    def test_inf_total_parks_in_dram(self):
+        comps = dict.fromkeys(BREAKDOWN_COMPONENTS, 1.0)
+        out = conserve_components(comps, INF)
+        assert out["dram"] == INF
+        assert fold_components(out) == INF
+
+    def test_merge_conserves(self):
+        a = CostBreakdown.build({"compute": 1.0, "nop_comm": 0.1,
+                                 "seam": 0.0, "dram": 0.05, "staging": 0.0},
+                                1.15)
+        b = CostBreakdown.build({"compute": 0.4, "nop_comm": 0.7,
+                                 "seam": 0.0, "dram": 0.0, "staging": 0.0},
+                                1.1)
+        m = CostBreakdown.merge([a, b], 2.25)
+        assert m.conserved
+        assert m.bottleneck in BREAKDOWN_COMPONENTS
+
+
+class TestBreakdownConservation:
+    """segment_breakdown folds to segment_time, bit-identically, on both
+    engines -- random pipelines, mixed flavors, CNN and LM graphs."""
+
+    @given(
+        arch=st.sampled_from(
+            ["cnn:alexnet", "cnn:resnet18", "lm:gemma2-9b",
+             "lm:granite-moe-1b-a400m"]),
+        hetero=st.booleans(),
+        seed=st.integers(min_value=0, max_value=10_000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_segment_breakdown_bit_identical(self, arch, hetero, seed):
+        kind, name = arch.split(":")
+        g = (get_cnn(name) if kind == "cnn"
+             else lm_graph(get_smoke_config(name), seq_len=128))
+        hw = mcm_hetero(16) if hetero else mcm_table_iii(16)
+        rng = random.Random(seed)
+        clusters = random_clusters(g, hw, rng, mixed=hetero)
+        ref = CostModel(hw, m_samples=16)
+        fast = FastCostModel(hw, m_samples=16)
+        for cost in (ref, fast):
+            total, _times = cost.segment_time(g, clusters)
+            bd, per_cluster = cost.segment_breakdown(g, clusters)
+            assert bd.total == total
+            assert fold_components(bd.components) == total
+            assert bd.conserved
+            for j, cl in enumerate(clusters):
+                nxt = clusters[j + 1] if j + 1 < len(clusters) else None
+                ct = cost.cluster_time(g, cl, nxt, j == 0, nxt is None)
+                assert fold_components(per_cluster[j].components) == ct
+        # cross-engine: same totals -> identical attribution
+        rbd, _ = ref.segment_breakdown(g, clusters)
+        fbd, _ = fast.segment_breakdown(g, clusters)
+        assert rbd.total == fbd.total
+        assert rbd.components == fbd.components
+
+    def test_nonoverlap_and_literal_pre_variants(self):
+        g = get_cnn("alexnet")
+        hw = mcm_table_iii(16)
+        rng = random.Random(7)
+        clusters = random_clusters(g, hw, rng, mixed=False)
+        for kw in ({"overlap": False}, {"literal_pre": True},
+                   {"overlap": False, "literal_pre": True}):
+            for cost in (CostModel(hw, m_samples=16, **kw),
+                         FastCostModel(hw, m_samples=16, **kw)):
+                bd, _ = cost.segment_breakdown(g, clusters)
+                assert bd.conserved
+
+
+class TestSolutionExplain:
+    @pytest.mark.parametrize("engine", ["fast", "reference"])
+    @pytest.mark.parametrize("mode", ["free", "uniform"])
+    def test_single_model_conserves(self, engine, mode):
+        prob = scope.problem("alexnet", "mcm16", m_samples=8,
+                             engine=engine, mode=mode)
+        sol = scope.solve(prob)
+        ex = sol.explain()
+        assert ex["stages"], "explain produced no stages"
+        for stg in ex["stages"]:
+            assert stg["conserved"], stg
+            assert fold_components(stg["breakdown"]["components"]) == \
+                stg["latency"]
+            assert stg["bound"] in ("compute", "link", "seam", "dram",
+                                    "staging", "kv")
+        assert ex["ranking"] == sorted(
+            ex["ranking"], key=lambda r: -r["latency"])
+
+    def test_multimodel_hetero_quotas_conserve(self):
+        prob = scope.problem("resnet50:2,resnet18:1", "mcm16_hetero",
+                             m_samples=8)
+        sol = scope.solve(prob)
+        ex = sol.explain()
+        assert len(ex["stages"]) == 2
+        for stg in ex["stages"]:
+            assert stg["conserved"], stg
+            assert stg["quota"], "multimodel stages must carry their quota"
+
+    def test_llm_phase_explain(self, llm_sol):
+        ex = llm_sol.explain()
+        labels = [s["label"] for s in ex["stages"]]
+        assert any("prefill" in lab for lab in labels)
+        assert any("decode" in lab for lab in labels)
+        for stg in ex["stages"]:
+            assert stg["conserved"], stg
+
+
+@pytest.fixture(scope="module")
+def llm_sol():
+    cfgs = [get_smoke_config("gemma2-9b")]
+    wl = scope.WorkloadSpec.lm(cfgs, 128)
+    prob = scope.problem(wl, "mcm16", strategy="llm-phase",
+                         output_tokens=32.0, m_samples=8)
+    sol = scope.solve(prob)
+    assert sol.feasible
+    return sol
+
+
+@pytest.fixture(scope="module")
+def serve_sol():
+    prob = scope.problem("resnet50:1,alexnet:1", "mcm16", m_samples=8)
+    sol = scope.solve(prob)
+    assert sol.feasible
+    return sol
+
+
+def _assert_waterfalls_conserve(rep, order):
+    n = sum(len(v) for v in rep.waterfalls.values())
+    assert n == rep.total_completed
+    for wfs in rep.waterfalls.values():
+        for wf in wfs:
+            comps = {k: wf[k] for k in order}
+            assert fold_components(comps, order) == wf["total"]
+            assert all(k in wf for k in order)
+    ex = rep.explain()
+    assert ex["conserved"]
+    return ex
+
+
+class TestServingWaterfalls:
+    @given(seed=st.integers(min_value=0, max_value=1_000))
+    @settings(max_examples=5, deadline=None)
+    def test_every_request_conserves(self, seed):
+        prob = scope.problem("alexnet", "mcm16", m_samples=8)
+        sol = scope.solve(prob)
+        rep = sol.serve(n_requests=120, seed=seed)
+        _assert_waterfalls_conserve(rep, WATERFALL_COMPONENTS)
+
+    def test_chaos_serve_attributes_dead_time(self, serve_sol):
+        rep = serve_sol.serve(n_requests=300, seed=11,
+                              faults="chip:0,0@20%:60%")
+        ex = _assert_waterfalls_conserve(rep, WATERFALL_COMPONENTS)
+        assert set(ex["dead_time_s"]) == {"fault", "autoscale", "time_mux"}
+        assert ex["overall"]["requests"] == rep.total_completed
+        # every component surfaces with a share; shares sum to ~1
+        shares = sum(c["share"]
+                     for c in ex["overall"]["components"].values())
+        assert shares == pytest.approx(1.0, abs=1e-9)
+
+    def test_report_json_carries_explain(self, serve_sol):
+        rep = serve_sol.serve(n_requests=80, seed=2)
+        js = rep.to_json()
+        assert "waterfalls" not in js
+        assert js["explain"]["conserved"]
+
+
+class TestLLMWaterfalls:
+    def test_token_requests_conserve_with_midbatch(self, llm_sol):
+        rep = llm_sol.serve(n_requests=250, seed=3)
+        assert rep.admitted_midbatch > 0, \
+            "fixture must exercise mid-batch admission"
+        ex = _assert_waterfalls_conserve(rep, LLM_WATERFALL_COMPONENTS)
+        assert set(ex["overall"]["components"]) == \
+            set(LLM_WATERFALL_COMPONENTS)
+
+    def test_static_batching_conserves(self, llm_sol):
+        rep = llm_sol.serve(n_requests=150, seed=5, static_batching=True)
+        _assert_waterfalls_conserve(rep, LLM_WATERFALL_COMPONENTS)
+
+    def test_queue_and_kv_series_exported(self, llm_sol):
+        tr = Tracer(clock=lambda: 0.0)
+        rep = llm_sol.serve(n_requests=100, seed=4, tracer=tr)
+        snap = rep.metrics.snapshot()
+        series = snap.get("series", {})
+        assert any(k.startswith("kv_bytes/") for k in series)
+        assert any(k.startswith("queue_depth/") for k in series)
+        counters = {e[1] for e in tr.events if e[0] == "C"}
+        assert any(n.startswith("kv_bytes/") for n in counters)
+        assert any(n.startswith("queue:") for n in counters)
+        llm_lanes = {e[3] for e in tr.events
+                     if e[0] == "X" and e[2] == "llm"}
+        assert any(lane.endswith("/prefill") for lane in llm_lanes)
+        assert any(lane.endswith("/decode") for lane in llm_lanes)
+
+
+class TestTraceSummaryCounters:
+    def test_engine_and_cache_counters_surface(self):
+        tr = Tracer()
+        prob = scope.problem("alexnet", "mcm16", m_samples=8, trace=tr)
+        cache = scope.SolutionCache()
+        with use_tracer(tr):
+            cache.solve(prob)
+            cache.solve(prob)          # second solve: a whole-solution hit
+        text = tr.summary()
+        for needle in ("engine.batch_evals", "engine.batch_rows",
+                       "solve_cache.hits", "solve_cache.misses"):
+            assert needle in text, f"{needle} missing from:\n{text}"
+        snap = tr.metrics.snapshot()["counters"]
+        assert snap["solve_cache.hits"] == 1
+        assert snap["solve_cache.misses"] == 1
+
+
+class TestDashboard:
+    def test_render_from_serving_run(self, serve_sol):
+        from repro.obs import render_dashboard, validate_chrome_trace
+
+        tr = Tracer(clock=lambda: 0.0)
+        rep = serve_sol.serve(n_requests=150, seed=9,
+                              faults="chip:0,0@20%:50%", tracer=tr)
+        html = render_dashboard(
+            title="test", solution_explain=serve_sol.explain(),
+            serving_explain=rep.explain(), tracer=tr,
+            meta={"case": "chaos"})
+        assert html.startswith("<!doctype html>")
+        assert "DSE cost attribution" in html
+        assert "fault-window" in html
+        assert "Counter tracks" in html
+        # waterfall table renders one row per model plus the overall row
+        for model in rep.per_model:
+            assert f"<td class='l'>{model}</td>" in html
+        assert "<td class='l'>overall</td>" in html
+        assert "<script" not in html and "http" not in html.replace(
+            "http://www.w3.org", "")
+        # deterministic: same inputs -> bytewise identical page
+        again = render_dashboard(
+            title="test", solution_explain=serve_sol.explain(),
+            serving_explain=rep.explain(), tracer=tr,
+            meta={"case": "chaos"})
+        assert html == again
+        assert not validate_chrome_trace(tr.to_chrome(),
+                                         expect_fault_events=True)
+
+    def test_render_empty(self):
+        from repro.obs import render_dashboard
+
+        html = render_dashboard(title="empty")
+        assert "nothing to show" in html
